@@ -1,0 +1,25 @@
+"""Shared benchmark plumbing: CSV emission + timed execution."""
+from __future__ import annotations
+
+import time
+
+import jax
+
+
+def emit(name: str, **fields):
+    """One CSV-ish record per line: benchmark,key=value,..."""
+    kv = ",".join(f"{k}={v}" for k, v in fields.items())
+    print(f"{name},{kv}", flush=True)
+
+
+def timed(fn, *args, warmup: int = 1, iters: int = 3):
+    """Median wall time of ``fn(*args)`` with block_until_ready."""
+    for _ in range(warmup):
+        jax.block_until_ready(fn(*args))
+    times = []
+    for _ in range(iters):
+        t0 = time.perf_counter()
+        jax.block_until_ready(fn(*args))
+        times.append(time.perf_counter() - t0)
+    times.sort()
+    return times[len(times) // 2]

@@ -1,0 +1,51 @@
+"""Aggregate the dry-run artifacts (experiments/dryrun/*.json) into the
+§Dry-run / §Roofline tables.  Pure post-processing — no compilation."""
+from __future__ import annotations
+
+import glob
+import json
+import os
+
+from benchmarks.common import emit
+
+
+def load(out_dir: str = "experiments/dryrun"):
+    recs = []
+    for f in sorted(glob.glob(os.path.join(out_dir, "*.json"))):
+        recs.append(json.load(open(f)))
+    return recs
+
+
+def run(out_dir: str = "experiments/dryrun", mesh: str = "16x16"):
+    recs = load(out_dir)
+    if not recs:
+        emit("roofline", error="no dry-run artifacts; run "
+             "`python -m repro.launch.dryrun` first")
+        return
+    n_pass = n_fail = n_skip = 0
+    for r in recs:
+        if r.get("mesh") != mesh:
+            continue
+        tag = f"{r['arch']}/{r['shape']}"
+        if r.get("skip"):
+            n_skip += 1
+            emit("roofline", cell=tag, status="SKIP")
+            continue
+        if not r.get("ok"):
+            n_fail += 1
+            emit("roofline", cell=tag, status="FAIL")
+            continue
+        n_pass += 1
+        emit("roofline", cell=tag, status="PASS",
+             bottleneck=r["bottleneck"],
+             t_comp=f"{r['t_comp_s']:.3e}", t_mem=f"{r['t_mem_s']:.3e}",
+             t_coll=f"{r['t_coll_s']:.3e}",
+             useful_ratio=f"{r['useful_flop_ratio']:.3f}",
+             roofline_frac=f"{r['roofline_fraction']:.4f}",
+             bytes_per_dev=f"{r['bytes_per_device']:.3e}")
+    emit("roofline_summary", mesh=mesh, passed=n_pass, failed=n_fail,
+         skipped=n_skip)
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,133 @@
+"""Roofline dry-run for the paper's own solver at pod scale (the third
+§Perf hillclimb cell — the one most representative of the paper's
+technique).
+
+Lowers `parallel_rgs_solve` (distributed asynchronous randomized block-GS,
+shard_map over 256 workers) against ShapeDtypeStruct stand-ins on the
+production 16x16 mesh, in a subprocess with 512 placeholder devices, and
+extracts the same three roofline terms as the model cells.
+
+Problem: reference-scenario n=131072, 64 RHS, coordinate blocks of 128 —
+each local step is a (128, n) x (n, 64) MXU matmul against the stale
+replica; one all-gather of the slab deltas per round (the paper's periodic
+synchronization).
+"""
+from __future__ import annotations
+
+import json
+import os
+import subprocess
+import sys
+import textwrap
+
+from benchmarks.common import emit
+
+_SCRIPT = textwrap.dedent("""
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+import json
+import jax, jax.numpy as jnp
+from repro.core.parallel_rgs import (parallel_rgs_solve, parallel_rgs_banded,
+                                     parallel_rgs_halo)
+from repro import roofline as RL
+
+n = %(n)d; k = %(k)d; rounds = %(rounds)d; local_steps = %(local)d
+block = %(block)d; bands = %(bands)d; layout = "%(layout)s"
+dtype = jnp.%(dtype)s  # metrics flag: %(metrics)s
+mesh = jax.make_mesh((256,), ("workers",),
+                     axis_types=(jax.sharding.AxisType.Auto,))
+sds = jax.ShapeDtypeStruct
+b = sds((n, k), dtype)
+x0 = sds((n, k), dtype)
+xs = sds((n, k), dtype)
+key = jax.eval_shape(lambda: jax.random.key(0))
+slab = n // 256
+
+if layout == "dense":
+    A = sds((n, n), dtype)
+    def run(A, b, x0, xs, key):
+        return parallel_rgs_solve(A, b, x0, xs, key=key, mesh=mesh,
+                                  rounds=rounds, local_steps=local_steps,
+                                  block=block, beta=0.9, unroll=True)
+    # each step: (block x n x k) stale matmul + (block x slab x k) correction
+    mf = 256 * rounds * local_steps * 2 * block * k * (n + slab)
+elif layout == "banded":
+    nb = n // block
+    A = sds((nb, 2 * bands + 1, block, block), dtype)
+    def run(A, b, x0, xs, key):
+        return parallel_rgs_banded(A, b, x0, xs, key=key, mesh=mesh,
+                                   rounds=rounds, local_steps=local_steps,
+                                   block=block, bands=bands, beta=0.9,
+                                   unroll=True, with_metrics=%(metrics)s)
+    # each step touches (2*bands+1) block x block tiles
+    mf = 256 * rounds * local_steps * 2 * (2 * bands + 1) * block * block * k
+else:  # halo
+    nb = n // block
+    A = sds((nb, 2 * bands + 1, block, block), dtype)
+    def run(A, b, x0, xs, key):
+        return parallel_rgs_halo(A, b, x0, key=key, mesh=mesh,
+                                 rounds=rounds, local_steps=local_steps,
+                                 block=block, bands=bands, beta=0.9,
+                                 unroll=True, with_metrics=%(metrics)s)
+    mf = 256 * rounds * local_steps * 2 * (2 * bands + 1) * block * block * k
+
+lowered = jax.jit(run).lower(A, b, x0, xs, key)
+compiled = lowered.compile()
+cost = compiled.cost_analysis() or {}
+hlo = compiled.as_text()
+rl = RL.analyze(cost, hlo, chips=256, model_flops=mf)
+mem = compiled.memory_analysis()
+print(json.dumps(dict(
+    flops=rl.flops, bytes=rl.mem_bytes, wire=rl.coll.wire_bytes,
+    t_comp=rl.t_comp, t_mem=rl.t_mem, t_coll=rl.t_coll,
+    bottleneck=rl.bottleneck, model_flops=mf,
+    useful=rl.useful_ratio, frac=rl.roofline_fraction,
+    coll={k2: v for k2, v in rl.coll.by_kind.items()},
+    args=getattr(mem, "argument_size_in_bytes", None),
+    temp=getattr(mem, "temp_size_in_bytes", None))))
+""")
+
+
+def run(n: int = 131072, k: int = 64, rounds: int = 4, local: int = 8,
+        block: int = 128, tag: str = "baseline", layout: str = "dense",
+        bands: int = 2, dtype: str = "float32", metrics: bool = True):
+    env = dict(os.environ)
+    env["PYTHONPATH"] = "src"
+    env.pop("JAX_PLATFORMS", None)
+    out = subprocess.run(
+        [sys.executable, "-c",
+         _SCRIPT % dict(n=n, k=k, rounds=rounds, local=local, block=block,
+                        bands=bands, layout=layout, dtype=dtype,
+                        metrics=metrics)],
+        env=env, capture_output=True, text=True, timeout=1800,
+        cwd=os.path.dirname(os.path.dirname(os.path.abspath(__file__))))
+    if out.returncode != 0:
+        emit("solver_roofline", tag=tag, error=out.stderr.strip()[-400:])
+        return None
+    rec = json.loads(out.stdout.strip().splitlines()[-1])
+    emit("solver_roofline", tag=tag, layout=layout, dtype=dtype, n=n, rhs=k,
+         block=block, bands=bands, rounds=rounds, local_steps=local,
+         t_comp=f"{rec['t_comp']:.3e}", t_mem=f"{rec['t_mem']:.3e}",
+         t_coll=f"{rec['t_coll']:.3e}", bottleneck=rec["bottleneck"],
+         useful_ratio=f"{rec['useful']:.3f}",
+         roofline_frac=f"{rec['frac']:.4f}")
+    return rec
+
+
+if __name__ == "__main__":
+    import argparse
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--n", type=int, default=131072)
+    ap.add_argument("--rhs", type=int, default=64)
+    ap.add_argument("--rounds", type=int, default=4)
+    ap.add_argument("--local", type=int, default=8)
+    ap.add_argument("--block", type=int, default=128)
+    ap.add_argument("--bands", type=int, default=2)
+    ap.add_argument("--layout", default="dense",
+                    choices=["dense", "banded", "halo"])
+    ap.add_argument("--dtype", default="float32")
+    ap.add_argument("--no-metrics", action="store_true")
+    ap.add_argument("--tag", default="baseline")
+    a = ap.parse_args()
+    run(a.n, a.rhs, a.rounds, a.local, a.block, a.tag, a.layout, a.bands,
+        a.dtype, metrics=not a.no_metrics)

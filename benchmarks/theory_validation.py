@@ -1,0 +1,84 @@
+"""Theorem validation (the paper's analytical contribution, measured):
+
+* Leventhal-Lewis rate (eq. 2) — measured E_m vs the bound;
+* Thm 4.1(a) epoch factor under bounded-delay consistent reads;
+* Sec. 5 step-size theory — nu_tau(beta) maximized at beta~;
+* Thm 6.1 inconsistent-read convergence at omega-optimal beta.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.common import emit
+from repro.core import (a_norm_sq, async_rgs_solve, random_sparse_spd,
+                        rgs_solve, theory)
+
+
+def run(n: int = 512, seeds: int = 8):
+    prob = random_sparse_spd(n, row_nnz=8, offdiag=0.9, n_rhs=1, seed=0)
+    x0 = jnp.zeros_like(prob.x_star)
+    e0 = float(a_norm_sq(prob.A, -prob.x_star).max())
+    lam_min, lam_max = float(prob.lam_min), float(prob.lam_max)
+    kappa = float(prob.kappa)
+    rho = float(theory.rho(prob.A))
+
+    # (1) synchronous rate vs eq. (2)
+    m = 4 * n
+    errs = []
+    for s in range(seeds):
+        r = rgs_solve(prob.A, prob.b, x0, prob.x_star, key=jax.random.key(s),
+                      num_iters=m, record_every=m)
+        errs.append(float(r.err_sq[-1].max()))
+    bound = float(theory.ll_bound(e0, m, lam_min, n))
+    emit("theory_ll_rate", m=m, measured_mean=f"{np.mean(errs):.3e}",
+         bound=f"{bound:.3e}", satisfied=int(np.mean(errs) <= 1.5 * bound))
+
+    # (2) Thm 4.1(a) epoch factor
+    tau = 8
+    T0 = theory.epoch_len(lam_max, n)
+    m = max(T0, n)
+    factor = theory.thm41a_factor(rho, tau, kappa)
+    errs = []
+    for s in range(seeds):
+        r = async_rgs_solve(prob.A, prob.b, x0, prob.x_star,
+                            key=jax.random.key(10 + s),
+                            delay_key=jax.random.key(50 + s),
+                            num_iters=m, tau=tau, delay_mode="uniform")
+        errs.append(float(r.err_sq[-1].max()))
+    emit("theory_thm41a", tau=tau, epoch_iters=m, nu_tau=f"{theory.nu_tau(rho, tau):.4f}",
+         factor_bound=f"{factor:.5f}", measured=f"{np.mean(errs)/e0:.5f}",
+         satisfied=int(np.mean(errs) / e0 <= factor * 1.2))
+
+    # (3) step-size sweep around beta~ (Sec. 5)
+    beta_star = theory.beta_opt(rho, tau)
+    m = 4 * n
+    rows = []
+    for beta in (0.25 * beta_star, 0.5 * beta_star, beta_star,
+                 min(1.0, 1.5 * beta_star)):
+        r = async_rgs_solve(prob.A, prob.b, x0, prob.x_star,
+                            key=jax.random.key(3), delay_key=jax.random.key(4),
+                            num_iters=m, tau=tau, beta=float(beta),
+                            delay_mode="fixed")
+        rows.append((float(beta), float(r.err_sq[-1].max()) / e0))
+        emit("theory_stepsize", beta=f"{beta:.3f}",
+             nu=f"{theory.nu_tau(rho, tau, float(beta)):.4f}",
+             err_ratio=f"{rows[-1][1]:.3e}")
+    emit("theory_stepsize", beta_opt=f"{beta_star:.3f}",
+         best_measured_beta=f"{min(rows, key=lambda t: t[1])[0]:.3f}")
+
+    # (4) Thm 6.1 inconsistent reads
+    rho2 = float(theory.rho2(prob.A))
+    beta_i = theory.beta_opt_inconsistent(rho2, tau)
+    r = async_rgs_solve(prob.A, prob.b, x0, prob.x_star, key=jax.random.key(5),
+                        delay_key=jax.random.key(6), num_iters=8 * n, tau=tau,
+                        beta=beta_i, read_model="inconsistent")
+    emit("theory_thm61", tau=tau, beta=f"{beta_i:.3f}",
+         omega=f"{theory.omega_tau(rho2, tau, beta_i):.4f}",
+         err_ratio_8n=f"{float(r.err_sq[-1].max())/e0:.3e}",
+         converged=int(float(r.err_sq[-1].max()) < 0.05 * e0))
+
+
+if __name__ == "__main__":
+    run()

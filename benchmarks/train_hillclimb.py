@@ -1,0 +1,84 @@
+"""§Perf hillclimb harness for train/serve cells: lower one (arch x shape)
+cell on the single-pod mesh with RunConfig overrides, and report the three
+roofline terms.  Each invocation is one hypothesis->measure iteration;
+EXPERIMENTS.md §Perf quotes the emitted lines.
+
+    python -m benchmarks.train_hillclimb --arch qwen2-1.5b --shape train_4k \\
+        --set remat=dots --tag q1_remat_dots
+"""
+from __future__ import annotations
+
+import json
+import os
+import subprocess
+import sys
+import textwrap
+
+from benchmarks.common import emit
+
+_SCRIPT = textwrap.dedent("""
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+import json
+from repro.launch import dryrun as DR
+from repro.configs import get_run_config
+from repro.launch.mesh import make_production_mesh
+
+overrides = json.loads(%(overrides)r)
+orig = DR.get_run_config
+def conv(cur, v):
+    if isinstance(cur, bool):
+        return str(v).lower() in ("1", "true", "yes")
+    return type(cur)(v)
+def patched(arch):
+    base = orig(arch)
+    return base.with_(**{k: conv(getattr(base, k), v)
+                         for k, v in overrides.items()})
+DR.get_run_config = patched
+mesh = make_production_mesh(multi_pod=False)
+rec = DR.lower_cell(%(arch)r, %(shape)r, mesh, multi_pod=False, unroll=True)
+rec.pop("memory", None)
+rec.pop("collectives", None)
+print("HILLCLIMB_JSON:" + json.dumps(rec, default=str))
+""")
+
+
+def run(arch: str, shape: str, overrides: dict, tag: str):
+    env = dict(os.environ)
+    env["PYTHONPATH"] = "src"
+    env.pop("JAX_PLATFORMS", None)
+    out = subprocess.run(
+        [sys.executable, "-c",
+         _SCRIPT % dict(arch=arch, shape=shape,
+                        overrides=json.dumps(overrides))],
+        env=env, capture_output=True, text=True, timeout=3000,
+        cwd=os.path.dirname(os.path.dirname(os.path.abspath(__file__))))
+    line = [l for l in out.stdout.splitlines() if l.startswith("HILLCLIMB_JSON:")]
+    if out.returncode != 0 or not line:
+        emit("train_hillclimb", tag=tag, error=(out.stderr or out.stdout)[-400:])
+        return None
+    rec = json.loads(line[-1][len("HILLCLIMB_JSON:"):])
+    emit("train_hillclimb", tag=tag, arch=arch, shape=shape,
+         overrides=json.dumps(overrides).replace(",", ";"),
+         t_comp=f"{rec['t_comp_s']:.3e}", t_mem=f"{rec['t_mem_s']:.3e}",
+         t_coll=f"{rec['t_coll_s']:.3e}", bottleneck=rec["bottleneck"],
+         useful_ratio=f"{rec['useful_flop_ratio']:.3f}",
+         roofline_frac=f"{rec['roofline_fraction']:.4f}",
+         compile_s=rec["compile_s"])
+    return rec
+
+
+if __name__ == "__main__":
+    import argparse
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--shape", default="train_4k")
+    ap.add_argument("--set", action="append", default=[],
+                    help="key=value RunConfig override (repeatable)")
+    ap.add_argument("--tag", default="iter")
+    a = ap.parse_args()
+    ov = {}
+    for kv in a.set:
+        k, v = kv.split("=", 1)
+        ov[k] = v
+    run(a.arch, a.shape, ov, a.tag)

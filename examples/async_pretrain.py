@@ -1,0 +1,58 @@
+"""The paper's technique at trainer level, demonstrated: bounded-staleness
+asynchronous data parallelism with the Sec. 5 step-size damping.
+
+Three runs on the same data/seed:
+  A. synchronous baseline,
+  B. async tau=4 WITH beta~ damping (the paper's recipe),
+  C. async tau=4 WITHOUT damping (what naive Hogwild-style delay does).
+
+Expected outcome (mirrors Thm 4.1/Sec 5): B tracks A closely; C is noisier /
+can lag — the damping is what makes scheduled staleness safe.
+
+    PYTHONPATH=src python examples/async_pretrain.py --steps 120
+"""
+import argparse
+
+from repro.configs import get_run_config, get_smoke_config
+from repro.optim import staleness_beta
+from repro.train import steps as ST
+from repro.train.trainer import Trainer, make_data
+
+
+def run_one(tag, tau, damping, steps, lr=3e-3):
+    cfg = get_smoke_config("qwen2-1.5b")
+    rcfg = get_run_config("qwen2-1.5b").with_(
+        total_steps=steps, warmup_steps=5, learning_rate=lr,
+        loss_chunk=32, q_chunk=32, async_tau=tau, staleness_damping=damping)
+    part = ST.make_partitioner(None, 8)
+    data = make_data(cfg, seq_len=64, global_batch=8)
+    tr = Trainer(cfg=cfg, rcfg=rcfg, part=part, data=data,
+                 log_every=max(1, steps // 6), log_fn=lambda *_: None)
+    hist = tr.run(steps)
+    losses = [h["loss"] for h in hist]
+    print(f"  {tag:34s} loss {losses[0]:.3f} -> {losses[-1]:.3f}")
+    return losses
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--steps", type=int, default=120)
+    ap.add_argument("--tau", type=int, default=4)
+    args = ap.parse_args()
+    print(f"[async_pretrain] tau={args.tau}, "
+          f"beta~ = 1/(1+tau) = {staleness_beta(args.tau):.3f}")
+    a = run_one("A sync", 0, True, args.steps)
+    b = run_one(f"B async tau={args.tau} + beta~ damping", args.tau, True,
+                args.steps)
+    c = run_one(f"C async tau={args.tau} no damping", args.tau, False,
+                args.steps)
+    gap_b = b[-1] - a[-1]
+    gap_c = c[-1] - a[-1]
+    print(f"[async_pretrain] final-loss gap vs sync: damped {gap_b:+.3f}, "
+          f"undamped {gap_c:+.3f}")
+    print("the damped run should track the synchronous baseline closely "
+          "(paper Sec. 5: the step size buys convergence at any tau)")
+
+
+if __name__ == "__main__":
+    main()

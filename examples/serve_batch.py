@@ -1,0 +1,24 @@
+"""Batched serving example: prefill a batch of prompts, decode greedily with
+ring-buffer KV caches — the code path the decode_32k / long_500k dry-run
+cells compile at pod scale.
+
+    PYTHONPATH=src python examples/serve_batch.py --arch gemma3-1b --new 24
+"""
+import argparse
+
+from repro.launch.serve import main as serve_main
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="gemma3-1b")
+    ap.add_argument("--batch", type=int, default=4)
+    ap.add_argument("--prompt-len", type=int, default=48)
+    ap.add_argument("--new", type=int, default=16)
+    args = ap.parse_args()
+    serve_main(["--arch", args.arch, "--batch", str(args.batch),
+                "--prompt-len", str(args.prompt_len), "--new", str(args.new)])
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,16 @@
+from repro.configs.base import ModelConfig, MoEConfig, RunConfig, SHAPES, ShapeConfig
+from repro.configs.registry import (
+    ARCH_NAMES,
+    Cell,
+    all_cells,
+    cell,
+    get_config,
+    get_run_config,
+    get_smoke_config,
+)
+
+__all__ = [
+    "ARCH_NAMES", "Cell", "ModelConfig", "MoEConfig", "RunConfig", "SHAPES",
+    "ShapeConfig", "all_cells", "cell", "get_config", "get_run_config",
+    "get_smoke_config",
+]

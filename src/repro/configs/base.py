@@ -1,0 +1,141 @@
+"""Model / run configuration dataclasses and the architecture registry."""
+from __future__ import annotations
+
+import dataclasses
+from dataclasses import dataclass, field
+from typing import Optional
+
+
+@dataclass(frozen=True)
+class MoEConfig:
+    num_experts: int
+    top_k: int
+    d_ff: int                  # per-expert hidden width
+    every: int = 1             # MoE FFN on layers where (idx % every == every-1)
+    shared_expert: bool = False
+    capacity_factor: float = 1.25
+    router: str = "softmax"    # softmax (top-k renormalized) | sigmoid (llama4)
+
+
+@dataclass(frozen=True)
+class ModelConfig:
+    name: str
+    family: str                # dense | ssm | hybrid | moe | audio | vlm
+    num_layers: int
+    d_model: int
+    num_heads: int
+    num_kv_heads: int
+    head_dim: int
+    d_ff: int                  # dense-FFN hidden (0 => blocks carry their own)
+    vocab_size: int
+
+    # Per-layer block kinds, cycled over num_layers (remainder layers are the
+    # pattern prefix, unrolled after the scan).  Kinds:
+    #   attn | local | chunked | nope | mamba | mlstm | slstm
+    layer_pattern: tuple[str, ...] = ("attn",)
+
+    # attention details
+    window: int = 0            # sliding window for 'local'
+    chunk_size: int = 0        # chunk width for 'chunked'
+    rope: bool = True          # False -> absolute sinusoidal at the embedding
+    rope_theta: float = 1e4
+    rope_theta_global: float = 0.0   # gemma3 dual-theta ('attn' layers)
+    qkv_bias: bool = False
+    qk_norm: bool = False
+
+    # block / MLP style
+    mlp: str = "swiglu"        # swiglu | gelu
+    norm: str = "rmsnorm"      # rmsnorm | layernorm
+    post_norm: bool = False    # gemma3: extra norms after attn/mlp
+    tie_embeddings: bool = False
+    embed_scale: bool = False  # gemma3: x *= sqrt(d_model) after embedding
+    moe: Optional[MoEConfig] = None
+    moe_group: int = 512       # token-group size for capacity dispatch
+
+    # ssm (mamba) block
+    ssm_state: int = 16
+    ssm_conv: int = 4
+    ssm_expand: int = 2
+
+    # xlstm block
+    xlstm_proj_factor: float = 2.0
+
+    # encoder-decoder (whisper)
+    encoder_layers: int = 0
+    encoder_len: int = 0       # frontend sequence length (e.g. 1500 frames)
+    max_position: int = 0      # learned absolute positions if > 0
+
+    # modality frontend stub: none | audio | vision
+    frontend: str = "none"
+    frontend_len: int = 0      # patches per image (vlm)
+
+    dtype: str = "bfloat16"
+
+    # Whether the arch supports the long_500k cell (sub-quadratic decode).
+    subquadratic: bool = False
+
+    def kinds(self) -> tuple[str, ...]:
+        """Explicit per-layer block kinds of length num_layers."""
+        p = self.layer_pattern
+        reps = -(-self.num_layers // len(p))
+        return (p * reps)[: self.num_layers]
+
+    @property
+    def scan_periods(self) -> int:
+        return self.num_layers // len(self.layer_pattern)
+
+    @property
+    def tail_kinds(self) -> tuple[str, ...]:
+        return self.kinds()[self.scan_periods * len(self.layer_pattern):]
+
+    def with_(self, **kw) -> "ModelConfig":
+        return dataclasses.replace(self, **kw)
+
+
+@dataclass(frozen=True)
+class ShapeConfig:
+    """One cell of the (arch x shape) matrix."""
+    name: str
+    seq_len: int
+    global_batch: int
+    kind: str                  # train | prefill | decode
+
+
+SHAPES: dict[str, ShapeConfig] = {
+    "train_4k": ShapeConfig("train_4k", 4_096, 256, "train"),
+    "prefill_32k": ShapeConfig("prefill_32k", 32_768, 32, "prefill"),
+    "decode_32k": ShapeConfig("decode_32k", 32_768, 128, "decode"),
+    "long_500k": ShapeConfig("long_500k", 524_288, 1, "decode"),
+}
+
+
+@dataclass(frozen=True)
+class RunConfig:
+    """Training-run hyperparameters (launcher-level)."""
+    learning_rate: float = 3e-4
+    warmup_steps: int = 100
+    total_steps: int = 10_000
+    weight_decay: float = 0.1
+    beta1: float = 0.9
+    beta2: float = 0.95
+    grad_clip: float = 1.0
+    optimizer: str = "adamw"         # adamw | adamw_bf16 | adafactor
+    fsdp: bool = True                # ZeRO-style weight sharding over "data"
+    pure_dp: bool = False            # fold the model axis into data (no TP):
+                                     # right-sizes parallelism for <~3B models
+    microbatches: int = 1            # gradient-accumulation splits
+    remat: str = "block"             # none | block
+    q_chunk: int = 1024              # attention query-chunk (flash-style)
+    loss_chunk: int = 512            # xent chunk (bounds the logits slab)
+    scan_unroll: bool = False        # unroll scan-over-layers (dry-run cost fidelity)
+    moe_loss_weight: float = 0.01
+    # The paper's technique at trainer level: bounded-staleness async DP.
+    async_tau: int = 0               # 0 = synchronous
+    staleness_damping: bool = True   # apply beta~ = 1/(1+2*rho_hat*tau) LR scale
+    grad_compression: str = "none"   # none | int8
+    checkpoint_every: int = 0
+    checkpoint_dir: str = ""
+    seed: int = 0
+
+    def with_(self, **kw) -> "RunConfig":
+        return dataclasses.replace(self, **kw)

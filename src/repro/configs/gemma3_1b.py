@@ -1,0 +1,37 @@
+"""gemma3-1b [dense] — 26L d1152 4H (kv=1, head_dim 256) ff6912 vocab 262144.
+
+5:1 local(1024-window):global attention, dual RoPE theta (10k local / 1M
+global), qk-norm, post-norms, tied + scaled embeddings.
+[hf:google/gemma-3-1b-pt; unverified]
+"""
+from repro.configs.base import ModelConfig, RunConfig
+
+CONFIG = ModelConfig(
+    name="gemma3-1b",
+    family="dense",
+    num_layers=26,
+    d_model=1152,
+    num_heads=4,
+    num_kv_heads=1,
+    head_dim=256,
+    d_ff=6912,
+    vocab_size=262144,
+    layer_pattern=("local", "local", "local", "local", "local", "attn"),
+    window=1024,
+    rope_theta=10_000.0,
+    rope_theta_global=1_000_000.0,
+    qk_norm=True,
+    post_norm=True,
+    mlp="swiglu",
+    norm="rmsnorm",
+    tie_embeddings=True,
+    embed_scale=True,
+    subquadratic=True,    # 5:1 local; global layers decode via sharded LSE merge
+)
+
+RUN = RunConfig(optimizer="adamw", learning_rate=3e-4)
+
+SMOKE = CONFIG.with_(
+    num_layers=8, d_model=96, num_heads=2, num_kv_heads=1, head_dim=32,
+    d_ff=256, vocab_size=512, window=16, dtype="float32",
+)

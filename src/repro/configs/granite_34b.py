@@ -1,0 +1,31 @@
+"""granite-34b [dense] — 88L d6144 48H (MQA kv=1) ff24576 vocab 49152.
+
+Llama-architecture code model (GQA degenerate to MQA), full attention.
+[arXiv:2405.04324; hf]
+"""
+from repro.configs.base import ModelConfig, RunConfig
+
+CONFIG = ModelConfig(
+    name="granite-34b",
+    family="dense",
+    num_layers=88,
+    d_model=6144,
+    num_heads=48,
+    num_kv_heads=1,
+    head_dim=128,
+    d_ff=24576,
+    vocab_size=49152,
+    layer_pattern=("attn",),
+    rope_theta=10_000.0,
+    mlp="swiglu",
+    norm="rmsnorm",
+    tie_embeddings=True,
+    subquadratic=False,   # pure full attention -> long_500k skipped (DESIGN.md)
+)
+
+RUN = RunConfig(optimizer="adafactor", learning_rate=1.5e-4)
+
+SMOKE = CONFIG.with_(
+    num_layers=4, d_model=128, num_heads=4, num_kv_heads=1, head_dim=32,
+    d_ff=384, vocab_size=512, dtype="float32",
+)

@@ -1,0 +1,40 @@
+"""jamba-v0.1-52b [hybrid] — 32L d4096 32H (GQA kv=8) ff14336 vocab 65536,
+MoE 16e top-2.
+
+Mamba + attention 1:7 interleave (one attention layer per 8-layer period),
+MoE on every 2nd layer (published Jamba block structure); Mamba d_state 16,
+d_conv 4, expand 2.  Mamba state is O(1) -> runs long_500k.
+[arXiv:2403.19887; hf]
+"""
+from repro.configs.base import ModelConfig, MoEConfig, RunConfig
+
+CONFIG = ModelConfig(
+    name="jamba-v0.1-52b",
+    family="hybrid",
+    num_layers=32,
+    d_model=4096,
+    num_heads=32,
+    num_kv_heads=8,
+    head_dim=128,
+    d_ff=14336,
+    vocab_size=65536,
+    layer_pattern=("mamba", "mamba", "mamba", "attn",
+                   "mamba", "mamba", "mamba", "mamba"),
+    moe=MoEConfig(num_experts=16, top_k=2, d_ff=14336, every=2),
+    rope=False,            # Jamba uses no positional encoding (Mamba carries order)
+    ssm_state=16,
+    ssm_conv=4,
+    ssm_expand=2,
+    mlp="swiglu",
+    norm="rmsnorm",
+    subquadratic=True,
+)
+
+RUN = RunConfig(optimizer="adafactor", learning_rate=1.5e-4)
+
+SMOKE = CONFIG.with_(
+    num_layers=8, d_model=64, num_heads=2, num_kv_heads=1, head_dim=32,
+    d_ff=128, vocab_size=512,
+    moe=MoEConfig(num_experts=4, top_k=2, d_ff=128, every=2, capacity_factor=8.0),
+    ssm_state=4, dtype="float32",
+)

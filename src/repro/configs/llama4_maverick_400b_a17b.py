@@ -1,0 +1,40 @@
+"""llama4-maverick-400b-a17b [moe] — 48L d5120 40H (GQA kv=8) ff8192
+vocab 202048, MoE 128e top-1 + shared expert, MoE every 2nd layer.
+
+Same attention layout as scout (chunked 3:1 NoPE-global).  128 experts on
+alternating layers + dense layers in between ≈ 400B total / ~17B active.
+Optimizer = Adafactor with bf16 momentum (AdamW fp32 state would exceed the
+16 GB/chip pod budget — DESIGN.md §5).
+[hf:meta-llama/Llama-4-Scout-17B-16E (family); unverified]
+"""
+from repro.configs.base import ModelConfig, MoEConfig, RunConfig
+
+CONFIG = ModelConfig(
+    name="llama4-maverick-400b-a17b",
+    family="moe",
+    num_layers=48,
+    d_model=5120,
+    num_heads=40,
+    num_kv_heads=8,
+    head_dim=128,
+    d_ff=8192,
+    vocab_size=202048,
+    layer_pattern=("chunked", "chunked", "chunked", "nope"),
+    chunk_size=8192,
+    moe=MoEConfig(num_experts=128, top_k=1, d_ff=8192, every=2,
+                  shared_expert=True, router="sigmoid"),
+    rope_theta=500_000.0,
+    mlp="swiglu",
+    norm="rmsnorm",
+    subquadratic=True,
+)
+
+RUN = RunConfig(optimizer="adafactor", learning_rate=1.5e-4)
+
+SMOKE = CONFIG.with_(
+    num_layers=4, d_model=64, num_heads=2, num_kv_heads=1, head_dim=32,
+    d_ff=128, vocab_size=512, chunk_size=32,
+    moe=MoEConfig(num_experts=8, top_k=1, d_ff=128, every=2,
+                  shared_expert=True, router="sigmoid", capacity_factor=8.0),
+    dtype="float32",
+)

@@ -1,0 +1,40 @@
+"""llama4-scout-17b-a16e [moe] — 48L d5120 40H (GQA kv=8) ff8192
+vocab 202048, MoE 16e top-1 + shared expert, sigmoid router.
+
+Chunked local attention (8192-token chunks) on 3/4 of layers, NoPE global on
+every 4th — global layers decode against a sequence-sharded KV cache, so the
+arch runs long_500k (DESIGN.md §4).  Early-fusion vision tower is out of
+backbone scope (text cells only).
+[hf:meta-llama/Llama-4-Scout-17B-16E; unverified]
+"""
+from repro.configs.base import ModelConfig, MoEConfig, RunConfig
+
+CONFIG = ModelConfig(
+    name="llama4-scout-17b-a16e",
+    family="moe",
+    num_layers=48,
+    d_model=5120,
+    num_heads=40,
+    num_kv_heads=8,
+    head_dim=128,
+    d_ff=8192,
+    vocab_size=202048,
+    layer_pattern=("chunked", "chunked", "chunked", "nope"),
+    chunk_size=8192,
+    moe=MoEConfig(num_experts=16, top_k=1, d_ff=8192, every=1,
+                  shared_expert=True, router="sigmoid"),
+    rope_theta=500_000.0,
+    mlp="swiglu",
+    norm="rmsnorm",
+    subquadratic=True,
+)
+
+RUN = RunConfig(optimizer="adafactor", learning_rate=2e-4)
+
+SMOKE = CONFIG.with_(
+    num_layers=4, d_model=64, num_heads=2, num_kv_heads=1, head_dim=32,
+    d_ff=128, vocab_size=512, chunk_size=32,
+    moe=MoEConfig(num_experts=4, top_k=1, d_ff=128, every=1,
+                  shared_expert=True, router="sigmoid", capacity_factor=8.0),
+    dtype="float32",
+)

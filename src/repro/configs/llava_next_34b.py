@@ -1,0 +1,36 @@
+"""llava-next-34b [vlm] — 60L d7168 56H (GQA kv=8) ff20480 vocab 64000.
+
+Yi-34B-style decoder backbone; anyres vision tiling is a STUB:
+``input_specs()`` provides (B, 2880, d) precomputed patch embeddings
+(24x24 x 5 tiles) spliced over the first positions of the sequence; patch
+positions carry no LM target.  56 heads are not divisible by the 16-wide
+model axis -> sequence-parallel attention (DESIGN.md §5).
+[hf:llava-hf/llava-v1.6-mistral-7b-hf (family); unverified]
+"""
+from repro.configs.base import ModelConfig, RunConfig
+
+CONFIG = ModelConfig(
+    name="llava-next-34b",
+    family="vlm",
+    num_layers=60,
+    d_model=7168,
+    num_heads=56,
+    num_kv_heads=8,
+    head_dim=128,
+    d_ff=20480,
+    vocab_size=64000,
+    layer_pattern=("attn",),
+    rope_theta=5_000_000.0,
+    mlp="swiglu",
+    norm="rmsnorm",
+    frontend="vision",
+    frontend_len=2880,
+    subquadratic=False,
+)
+
+RUN = RunConfig(optimizer="adafactor", learning_rate=1.5e-4)
+
+SMOKE = CONFIG.with_(
+    num_layers=4, d_model=64, num_heads=2, num_kv_heads=1, head_dim=32,
+    d_ff=128, vocab_size=512, frontend_len=16, dtype="float32",
+)

@@ -1,0 +1,32 @@
+"""qwen2-1.5b [dense] — 28L d1536 12H (GQA kv=2) ff8960 vocab 151936.
+
+GQA with QKV bias, tied embeddings, RoPE theta 1e6.
+[arXiv:2407.10671; hf]
+"""
+from repro.configs.base import ModelConfig, RunConfig
+
+CONFIG = ModelConfig(
+    name="qwen2-1.5b",
+    family="dense",
+    num_layers=28,
+    d_model=1536,
+    num_heads=12,
+    num_kv_heads=2,
+    head_dim=128,
+    d_ff=8960,
+    vocab_size=151936,
+    layer_pattern=("attn",),
+    rope_theta=1_000_000.0,
+    qkv_bias=True,
+    mlp="swiglu",
+    norm="rmsnorm",
+    tie_embeddings=True,
+    subquadratic=False,
+)
+
+RUN = RunConfig(optimizer="adamw", learning_rate=3e-4)
+
+SMOKE = CONFIG.with_(
+    num_layers=4, d_model=96, num_heads=3, num_kv_heads=1, head_dim=32,
+    d_ff=256, vocab_size=512, dtype="float32",
+)

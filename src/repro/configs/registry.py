@@ -1,0 +1,66 @@
+"""Architecture registry: ``--arch <id>`` -> (ModelConfig, RunConfig, smoke).
+
+Also owns the (arch x shape) cell matrix with per-cell applicability
+(DESIGN.md §4: long_500k runs only for sub-quadratic archs; every assigned
+arch has a decoder, so decode shapes always run).
+"""
+from __future__ import annotations
+
+import importlib
+from typing import NamedTuple, Optional
+
+from repro.configs.base import ModelConfig, RunConfig, SHAPES, ShapeConfig
+
+_MODULES = {
+    "gemma3-1b": "gemma3_1b",
+    "granite-34b": "granite_34b",
+    "starcoder2-15b": "starcoder2_15b",
+    "qwen2-1.5b": "qwen2_1_5b",
+    "xlstm-125m": "xlstm_125m",
+    "jamba-v0.1-52b": "jamba_v0_1_52b",
+    "whisper-small": "whisper_small",
+    "llama4-scout-17b-a16e": "llama4_scout_17b_a16e",
+    "llama4-maverick-400b-a17b": "llama4_maverick_400b_a17b",
+    "llava-next-34b": "llava_next_34b",
+}
+
+ARCH_NAMES = tuple(_MODULES)
+
+
+def _module(name: str):
+    if name not in _MODULES:
+        raise KeyError(f"unknown arch {name!r}; choose from {ARCH_NAMES}")
+    return importlib.import_module(f"repro.configs.{_MODULES[name]}")
+
+
+def get_config(name: str) -> ModelConfig:
+    return _module(name).CONFIG
+
+
+def get_run_config(name: str) -> RunConfig:
+    return _module(name).RUN
+
+
+def get_smoke_config(name: str) -> ModelConfig:
+    return _module(name).SMOKE
+
+
+class Cell(NamedTuple):
+    arch: str
+    shape: ShapeConfig
+    runnable: bool
+    skip_reason: Optional[str]
+
+
+def cell(arch: str, shape_name: str) -> Cell:
+    cfg = get_config(arch)
+    shape = SHAPES[shape_name]
+    if shape_name == "long_500k" and not cfg.subquadratic:
+        return Cell(arch, shape, False,
+                    "pure full attention — no sub-quadratic mechanism "
+                    "(DESIGN.md §4 long-context table)")
+    return Cell(arch, shape, True, None)
+
+
+def all_cells() -> list[Cell]:
+    return [cell(a, s) for a in ARCH_NAMES for s in SHAPES]

@@ -1,0 +1,31 @@
+"""starcoder2-15b [dense] — 40L d6144 48H (GQA kv=4) ff24576 vocab 49152.
+
+GQA + RoPE, non-gated GeLU MLP with biases, LayerNorm (the published arch).
+[arXiv:2402.19173; hf]
+"""
+from repro.configs.base import ModelConfig, RunConfig
+
+CONFIG = ModelConfig(
+    name="starcoder2-15b",
+    family="dense",
+    num_layers=40,
+    d_model=6144,
+    num_heads=48,
+    num_kv_heads=4,
+    head_dim=128,
+    d_ff=24576,
+    vocab_size=49152,
+    layer_pattern=("attn",),
+    rope_theta=100_000.0,
+    qkv_bias=True,
+    mlp="gelu",
+    norm="layernorm",
+    subquadratic=False,   # published config is full attention -> skip long_500k
+)
+
+RUN = RunConfig(optimizer="adafactor", learning_rate=2e-4)
+
+SMOKE = CONFIG.with_(
+    num_layers=4, d_model=128, num_heads=4, num_kv_heads=2, head_dim=32,
+    d_ff=384, vocab_size=512, dtype="float32",
+)

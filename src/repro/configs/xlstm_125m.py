@@ -1,0 +1,34 @@
+"""xlstm-125m [ssm] — 12L d768 4H ff0 vocab 50304; sLSTM + mLSTM blocks.
+
+Block pattern mLSTM:sLSTM = 3:1 with sLSTM at layers [2, 6, 10]
+(xLSTM[7:1]-style mostly-mLSTM recipe scaled to 12 layers — DESIGN.md §4).
+Blocks carry their own projections (d_ff = 0).  Recurrent state is O(1) in
+sequence length -> the arch runs the long_500k cell.
+[arXiv:2405.04517; unverified]
+"""
+from repro.configs.base import ModelConfig, RunConfig
+
+CONFIG = ModelConfig(
+    name="xlstm-125m",
+    family="ssm",
+    num_layers=12,
+    d_model=768,
+    num_heads=4,
+    num_kv_heads=4,
+    head_dim=192,
+    d_ff=0,
+    vocab_size=50304,
+    layer_pattern=("mlstm", "mlstm", "slstm", "mlstm"),
+    xlstm_proj_factor=2.0,
+    mlp="swiglu",
+    norm="rmsnorm",
+    tie_embeddings=True,
+    subquadratic=True,
+)
+
+RUN = RunConfig(optimizer="adamw", learning_rate=6e-4)
+
+SMOKE = CONFIG.with_(
+    num_layers=4, d_model=64, num_heads=2, num_kv_heads=2, head_dim=32,
+    vocab_size=512, dtype="float32",
+)

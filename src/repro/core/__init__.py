@@ -1,0 +1,50 @@
+"""repro.core — the paper's contribution: randomized (asynchronous) linear
+solvers for SPD systems with provable rates, plus the supporting theory."""
+
+from repro.core.spd import (
+    SPDProblem,
+    a_norm_sq,
+    block_banded_spd,
+    dense_spd,
+    ell_from_dense,
+    laplacian_spd,
+    random_sparse_spd,
+    to_unit_diagonal,
+)
+from repro.core.rgs import SolveResult, block_gs_solve, rgs_general, rgs_solve
+from repro.core.async_rgs import async_rgs_solve, iteration_identity_gap
+from repro.core.parallel_rgs import (
+    ParallelSolveResult,
+    effective_tau,
+    parallel_rgs_banded,
+    parallel_rgs_halo,
+    parallel_rgs_solve,
+)
+from repro.core.cg import cg_solve, fcg_solve, make_rgs_preconditioner
+from repro.core import theory
+
+__all__ = [
+    "SPDProblem",
+    "SolveResult",
+    "ParallelSolveResult",
+    "a_norm_sq",
+    "async_rgs_solve",
+    "block_banded_spd",
+    "block_gs_solve",
+    "cg_solve",
+    "dense_spd",
+    "effective_tau",
+    "ell_from_dense",
+    "fcg_solve",
+    "iteration_identity_gap",
+    "laplacian_spd",
+    "make_rgs_preconditioner",
+    "parallel_rgs_banded",
+    "parallel_rgs_halo",
+    "parallel_rgs_solve",
+    "random_sparse_spd",
+    "rgs_general",
+    "rgs_solve",
+    "theory",
+    "to_unit_diagonal",
+]

@@ -1,0 +1,108 @@
+"""Conjugate Gradients (the paper's baseline, Sec. 8) and flexible CG
+preconditioned by randomized Gauss-Seidel sweeps (the paper's proposed
+future-work path, Sec. 8/9).
+
+Multi-RHS throughout: b, x are (n, k) and every scalar of textbook CG
+becomes a (k,) vector (the paper solves 51 systems with a shared A).
+"""
+from __future__ import annotations
+
+import functools
+from typing import Callable
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import spd
+from repro.core.rgs import SolveResult, _record
+
+
+@functools.partial(jax.jit, static_argnames=("num_iters",))
+def cg_solve(
+    A: jax.Array,
+    b: jax.Array,
+    x0: jax.Array,
+    x_star: jax.Array,
+    *,
+    num_iters: int,
+) -> SolveResult:
+    r0 = b - A @ x0
+
+    def step(carry, _):
+        x, r, p, rs = carry
+        Ap = A @ p
+        # 0/0 guards: once a column converges to machine zero, freeze it.
+        live = rs > 1e-30
+        alpha = jnp.where(live, rs / jnp.maximum(
+            jnp.einsum("nk,nk->k", p, Ap), 1e-30), 0.0)
+        x = x + alpha * p
+        r = r - alpha * Ap
+        rs_new = jnp.einsum("nk,nk->k", r, r)
+        p = r + jnp.where(live, rs_new / jnp.maximum(rs, 1e-30), 0.0) * p
+        err = _record(A, b, x, x_star)
+        return (x, r, p, rs_new), err
+
+    carry = (x0, r0, r0, jnp.einsum("nk,nk->k", r0, r0))
+    carry, (errs, resids) = jax.lax.scan(step, carry, None, length=num_iters)
+    return SolveResult(x=carry[0], err_sq=errs, resid=resids,
+                       iters=1 + jnp.arange(num_iters))
+
+
+def make_rgs_preconditioner(A: jax.Array, *, sweeps: int, block: int, beta: float, seed: int = 7):
+    """M^{-1} r ~= `sweeps` randomized block-GS sweeps on A z = r from z0=0.
+
+    The preconditioner is a *changing* linear operator (fresh random blocks
+    per application) — precisely why flexible CG is required (Sec. 8).
+    """
+    n = A.shape[0]
+    nb = n // block
+    counter = {"i": 0}
+
+    def apply(r: jax.Array) -> jax.Array:
+        key = jax.random.key(seed + counter["i"])
+        counter["i"] += 1
+        blocks = jax.random.randint(key, (sweeps * nb,), 0, nb)
+
+        def step(z, bi):
+            rows = bi * block + jnp.arange(block)
+            g = r[rows] - A[rows] @ z
+            return z.at[rows].add(beta * g), None
+
+        z, _ = jax.lax.scan(step, jnp.zeros_like(r), blocks)
+        return z
+
+    return apply
+
+
+def fcg_solve(
+    A: jax.Array,
+    b: jax.Array,
+    x0: jax.Array,
+    x_star: jax.Array,
+    *,
+    precond: Callable[[jax.Array], jax.Array],
+    num_iters: int,
+) -> SolveResult:
+    """Flexible CG (Notay's FCG(1)): beta via the Polak-Ribiere-like form
+    beta = (z_{i+1}, r_{i+1} - r_i) / (z_i, r_i), robust to a preconditioner
+    that changes between iterations."""
+    x, r = x0, b - A @ x0
+    z = precond(r)
+    p = z
+    zr = jnp.einsum("nk,nk->k", z, r)
+    errs, resids = [], []
+    for _ in range(num_iters):
+        Ap = A @ p
+        alpha = zr / jnp.einsum("nk,nk->k", p, Ap)
+        x = x + alpha * p
+        r_new = r - alpha * Ap
+        z = precond(r_new)
+        zr_new = jnp.einsum("nk,nk->k", z, r_new)
+        beta = jnp.einsum("nk,nk->k", z, r_new - r) / zr
+        p = z + beta * p
+        r, zr = r_new, zr_new
+        e, rr = _record(A, b, x, x_star)
+        errs.append(e)
+        resids.append(rr)
+    return SolveResult(x=x, err_sq=jnp.stack(errs), resid=jnp.stack(resids),
+                       iters=1 + jnp.arange(num_iters))

@@ -1,0 +1,127 @@
+"""Synchronous Randomized Gauss-Seidel (Leventhal & Lewis), the paper's §2.2.
+
+Iteration (1):  pick d_j = e^{(r)} with r ~ U{1..n};
+                gamma_j = (b - A x_j)_r;   x_{j+1} = x_j + beta * gamma_j e^{(r)}.
+
+Multi-RHS: x and b are (n, k); the same random direction is used for all k
+columns, exactly as in the paper's experiments (51 RHS solved together).
+
+Also implements the general non-unit-diagonal iteration (3) used by the
+rescaling-equivalence property test.
+"""
+from __future__ import annotations
+
+import functools
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import spd
+
+
+class SolveResult(NamedTuple):
+    x: jax.Array           # (n, k) final iterate
+    err_sq: jax.Array      # (records, k) ||x_m - x*||_A^2 at each record point
+    resid: jax.Array       # (records, k) ||b - A x_m||_2 at each record point
+    iters: jax.Array       # (records,) iteration index of each record
+
+
+def _record(A, b, x, x_star):
+    e = x - x_star
+    return spd.a_norm_sq(A, e), jnp.linalg.norm(b - A @ x, axis=0)
+
+
+@functools.partial(jax.jit, static_argnames=("num_iters", "record_every"))
+def rgs_solve(
+    A: jax.Array,
+    b: jax.Array,
+    x0: jax.Array,
+    x_star: jax.Array,
+    *,
+    key: jax.Array,
+    num_iters: int,
+    beta: float = 1.0,
+    record_every: int = 0,
+) -> SolveResult:
+    """Run ``num_iters`` randomized GS iterations; record error every
+    ``record_every`` iterations (0 -> only at the end)."""
+    n = A.shape[0]
+    rec = record_every or num_iters
+    assert num_iters % rec == 0
+    coords = jax.random.randint(key, (num_iters,), 0, n)
+
+    def step(x, r):
+        gamma = b[r] - A[r] @ x          # (k,)
+        return x.at[r].add(beta * gamma), None
+
+    def chunk(x, cs):
+        x, _ = jax.lax.scan(step, x, cs)
+        return x, _record(A, b, x, x_star)
+
+    x, (errs, resids) = jax.lax.scan(chunk, x0, coords.reshape(-1, rec))
+    iters = (1 + jnp.arange(num_iters // rec)) * rec
+    return SolveResult(x=x, err_sq=errs, resid=resids, iters=iters)
+
+
+@functools.partial(jax.jit, static_argnames=("num_iters",))
+def rgs_general(
+    B: jax.Array,
+    z: jax.Array,
+    y0: jax.Array,
+    *,
+    coords: jax.Array,
+    beta: float = 1.0,
+    num_iters: int,
+) -> jax.Array:
+    """Non-unit-diagonal iteration (3):
+    gamma~ = (z - B y)_r / B_rr ; y_r += beta * gamma~.  Directions are given
+    explicitly (``coords``) so the equivalence test can share them with the
+    unit-diagonal run."""
+    del num_iters
+
+    def step(y, r):
+        gamma = (z[r] - B[r] @ y) / B[r, r]
+        return y.at[r].add(beta * gamma), None
+
+    y, _ = jax.lax.scan(step, y0, coords)
+    return y
+
+
+@functools.partial(jax.jit, static_argnames=("num_sweeps", "block"))
+def block_gs_solve(
+    A: jax.Array,
+    b: jax.Array,
+    x0: jax.Array,
+    x_star: jax.Array,
+    *,
+    key: jax.Array,
+    num_sweeps: int,
+    block: int,
+    beta: float = 1.0,
+) -> SolveResult:
+    """Randomized *block* GS — the TPU-adapted granularity (DESIGN.md §2).
+
+    Each step picks a random aligned block of ``block`` coordinates and
+    applies a damped block-Jacobi update x_B += beta * (b - A x)_B.  One
+    sweep = n/block steps.  This is the pure-jnp semantic twin of the Pallas
+    kernel in repro.kernels.block_gs.
+    """
+    n = A.shape[0]
+    nb = n // block
+    steps = num_sweeps * nb
+    blocks = jax.random.randint(key, (steps,), 0, nb)
+
+    def step(x, bi):
+        rows = bi * block + jnp.arange(block)
+        Ab = A[rows]                      # (block, n)
+        gamma = b[rows] - Ab @ x          # (block, k)
+        return x.at[rows].add(beta * gamma), None
+
+    def sweep(x, bs):
+        x, _ = jax.lax.scan(step, x, bs)
+        return x, _record(A, b, x, x_star)
+
+    x, (errs, resids) = jax.lax.scan(sweep, x0, blocks.reshape(num_sweeps, nb))
+    return SolveResult(x=x, err_sq=errs, resid=resids,
+                       iters=(1 + jnp.arange(num_sweeps)) * nb)

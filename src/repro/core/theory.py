@@ -1,0 +1,133 @@
+"""Convergence-rate theory of the paper, as executable formulas.
+
+Everything the theorems need: rho, rho_2, eigenvalue extremes (exact for
+small n, Lanczos for large), the rate factors nu_tau(beta) / omega_tau(beta)
+/ chi, the optimal step size beta~ = 1/(1+2 rho tau), and bound curves that
+the tests check measured error against.
+"""
+from __future__ import annotations
+
+import functools
+import math
+
+import jax
+import jax.numpy as jnp
+
+
+def rho(A: jax.Array) -> jax.Array:
+    """rho = max_l (1/n) sum_r |A_lr|   (Thm 4.1)."""
+    n = A.shape[0]
+    return jnp.max(jnp.sum(jnp.abs(A), axis=1)) / n
+
+
+def rho2(A: jax.Array) -> jax.Array:
+    """rho_2 = max_l (1/n) sum_r A_lr^2   (Thm 6.1)."""
+    n = A.shape[0]
+    return jnp.max(jnp.sum(A * A, axis=1)) / n
+
+
+def block_rho(A: jax.Array, block: int) -> jax.Array:
+    """Block generalization of rho for the TPU-adapted block iteration:
+    rho_B = max_L (1/n_B) sum_R ||A_{L,R}||_1-ish, computed as the max over
+    block-rows of the mean absolute block-coupling.  Reduces to rho when
+    block == 1."""
+    n = A.shape[0]
+    nb = n // block
+    Ab = jnp.abs(A).reshape(nb, block, nb, block).sum(axis=(1, 3)) / block
+    return jnp.max(jnp.sum(Ab, axis=1)) / nb
+
+
+def extreme_eigs_dense(A: jax.Array) -> tuple[jax.Array, jax.Array]:
+    ev = jnp.linalg.eigvalsh(A)
+    return ev[0], ev[-1]
+
+
+@functools.partial(jax.jit, static_argnames=("iters",))
+def lanczos_extreme_eigs(A: jax.Array, key: jax.Array, iters: int = 64):
+    """Lanczos estimate of (lam_min, lam_max) for large A (no full eigh).
+
+    Full reorthogonalization (iters is small); returns Ritz extremes.
+    """
+    n = A.shape[0]
+    v0 = jax.random.normal(key, (n,), A.dtype)
+    v0 = v0 / jnp.linalg.norm(v0)
+    V = jnp.zeros((iters + 1, n), A.dtype).at[0].set(v0)
+    alphas = jnp.zeros((iters,), A.dtype)
+    betas = jnp.zeros((iters,), A.dtype)
+
+    def body(i, carry):
+        V, alphas, betas = carry
+        v = V[i]
+        w = A @ v
+        alpha = v @ w
+        w = w - alpha * v - jnp.where(i > 0, betas[i - 1], 0.0) * V[i - 1]
+        # full reorthogonalization
+        w = w - (V[: iters + 1].T @ (V[: iters + 1] @ w))
+        beta = jnp.linalg.norm(w)
+        V = V.at[i + 1].set(jnp.where(beta > 1e-12, w / beta, 0.0))
+        return V, alphas.at[i].set(alpha), betas.at[i].set(beta)
+
+    V, alphas, betas = jax.lax.fori_loop(0, iters, body, (V, alphas, betas))
+    T = jnp.diag(alphas) + jnp.diag(betas[:-1], 1) + jnp.diag(betas[:-1], -1)
+    ev = jnp.linalg.eigvalsh(T)
+    return ev[0], ev[-1]
+
+
+# ---------------------------------------------------------------------------
+# Rate factors
+# ---------------------------------------------------------------------------
+
+def nu_tau(rho_val: float, tau: int, beta: float = 1.0) -> float:
+    """Sec. 5: nu_tau(beta) = 2 beta - beta^2 - 2 rho tau beta^2.
+    beta = 1 recovers Thm 4.1's nu_tau = 1 - 2 rho tau."""
+    return 2 * beta - beta**2 - 2 * rho_val * tau * beta**2
+
+
+def beta_opt(rho_val: float, tau: int) -> float:
+    """Optimal step size beta~ = 1/(1 + 2 rho tau); nu_tau(beta~) = beta~."""
+    return 1.0 / (1.0 + 2.0 * rho_val * tau)
+
+
+def omega_tau(rho2_val: float, tau: int, beta: float) -> float:
+    """Thm 6.1: omega_tau(beta) = beta (1 - beta - rho_2 tau^2 beta / 2)."""
+    return beta * (1.0 - beta - rho2_val * tau**2 * beta / 2.0)
+
+
+def beta_opt_inconsistent(rho2_val: float, tau: int) -> float:
+    """argmax_beta omega_tau(beta) = 1 / (2 + rho_2 tau^2)."""
+    return 1.0 / (2.0 + rho2_val * tau**2)
+
+
+def chi_consistent(rho_val: float, tau: int, lam_max: float, n: int, beta: float = 1.0) -> float:
+    dmax = 1.0 - lam_max / n
+    return rho_val * tau**2 * beta**2 * lam_max * dmax ** (-2 * tau) / n
+
+
+def epoch_len(lam_max: float, n: int) -> int:
+    """T0 = ceil(log(1/2) / log(1 - lam_max/n)) ~= 0.693 n / lam_max."""
+    return int(math.ceil(math.log(0.5) / math.log(1.0 - lam_max / n)))
+
+
+# ---------------------------------------------------------------------------
+# Bound curves (what the tests check against)
+# ---------------------------------------------------------------------------
+
+def ll_bound(e0, m, lam_min: float, n: int):
+    """Leventhal-Lewis synchronous bound (2): E_m <= (1 - lam_min/n)^m E_0."""
+    return (1.0 - lam_min / n) ** m * e0
+
+
+def thm41a_factor(rho_val, tau, kappa, beta=1.0):
+    """Thm 4.1(a)/Sec.5(a): E_m <= (1 - nu_tau(beta)/(2 kappa)) E_0 for
+    m >= ~0.693 n / lam_max, assuming nu_tau > 0."""
+    return 1.0 - nu_tau(rho_val, tau, beta) / (2.0 * kappa)
+
+
+def thm61a_factor(rho2_val, tau, kappa, beta):
+    """Thm 6.1(a): E_m <= (1 - omega_tau(beta)/kappa) E_0."""
+    return 1.0 - omega_tau(rho2_val, tau, beta) / kappa
+
+
+def iters_to_eps(n: int, lam_min: float, eps: float, delta: float) -> int:
+    """Sec. 2.2 Markov bound: m >= (n/lam_min) ln(1/(delta eps^2))."""
+    return int(math.ceil(n / lam_min * math.log(1.0 / (delta * eps**2))))

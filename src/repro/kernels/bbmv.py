@@ -1,0 +1,80 @@
+"""Pallas TPU kernel: block-banded SPD matvec / multi-RHS matmul.
+
+The TPU-native sparse format argued for in DESIGN.md: nonzeros live in
+dense (block x block) tiles on a band, stored contiguously as
+``A_bands[nb, 2*bands+1, block, block]``.  HBM->VMEM streams are fully
+contiguous (no gathers — contrast kernels/spmv_ell.py, the GPU-style port),
+and every tile feeds the MXU directly.  Used for residual computation
+``r = b - A x`` in CG / convergence monitoring on the blocked path.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _kernel(a_ref, x_ref, o_ref, *, bands: int, block: int, nb: int):
+    i = pl.program_id(0)
+    acc = jnp.zeros(o_ref.shape, jnp.float32)
+    for d in range(2 * bands + 1):
+        j = i + d - bands
+        valid = jnp.logical_and(j >= 0, j < nb)
+        jc = jnp.clip(j, 0, nb - 1)
+        xs = x_ref[pl.ds(jc * block, block), :]
+        tile = a_ref[0, d]
+        acc += jnp.where(
+            valid,
+            jnp.dot(tile, xs, preferred_element_type=jnp.float32),
+            0.0,
+        )
+    o_ref[...] = acc.astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("bands", "block", "interpret"))
+def bbmv(
+    A_bands: jax.Array,
+    x: jax.Array,
+    *,
+    bands: int,
+    block: int,
+    interpret: bool = False,
+) -> jax.Array:
+    """y = A @ x for block-banded A.
+
+    A_bands: (nb, 2*bands+1, block, block); x: (n, k) with n = nb*block.
+    """
+    nb = A_bands.shape[0]
+    n, k = x.shape
+    assert n == nb * block and A_bands.shape[1] == 2 * bands + 1
+
+    return pl.pallas_call(
+        functools.partial(_kernel, bands=bands, block=block, nb=nb),
+        grid=(nb,),
+        in_specs=[
+            pl.BlockSpec(
+                (1, 2 * bands + 1, block, block), lambda i: (i, 0, 0, 0)
+            ),
+            pl.BlockSpec((n, k), lambda i: (0, 0)),
+        ],
+        out_specs=pl.BlockSpec((block, k), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((n, k), x.dtype),
+        interpret=interpret,
+    )(A_bands, x)
+
+
+def dense_to_bands(A: jax.Array, *, bands: int, block: int) -> jax.Array:
+    """Pack the block band of dense A into (nb, 2*bands+1, block, block)."""
+    n = A.shape[0]
+    nb = n // block
+    At = A.reshape(nb, block, nb, block).transpose(0, 2, 1, 3)  # (nb, nb, bl, bl)
+    out = jnp.zeros((nb, 2 * bands + 1, block, block), A.dtype)
+    for d in range(2 * bands + 1):
+        off = d - bands
+        for i in range(nb):
+            j = i + off
+            if 0 <= j < nb:
+                out = out.at[i, d].set(At[i, j])
+    return out

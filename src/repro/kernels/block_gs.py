@@ -1,0 +1,89 @@
+"""Pallas TPU kernel: randomized *block* Gauss-Seidel sweep.
+
+TPU adaptation of the paper's Algorithm 1 (DESIGN.md §2).  The scalar
+coordinate update `x_r += (b - A x)_r` cannot feed a 128x128 systolic array,
+so the unit of randomization becomes an aligned coordinate block:
+
+    for s in range(steps):           # grid dimension, sequential on TPU
+        B = blocks[s]                # random block id (scalar-prefetched)
+        g = b[B] - A[B, :] @ x       # (block, k) MXU matmul, A row-panel
+                                     # streamed HBM->VMEM by the pipeline
+        x[B] += beta * g             # in-VMEM update, visible to step s+1
+
+`x` lives entirely in VMEM across the sweep (BlockSpec maps the whole array
+at every grid step => no re-fetch), so successive steps see each other's
+updates exactly like the shared-memory algorithm — within one core the
+"asynchrony" disappears and we recover *sequential* randomized block GS,
+which is the best case (tau = 0) of the paper's analysis.  Asynchrony
+reappears across devices (see repro.core.parallel_rgs).
+
+Multi-RHS (the paper's 51-column B, padded to a lane-friendly k) turns the
+inner product into a matmul: arithmetic intensity rises from O(1) to O(k)
+FLOPs/byte on the A-panel stream, which is what moves this kernel from
+HBM-bound toward the MXU roofline.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _kernel(idx_ref, a_ref, b_ref, x_ref, o_ref, *, block: int, beta: float):
+    s = pl.program_id(0)
+
+    @pl.when(s == 0)
+    def _init():
+        o_ref[...] = x_ref[...]
+
+    blk = idx_ref[s]
+    g = b_ref[...] - jnp.dot(
+        a_ref[...], o_ref[...], preferred_element_type=jnp.float32
+    ).astype(o_ref.dtype)
+    rows = pl.ds(blk * block, block)
+    o_ref[rows, :] = o_ref[rows, :] + beta * g
+
+
+@functools.partial(
+    jax.jit, static_argnames=("block", "beta", "interpret")
+)
+def block_gs_sweep(
+    A: jax.Array,
+    b: jax.Array,
+    x: jax.Array,
+    blocks: jax.Array,
+    *,
+    block: int = 128,
+    beta: float = 1.0,
+    interpret: bool = False,
+) -> jax.Array:
+    """Apply ``len(blocks)`` randomized block-GS steps; returns updated x.
+
+    A: (n, n); b, x: (n, k); blocks: (steps,) int32 block ids in [0, n/block).
+    VMEM budget: x (n*k) + b panel + one (block, n) A panel — caller picks
+    n, k, block so this fits ~16 MiB (e.g. n=8192, k=64, block=256 f32
+    => 2 MiB + 8 MiB panel).
+    """
+    n, k = x.shape
+    steps = blocks.shape[0]
+    assert A.shape == (n, n) and b.shape == (n, k) and n % block == 0
+
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=1,
+        grid=(steps,),
+        in_specs=[
+            pl.BlockSpec((block, n), lambda s, idx: (idx[s], 0)),
+            pl.BlockSpec((block, k), lambda s, idx: (idx[s], 0)),
+            pl.BlockSpec((n, k), lambda s, idx: (0, 0)),
+        ],
+        out_specs=pl.BlockSpec((n, k), lambda s, idx: (0, 0)),
+    )
+    return pl.pallas_call(
+        functools.partial(_kernel, block=block, beta=beta),
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((n, k), x.dtype),
+        interpret=interpret,
+    )(blocks, A, b, x)

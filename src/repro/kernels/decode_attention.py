@@ -1,0 +1,101 @@
+"""Pallas TPU kernel: flash-decode attention (one query token, long KV).
+
+The serving hot spot for the decode_32k / long_500k shapes: a single new
+token attends to an S-long KV cache.  The op is purely HBM-bandwidth-bound
+(read S*KV*D*2 bytes of cache per token), so the kernel's job is to stream
+the cache through VMEM exactly once with an online-softmax accumulator.
+
+GQA-aware: H query heads grouped onto KV heads (G = H // KV); the score
+contraction is a (G x D x S-chunk) matmul per KV head.  The chunked
+online-softmax (m, l, acc) carries across the sequential S grid dimension
+in VMEM scratch — the same math that lets repro.models shard the cache over
+mesh axes and merge partial results with log-sum-exp weights.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _kernel(q_ref, k_ref, v_ref, len_ref, o_ref, acc, m_s, l_s, *, chunk, kv, g, d):
+    s = pl.program_id(1)
+    n_chunks = pl.num_programs(1)
+
+    @pl.when(s == 0)
+    def _init():
+        acc[...] = jnp.zeros_like(acc)
+        m_s[...] = jnp.full_like(m_s, -jnp.inf)
+        l_s[...] = jnp.zeros_like(l_s)
+
+    q = q_ref[0].reshape(kv, g, d).astype(jnp.float32)  # (KV, G, D)
+    ks = k_ref[0].astype(jnp.float32)                   # (chunk, KV, D)
+    vs = v_ref[0].astype(jnp.float32)                   # (chunk, KV, D)
+
+    scores = jnp.einsum("hgd,shd->hgs", q, ks) / (d ** 0.5)  # (KV, G, chunk)
+    # Mask positions beyond the valid cache length.
+    pos = s * chunk + jax.lax.broadcasted_iota(jnp.int32, (1, 1, chunk), 2)
+    scores = jnp.where(pos < len_ref[0], scores, -jnp.inf)
+
+    m_prev, l_prev = m_s[...], l_s[...]                 # (KV, G)
+    m_new = jnp.maximum(m_prev, scores.max(axis=-1))
+    # exp(-inf - -inf) guard: where m_new is -inf the whole chunk is masked.
+    alpha = jnp.where(jnp.isinf(m_new), 0.0, jnp.exp(m_prev - m_new))
+    p = jnp.exp(scores - m_new[..., None])
+    p = jnp.where(jnp.isinf(m_new)[..., None], 0.0, p)
+    l_new = l_prev * alpha + p.sum(axis=-1)
+    acc[...] = acc[...] * alpha[..., None] + jnp.einsum("hgs,shd->hgd", p, vs)
+    m_s[...] = m_new
+    l_s[...] = l_new
+
+    @pl.when(s == n_chunks - 1)
+    def _finish():
+        out = acc[...] / jnp.maximum(l_s[...], 1e-30)[..., None]
+        o_ref[0] = out.reshape(kv * g, d).astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("chunk", "interpret"))
+def decode_attention(
+    q: jax.Array,
+    k_cache: jax.Array,
+    v_cache: jax.Array,
+    lengths: jax.Array,
+    *,
+    chunk: int = 512,
+    interpret: bool = False,
+) -> jax.Array:
+    """Single-token attention against a KV cache.
+
+    q: (B, H, D); k_cache/v_cache: (B, S, KV, D); lengths: (B,) valid sizes.
+    Returns (B, H, D).
+    """
+    B, H, D = q.shape
+    _, S, KV, _ = k_cache.shape
+    assert H % KV == 0 and S % chunk == 0
+    G = H // KV
+
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=0,
+        grid=(B, S // chunk),
+        in_specs=[
+            pl.BlockSpec((1, H, D), lambda b, s: (b, 0, 0)),
+            pl.BlockSpec((1, chunk, KV, D), lambda b, s: (b, s, 0, 0)),
+            pl.BlockSpec((1, chunk, KV, D), lambda b, s: (b, s, 0, 0)),
+            pl.BlockSpec((1,), lambda b, s: (b,), memory_space=pltpu.SMEM),
+        ],
+        out_specs=pl.BlockSpec((1, H, D), lambda b, s: (b, 0, 0)),
+        scratch_shapes=[
+            pltpu.VMEM((KV, G, D), jnp.float32),
+            pltpu.VMEM((KV, G), jnp.float32),
+            pltpu.VMEM((KV, G), jnp.float32),
+        ],
+    )
+    return pl.pallas_call(
+        functools.partial(_kernel, chunk=chunk, kv=KV, g=G, d=D),
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((B, H, D), q.dtype),
+        interpret=interpret,
+    )(q, k_cache, v_cache, lengths)

@@ -1,0 +1,57 @@
+"""Jit'd public wrappers for the Pallas kernels.
+
+On CPU (this container) kernels execute in interpret mode; on TPU they
+compile natively.  ``interpret=None`` auto-detects.  All wrappers fall back
+to the pure-jnp reference implementation when shapes violate kernel tiling
+constraints, so callers can use them unconditionally.
+"""
+from __future__ import annotations
+
+import jax
+
+from repro.kernels import ref
+from repro.kernels.bbmv import bbmv as _bbmv, dense_to_bands
+from repro.kernels.block_gs import block_gs_sweep as _block_gs_sweep
+from repro.kernels.decode_attention import decode_attention as _decode_attention
+from repro.kernels.spmv_ell import spmv_ell as _spmv_ell
+
+
+def _interp(interpret):
+    if interpret is None:
+        return jax.default_backend() == "cpu"
+    return interpret
+
+
+def block_gs_sweep(A, b, x, blocks, *, block=128, beta=1.0, interpret=None):
+    if A.shape[0] % block != 0:
+        return ref.block_gs_sweep_ref(A, b, x, blocks, block=block, beta=beta)
+    return _block_gs_sweep(
+        A, b, x, blocks, block=block, beta=beta, interpret=_interp(interpret)
+    )
+
+
+def bbmv(A_bands, x, *, bands, block, interpret=None):
+    return _bbmv(A_bands, x, bands=bands, block=block, interpret=_interp(interpret))
+
+
+def spmv_ell(vals, cols, x, *, tile=128, interpret=None):
+    if vals.shape[0] % tile != 0:
+        return ref.spmv_ell_ref(vals, cols, x)
+    return _spmv_ell(vals, cols, x, tile=tile, interpret=_interp(interpret))
+
+
+def decode_attention(q, k_cache, v_cache, lengths, *, chunk=512, interpret=None):
+    if k_cache.shape[1] % chunk != 0:
+        return ref.decode_attention_ref(q, k_cache, v_cache, lengths)
+    return _decode_attention(
+        q, k_cache, v_cache, lengths, chunk=chunk, interpret=_interp(interpret)
+    )
+
+
+__all__ = [
+    "bbmv",
+    "block_gs_sweep",
+    "decode_attention",
+    "dense_to_bands",
+    "spmv_ell",
+]

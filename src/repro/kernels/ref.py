@@ -1,0 +1,42 @@
+"""Pure-jnp oracles for every Pallas kernel (the allclose targets)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def block_gs_sweep_ref(A, b, x, blocks, *, block: int, beta: float = 1.0):
+    """Sequential randomized block-GS steps (same semantics as the kernel)."""
+    def step(x, bi):
+        rows = bi * block + jnp.arange(block)
+        g = b[rows] - A[rows] @ x
+        return x.at[rows].add(beta * g), None
+
+    x, _ = jax.lax.scan(step, x, blocks)
+    return x
+
+
+def bbmv_ref(A_dense, x):
+    """y = A @ x on the dense equivalent of the banded matrix."""
+    return A_dense @ x
+
+
+def spmv_ell_ref(vals, cols, x):
+    n, width = vals.shape
+    return jnp.einsum("nw,nwk->nk", vals, x[cols])
+
+
+def decode_attention_ref(q, k_cache, v_cache, lengths):
+    """Single-token GQA attention, full-precision softmax."""
+    B, H, D = q.shape
+    _, S, KV, _ = k_cache.shape
+    G = H // KV
+    qg = q.reshape(B, KV, G, D).astype(jnp.float32)
+    k = k_cache.astype(jnp.float32)
+    v = v_cache.astype(jnp.float32)
+    scores = jnp.einsum("bhgd,bshd->bhgs", qg, k) / (D ** 0.5)
+    mask = jnp.arange(S)[None, None, None, :] < lengths[:, None, None, None]
+    scores = jnp.where(mask, scores, -jnp.inf)
+    p = jax.nn.softmax(scores, axis=-1)
+    out = jnp.einsum("bhgs,bshd->bhgd", p, v)
+    return out.reshape(B, H, D).astype(q.dtype)

@@ -1,0 +1,24 @@
+"""Pure-jnp oracle for kernels/banded_gs.py."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def banded_gs_sweep_ref(A_bands, b, xw, picks, *, block: int, bands: int,
+                        beta: float = 1.0):
+    width = 2 * bands + 1
+
+    def step(xw, bi):
+        acc = jax.lax.dynamic_slice_in_dim(b, bi * block, block, 0).astype(jnp.float32)
+        tiles = jax.lax.dynamic_slice_in_dim(A_bands, bi, 1, 0)[0]
+        for d in range(width):
+            xs = jax.lax.dynamic_slice_in_dim(xw, (bi + d) * block, block, 0)
+            acc = acc - jnp.dot(tiles[d], xs, preferred_element_type=jnp.float32)
+        r0 = (bi + bands) * block
+        cur = jax.lax.dynamic_slice_in_dim(xw, r0, block, 0)
+        return jax.lax.dynamic_update_slice_in_dim(
+            xw, cur + beta * acc.astype(xw.dtype), r0, 0), None
+
+    xw, _ = jax.lax.scan(step, xw, picks)
+    return xw

@@ -1,0 +1,57 @@
+"""Pallas kernel: ELLPACK SpMV — the *GPU-style* port, kept for contrast.
+
+This is what a mechanical port of the paper's CPU/GPU sparse access pattern
+looks like on TPU: per-row column gathers (``x[cols[i, j]]``).  Gathers do
+not stream and do not use the MXU; benchmarks/bench_kernels.py shows the
+block-banded layout (kernels/bbmv.py) dominating it — quantifying the
+hardware-adaptation argument of DESIGN.md instead of asserting it.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _kernel(vals_ref, cols_ref, x_ref, o_ref, *, width: int):
+    x = x_ref[...]  # (n, k) resident in VMEM
+    vals = vals_ref[...]  # (tile, width)
+    cols = cols_ref[...]  # (tile, width)
+    acc = jnp.zeros(o_ref.shape, jnp.float32)
+    for j in range(width):  # static unroll over ELL width
+        xr = jnp.take(x, cols[:, j], axis=0)  # (tile, k) row gather
+        acc += vals[:, j][:, None].astype(jnp.float32) * xr.astype(jnp.float32)
+    o_ref[...] = acc.astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("tile", "interpret"))
+def spmv_ell(
+    vals: jax.Array,
+    cols: jax.Array,
+    x: jax.Array,
+    *,
+    tile: int = 128,
+    interpret: bool = False,
+) -> jax.Array:
+    """y = A @ x with A in fixed-width ELL form (see core.spd.ell_from_dense).
+
+    vals/cols: (n, width); x: (n, k).
+    """
+    n, width = vals.shape
+    k = x.shape[1]
+    assert n % tile == 0
+
+    return pl.pallas_call(
+        functools.partial(_kernel, width=width),
+        grid=(n // tile,),
+        in_specs=[
+            pl.BlockSpec((tile, width), lambda i: (i, 0)),
+            pl.BlockSpec((tile, width), lambda i: (i, 0)),
+            pl.BlockSpec((n, k), lambda i: (0, 0)),
+        ],
+        out_specs=pl.BlockSpec((tile, k), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((n, k), x.dtype),
+        interpret=interpret,
+    )(vals, cols, x)

@@ -1,0 +1,214 @@
+import os
+os.environ["XLA_FLAGS"] = ("--xla_force_host_platform_device_count=512 "
+                           + os.environ.get("XLA_FLAGS", ""))
+# The two lines above MUST run before any other import (jax locks the device
+# count on first init).  This module is the multi-pod dry-run: for every
+# (arch x input-shape x mesh) cell it lowers + compiles the real step
+# function against ShapeDtypeStruct stand-ins (no allocation), proving the
+# distribution config is coherent, and extracts memory/cost/collective
+# numbers for EXPERIMENTS.md §Dry-run and §Roofline.
+
+import argparse
+import json
+import time
+import traceback
+
+import jax
+import jax.numpy as jnp
+
+from repro import roofline as RL
+from repro.configs import SHAPES, all_cells, cell as get_cell, get_config, get_run_config
+from repro.launch.mesh import make_production_mesh
+from repro.sharding import spec_tree_to_shardings
+from repro.train import steps as ST
+
+
+def active_param_counts(cfg, param_shapes) -> tuple[int, int]:
+    """(total_params, active_params): MoE expert tensors count top_k(+shared)
+    of num_experts toward the active path; the embedding table is excluded
+    from both (its matmul FLOPs are added separately)."""
+    total = active = 0
+    flat, _ = jax.tree_util.tree_flatten_with_path(param_shapes)
+    E = cfg.moe.num_experts if cfg.moe else 0
+    frac = (cfg.moe.top_k / E) if cfg.moe else 0.0
+    for path, leaf in flat:
+        key = jax.tree_util.keystr(path)
+        n = ST.np_prod(leaf.shape)
+        if "embedding" in key or "unembed" in key:
+            continue
+        total += n
+        if E and ("w_gate" in key or "w_up" in key or "w_down" in key) \
+                and "shared" not in key and E in leaf.shape:
+            active += int(n * frac)
+        else:
+            active += n
+    return total, active
+
+
+def model_flops(cfg, shape, param_shapes) -> float:
+    from repro.models.transformer import padded_vocab
+    from repro.sharding import ShardCtx
+    total, active = active_param_counts(cfg, param_shapes)
+    V, D = padded_vocab(cfg, ShardCtx()), cfg.d_model
+    if shape.kind == "train":
+        tokens = shape.global_batch * shape.seq_len
+        return 6.0 * active * tokens + 6.0 * tokens * D * V
+    if shape.kind == "prefill":
+        tokens = shape.global_batch * shape.seq_len
+        return 2.0 * active * tokens + 2.0 * shape.global_batch * D * V
+    # decode: one token per sequence
+    return 2.0 * active * shape.global_batch + 2.0 * shape.global_batch * D * V
+
+
+def memory_dict(mem) -> dict:
+    if mem is None:
+        return {}
+    out = {}
+    for k in ("argument_size_in_bytes", "output_size_in_bytes",
+              "temp_size_in_bytes", "alias_size_in_bytes",
+              "generated_code_size_in_bytes", "peak_memory_in_bytes"):
+        v = getattr(mem, k, None)
+        if v is not None:
+            out[k] = int(v)
+    return out
+
+
+def lower_cell(arch: str, shape_name: str, mesh, *, multi_pod: bool,
+               unroll: bool = True):
+    """Build + lower + compile one cell; returns the result record."""
+    cfg = get_config(arch)
+    # scan_unroll: XLA's cost analysis counts a while-loop body once; the
+    # single-pod (roofline) dry-run unrolls scan-over-layers so §Roofline
+    # sees every layer's FLOPs.  The multi-pod pass only proves the pod axis
+    # shards, so it keeps the scan (much faster compiles).
+    rcfg = get_run_config(arch).with_(scan_unroll=unroll)
+    shape = SHAPES[shape_name]
+    part = ST.make_partitioner(mesh, shape.global_batch, fsdp=rcfg.fsdp,
+                               pure_dp=rcfg.pure_dp)
+    record = {"arch": arch, "shape": shape_name,
+              "mesh": "2x16x16" if multi_pod else "16x16",
+              "kind": shape.kind}
+    t0 = time.time()
+
+    if shape.kind == "train":
+        step_fn, _ = ST.make_train_step(cfg, rcfg, part)
+        state_shapes, sspecs = ST.abstract_train_state(cfg, rcfg, part)
+        batch_shapes, bspecs = ST.input_specs(cfg, shape, part)
+        in_sh = (spec_tree_to_shardings(mesh, sspecs),
+                 spec_tree_to_shardings(mesh, bspecs))
+        out_sh = (spec_tree_to_shardings(mesh, sspecs), None)
+        lowered = jax.jit(step_fn, in_shardings=in_sh, out_shardings=out_sh
+                          ).lower(state_shapes, batch_shapes)
+        pshapes = state_shapes.params
+    elif shape.kind == "prefill":
+        prefill = ST.make_prefill_step(cfg, part, q_chunk=rcfg.q_chunk,
+                                       unroll=unroll)
+        state_shapes, sspecs = ST.abstract_train_state(cfg, rcfg, part)
+        batch_shapes, bspecs = ST.input_specs(cfg, shape, part)
+        in_sh = (spec_tree_to_shardings(mesh, sspecs.params),
+                 spec_tree_to_shardings(mesh, bspecs))
+        lowered = jax.jit(prefill, in_shardings=in_sh).lower(
+            state_shapes.params, batch_shapes)
+        pshapes = state_shapes.params
+    else:  # decode
+        serve = ST.make_serve_step(cfg, part, shape, unroll=unroll)
+        state_shapes, sspecs = ST.abstract_train_state(cfg, rcfg, part)
+        cache_shapes, cspecs = ST.abstract_cache(cfg, shape, part)
+        batch_shapes, bspecs = ST.input_specs(cfg, shape, part)
+        in_sh = (spec_tree_to_shardings(mesh, sspecs.params),
+                 spec_tree_to_shardings(mesh, cspecs),
+                 spec_tree_to_shardings(mesh, bspecs["tokens"]),
+                 spec_tree_to_shardings(mesh, bspecs["length"]))
+        lowered = jax.jit(serve, in_shardings=in_sh).lower(
+            state_shapes.params, cache_shapes,
+            batch_shapes["tokens"], batch_shapes["length"])
+        pshapes = state_shapes.params
+
+    record["lower_s"] = round(time.time() - t0, 1)
+    t0 = time.time()
+    compiled = lowered.compile()
+    record["compile_s"] = round(time.time() - t0, 1)
+
+    cost = compiled.cost_analysis() or {}
+    mem = memory_dict(compiled.memory_analysis())
+    hlo = compiled.as_text()
+    chips = 512 if multi_pod else 256
+    mf = model_flops(cfg, shape, pshapes)
+    rl = RL.analyze(cost, hlo, chips=chips, model_flops=mf)
+    total, active = active_param_counts(cfg, pshapes)
+
+    record.update({
+        "params_total": total, "params_active": active,
+        "flops_per_device": rl.flops,
+        "bytes_per_device": rl.mem_bytes,
+        "collective_wire_bytes_per_device": rl.coll.wire_bytes,
+        "collectives": {k: {"count": c, "wire_bytes": b}
+                        for k, (c, b) in rl.coll.by_kind.items()},
+        "t_comp_s": rl.t_comp, "t_mem_s": rl.t_mem, "t_coll_s": rl.t_coll,
+        "bottleneck": rl.bottleneck,
+        "model_flops": mf,
+        "useful_flop_ratio": rl.useful_ratio,
+        "roofline_fraction": rl.roofline_fraction,
+        "memory": mem,
+        "ok": True,
+    })
+    return record
+
+
+def main():
+    ap = argparse.ArgumentParser(description="multi-pod dry-run")
+    ap.add_argument("--arch", default="all")
+    ap.add_argument("--shape", default="all")
+    ap.add_argument("--mesh", default="both", choices=["single", "multi", "both"])
+    ap.add_argument("--out", default="experiments/dryrun")
+    ap.add_argument("--verbose", action="store_true")
+    ap.add_argument("--no-unroll", action="store_true",
+                    help="keep scan-over-layers rolled (fast compile; "
+                         "per-layer FLOPs undercounted by cost_analysis)")
+    args = ap.parse_args()
+
+    cells = [c for c in all_cells()
+             if (args.arch in ("all", c.arch))
+             and (args.shape in ("all", c.shape.name))]
+    meshes = {"single": [False], "multi": [True], "both": [False, True]}[args.mesh]
+    os.makedirs(args.out, exist_ok=True)
+
+    n_ok = n_fail = n_skip = 0
+    for multi_pod in meshes:
+        mesh = make_production_mesh(multi_pod=multi_pod)
+        mname = "2x16x16" if multi_pod else "16x16"
+        for c in cells:
+            tag = f"{c.arch}__{c.shape.name}__{mname}"
+            path = os.path.join(args.out, tag + ".json")
+            if not c.runnable:
+                rec = {"arch": c.arch, "shape": c.shape.name, "mesh": mname,
+                       "ok": False, "skip": c.skip_reason}
+                n_skip += 1
+            else:
+                try:
+                    rec = lower_cell(c.arch, c.shape.name, mesh,
+                                     multi_pod=multi_pod,
+                                     unroll=not (args.no_unroll or multi_pod))
+                    n_ok += 1
+                    print(f"PASS {tag}: lower {rec['lower_s']}s compile "
+                          f"{rec['compile_s']}s bottleneck={rec['bottleneck']} "
+                          f"t=({rec['t_comp_s']:.3e},{rec['t_mem_s']:.3e},"
+                          f"{rec['t_coll_s']:.3e})s", flush=True)
+                except Exception as e:
+                    rec = {"arch": c.arch, "shape": c.shape.name, "mesh": mname,
+                           "ok": False, "error": f"{type(e).__name__}: {e}",
+                           "traceback": traceback.format_exc()}
+                    n_fail += 1
+                    print(f"FAIL {tag}: {type(e).__name__}: {str(e)[:300]}",
+                          flush=True)
+            with open(path, "w") as f:
+                json.dump(rec, f, indent=1, default=str)
+            if c.runnable and args.verbose and rec.get("ok"):
+                print(json.dumps(rec["memory"], indent=1))
+    print(f"dry-run: {n_ok} ok, {n_fail} failed, {n_skip} skipped "
+          f"(documented).", flush=True)
+    return 1 if n_fail else 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

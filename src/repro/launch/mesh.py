@@ -1,0 +1,29 @@
+"""Production mesh construction.
+
+A FUNCTION, not a module-level constant: importing this module never touches
+jax device state (the dry-run must set XLA_FLAGS before the first jax call).
+
+Single pod: (16, 16) = 256 v5e chips, axes ("data", "model").
+Two pods:   (2, 16, 16), axes ("pod", "data", "model") — the pod axis is
+outer data parallelism over DCN.
+"""
+from __future__ import annotations
+
+import jax
+
+
+def _mesh(shape, axes):
+    return jax.make_mesh(
+        shape, axes, axis_types=(jax.sharding.AxisType.Auto,) * len(axes))
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return _mesh(shape, axes)
+
+
+def make_host_mesh(workers: int | None = None, axis: str = "workers"):
+    """1-D mesh over the locally visible devices (solver benchmarks)."""
+    n = workers or len(jax.devices())
+    return _mesh((n,), (axis,))

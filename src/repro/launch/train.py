@@ -1,0 +1,65 @@
+"""Training launcher: ``python -m repro.launch.train --arch <id> [...]``.
+
+CPU-scale runs use the reduced smoke configs (--smoke, default on CPU); the
+production path builds the 16x16 / 2x16x16 mesh and shards via pjit exactly
+as the dry-run proves.  The paper's bounded-staleness async-DP mode is
+``--async-tau K`` (optim/async_update.py).
+"""
+from __future__ import annotations
+
+import argparse
+
+import jax
+
+from repro.configs import get_config, get_run_config, get_smoke_config
+from repro.launch.mesh import make_production_mesh
+from repro.train import steps as ST
+from repro.train.trainer import Trainer, make_data
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--steps", type=int, default=100)
+    ap.add_argument("--seq-len", type=int, default=256)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--smoke", action="store_true",
+                    help="use the reduced config (default on CPU)")
+    ap.add_argument("--full", action="store_true",
+                    help="force the full config + production mesh")
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--async-tau", type=int, default=0)
+    ap.add_argument("--grad-compression", default="none",
+                    choices=["none", "int8"])
+    ap.add_argument("--microbatches", type=int, default=1)
+    ap.add_argument("--checkpoint-dir", default="")
+    ap.add_argument("--checkpoint-every", type=int, default=0)
+    ap.add_argument("--lr", type=float, default=0.0)
+    ap.add_argument("--seed", type=int, default=0)
+    args = ap.parse_args(argv)
+
+    on_cpu = jax.default_backend() == "cpu"
+    use_smoke = args.smoke or (on_cpu and not args.full)
+    cfg = get_smoke_config(args.arch) if use_smoke else get_config(args.arch)
+    rcfg = get_run_config(args.arch).with_(
+        total_steps=args.steps, warmup_steps=max(1, args.steps // 20),
+        async_tau=args.async_tau, grad_compression=args.grad_compression,
+        microbatches=args.microbatches,
+        checkpoint_dir=args.checkpoint_dir,
+        checkpoint_every=args.checkpoint_every,
+        seed=args.seed,
+        loss_chunk=min(512, args.seq_len),
+        q_chunk=min(1024, args.seq_len))
+    if args.lr:
+        rcfg = rcfg.with_(learning_rate=args.lr)
+
+    mesh = None if use_smoke else make_production_mesh(multi_pod=args.multi_pod)
+    part = ST.make_partitioner(mesh, args.batch)
+    data = make_data(cfg, args.seq_len, args.batch, seed=args.seed)
+    trainer = Trainer(cfg=cfg, rcfg=rcfg, part=part, data=data)
+    trainer.run(args.steps)
+    return trainer
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,308 @@
+"""GQA attention: training/prefill (chunked-query flash-style) and decode
+(ring-buffer caches, sequence-sharded long-context path).
+
+Variants (selected per layer by ``kind``):
+  attn     — global causal, RoPE (theta_global if configured, else theta)
+  local    — sliding-window causal (gemma3), window-limited KV
+  chunked  — chunk-local causal (llama4), chunk-limited KV
+  nope     — global causal, no positional encoding (llama4 global layers)
+  enc      — bidirectional (whisper encoder)
+  cross    — encoder-decoder cross attention (no causal mask, no RoPE)
+
+Decode caches are ring buffers sized to what the variant actually needs:
+full S for global layers, ``window`` for local, ``chunk_size`` for chunked —
+this is what makes long_500k affordable for gemma3/llama4 (DESIGN.md §4).
+Global-layer caches can be sequence-sharded across mesh axes; the partial
+softmax results are merged with log-sum-exp weights via psum/pmax
+(`sharded_decode_attention`), the same math as kernels/decode_attention.
+"""
+from __future__ import annotations
+
+import functools
+from typing import NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+from jax import shard_map
+from jax.sharding import PartitionSpec as P
+
+from repro.models import layers as L
+from repro.sharding import ShardCtx
+
+
+SEQ_SHARD_MIN = 8192   # decode caches at least this long get sequence-sharded
+
+
+class MeshInfo(NamedTuple):
+    mesh: jax.sharding.Mesh
+    dp_axes: tuple[str, ...]      # batch axes
+    sp_axes: tuple[str, ...]      # sequence axes for long-context decode
+
+
+def init_attention(ini: L.Initializer, cfg, sc: ShardCtx = ShardCtx(), *, cross: bool = False):
+    D, H, KV, Hd = cfg.d_model, cfg.num_heads, cfg.num_kv_heads, cfg.head_dim
+    params = {
+        "wq": ini.dense((D, H * Hd)),
+        "wk": ini.dense((D, KV * Hd)),
+        "wv": ini.dense((D, KV * Hd)),
+        "wo": ini.dense((H * Hd, D), fan_in=H * Hd),
+    }
+    if sc.attn_tp(H, KV):
+        # Megatron TP: heads column-parallel; KV heads sharded only when the
+        # KV count itself divides the axis (GQA with few KV heads replicates).
+        kvc = sc.kv_col(KV, Hd)
+        specs = {
+            "wq": P(sc.data(D), sc.col(H * Hd)),
+            "wk": P(sc.data(D), "model" if kvc else None),
+            "wv": P(sc.data(D), "model" if kvc else None),
+            "wo": P(sc.col(H * Hd), sc.data(D)),
+        }
+        bq_spec = sc.vec(H * Hd)
+        bkv_spec = P("model" if kvc else None)
+    else:
+        # Sequence-parallel attention (heads not divisible by the model axis):
+        # weights replicated on "model", FSDP on "data"; the S dim of the
+        # activations carries the model-axis sharding instead (transformer.py).
+        specs = {
+            "wq": sc.replicated_fsdp(D),
+            "wk": sc.replicated_fsdp(D),
+            "wv": sc.replicated_fsdp(D),
+            "wo": sc.replicated_fsdp(H * Hd),
+        }
+        bq_spec = P(None)
+        bkv_spec = P(None)
+    if cfg.qkv_bias:
+        params.update({"bq": ini.zeros((H * Hd,)), "bk": ini.zeros((KV * Hd,)),
+                       "bv": ini.zeros((KV * Hd,))})
+        specs.update({"bq": bq_spec, "bk": bkv_spec, "bv": bkv_spec})
+    if cfg.qk_norm:
+        params.update({"q_norm": ini.zeros((Hd,)), "k_norm": ini.zeros((Hd,))})
+        specs.update({"q_norm": P(None), "k_norm": P(None)})
+    return params, specs
+
+
+def _theta(cfg, kind: str) -> float:
+    if kind == "attn" and cfg.rope_theta_global:
+        return cfg.rope_theta_global
+    return cfg.rope_theta
+
+
+def _project_qkv(params, x, kv_x, cfg):
+    B = x.shape[0]
+    H, KV, Hd = cfg.num_heads, cfg.num_kv_heads, cfg.head_dim
+    q = x @ params["wq"]
+    k = kv_x @ params["wk"]
+    v = kv_x @ params["wv"]
+    if cfg.qkv_bias:
+        q, k, v = q + params["bq"], k + params["bk"], v + params["bv"]
+    q = q.reshape(B, -1, H, Hd)
+    k = k.reshape(B, -1, KV, Hd)
+    v = v.reshape(B, -1, KV, Hd)
+    if cfg.qk_norm:
+        q = L.rmsnorm(q, params["q_norm"])
+        k = L.rmsnorm(k, params["k_norm"])
+    return q, k, v
+
+
+def _sdpa(q, k, v, mask):
+    """q: (B, qc, H, Hd); k/v: (B, Sk, KV, Hd); mask: (B or 1, qc, Sk)."""
+    B, qc, H, Hd = q.shape
+    KV = k.shape[2]
+    G = H // KV
+    qg = q.reshape(B, qc, KV, G, Hd)
+    scores = jnp.einsum("bqhgd,bkhd->bhgqk", qg, k).astype(jnp.float32)
+    scores = scores / (Hd ** 0.5)
+    scores = jnp.where(mask[:, None, None], scores, -1e30)
+    p = jax.nn.softmax(scores, axis=-1).astype(v.dtype)
+    out = jnp.einsum("bhgqk,bkhd->bqhgd", p, v)
+    return out.reshape(B, qc, H * Hd)
+
+
+def attend_full(params, x, cfg, kind: str, *, kv_x=None, q_chunk: int = 1024):
+    """Full-sequence attention (train / prefill).  Returns (y, (k, v)) where
+    (k, v) is the post-RoPE cacheable KV for the whole sequence."""
+    B, S, _ = x.shape
+    cross = kind == "cross"
+    kv_in = kv_x if cross else x
+    q, k, v = _project_qkv(params, x, kv_in, cfg)
+    Sk = k.shape[1]
+
+    if kind not in ("nope", "cross", "enc") and cfg.rope:
+        theta = _theta(cfg, kind)
+        pos = jnp.arange(S, dtype=jnp.int32)[None]
+        q = L.apply_rope(q, pos, theta)
+        k = L.apply_rope(k, jnp.arange(Sk, dtype=jnp.int32)[None], theta)
+
+    qc = min(q_chunk, S)
+    while S % qc:            # largest chunk <= q_chunk dividing S (e.g. 1500 -> 750)
+        qc -= 1
+    n_chunks = S // qc
+
+    def chunk_fn(_, ci):
+        q0 = ci * qc
+        qi = jax.lax.dynamic_slice_in_dim(q, q0, qc, axis=1)
+        qpos = q0 + jnp.arange(qc)
+        kpos = jnp.arange(Sk)
+        if kind in ("enc", "cross"):
+            mask = jnp.ones((1, qc, Sk), bool)
+        else:
+            mask = qpos[:, None] >= kpos[None, :]
+            if kind == "local" and cfg.window:
+                mask &= qpos[:, None] - kpos[None, :] < cfg.window
+            elif kind == "chunked" and cfg.chunk_size:
+                mask &= (qpos[:, None] // cfg.chunk_size) == (kpos[None, :] // cfg.chunk_size)
+            mask = mask[None]
+        return None, _sdpa(qi, k, v, mask)
+
+    if n_chunks == 1:
+        _, y = chunk_fn(None, jnp.int32(0))
+        y = y[None]
+    else:
+        _, y = jax.lax.scan(chunk_fn, None, jnp.arange(n_chunks))
+    y = jnp.moveaxis(y, 0, 1).reshape(B, S, -1)
+    return y @ params["wo"], (k, v)
+
+
+# ---------------------------------------------------------------------------
+# Decode
+# ---------------------------------------------------------------------------
+
+def cache_capacity(cfg, kind: str, seq_len: int) -> int:
+    if kind == "local" and cfg.window:
+        return min(cfg.window, seq_len)
+    if kind == "chunked" and cfg.chunk_size:
+        return min(cfg.chunk_size, seq_len)
+    return seq_len
+
+
+def ring_from_full(k, capacity: int):
+    """Pack full-sequence KV (B, S, KV, Hd) into a ring buffer of the given
+    capacity: slot(p) = p % capacity for the last ``capacity`` positions;
+    shorter sequences are right-padded (slots to be filled by decode)."""
+    import numpy as np
+    B, S = k.shape[:2]
+    if S <= capacity:
+        return jnp.pad(k, ((0, 0), (0, capacity - S)) + ((0, 0),) * (k.ndim - 2))
+    pos = np.arange(S - capacity, S)
+    perm = np.empty(capacity, np.int64)
+    perm[pos % capacity] = pos
+    return k[:, perm]
+
+
+def _decode_math(q, kc, vc, valid, pos_offset=None):
+    """Single-token attention returning (acc, m, l) for LSE merging.
+    q: (B, H, Hd); kc/vc: (B, C, KV, Hd); valid: (B, C) bool."""
+    B, H, Hd = q.shape
+    KV = kc.shape[2]
+    G = H // KV
+    qg = q.reshape(B, KV, G, Hd)
+    scores = jnp.einsum("bhgd,bkhd->bhgk", qg, kc).astype(jnp.float32) / (Hd ** 0.5)
+    scores = jnp.where(valid[:, None, None, :], scores, -jnp.inf)
+    m = jnp.max(scores, axis=-1)
+    p = jnp.exp(scores - m[..., None])
+    p = jnp.where(jnp.isneginf(m)[..., None], 0.0, p)
+    l = jnp.sum(p, axis=-1)
+    acc = jnp.einsum("bhgk,bkhd->bhgd", p.astype(vc.dtype), vc).astype(jnp.float32)
+    return acc, m, l
+
+
+def sharded_decode_attention(q, kc, vc, length, mesh_info: MeshInfo):
+    """Decode attention with the KV cache sequence-sharded over sp_axes.
+
+    Each shard computes a partial (acc, m, l) over its local slice of the
+    cache; partials are merged with log-sum-exp weights via pmax/psum —
+    collective volume is O(B*H*Hd), independent of S.
+    """
+    mesh, dp, sp = mesh_info
+    n_sp = 1
+    for a in sp:
+        n_sp *= mesh.shape[a]
+    C = kc.shape[1]
+    C_local = C // n_sp
+
+    def f(q, kc, vc, length):
+        idx = jnp.int32(0)
+        for a in sp:
+            idx = idx * mesh.shape[a] + jax.lax.axis_index(a)
+        offset = idx * C_local
+        kpos = offset + jnp.arange(C_local)
+        valid = (kpos[None, :] < length)
+        acc, m, l = _decode_math(q, kc, vc, valid)
+        M = jax.lax.pmax(m, sp)
+        w = jnp.where(jnp.isneginf(m), 0.0, jnp.exp(m - M))
+        l_g = jax.lax.psum(l * w, sp)
+        acc_g = jax.lax.psum(acc * w[..., None], sp)
+        out = acc_g / jnp.maximum(l_g, 1e-30)[..., None]
+        return out.reshape(q.shape).astype(q.dtype)
+
+    dp_entry = tuple(dp) if dp else None
+    sp_entry = tuple(sp)
+    return shard_map(
+        f,
+        mesh=mesh,
+        in_specs=(
+            P(dp_entry, None, None),
+            P(dp_entry, sp_entry, None, None),
+            P(dp_entry, sp_entry, None, None),
+            P(),
+        ),
+        out_specs=P(dp_entry, None, None),
+        check_vma=False,
+    )(q, kc, vc, length)
+
+
+def attend_decode(params, x, cache, length, cfg, kind: str,
+                  mesh_info: Optional[MeshInfo] = None):
+    """One-token decode.  x: (B, 1, D); cache: {"k","v"} ring buffers of
+    capacity C; length: scalar count of tokens already in context.
+    Returns (y (B,1,D), new_cache)."""
+    B = x.shape[0]
+    H, KV, Hd = cfg.num_heads, cfg.num_kv_heads, cfg.head_dim
+    q, k, v = _project_qkv(params, x, x, cfg)   # (B,1,H,Hd), (B,1,KV,Hd)
+    if kind not in ("nope", "cross") and cfg.rope:
+        theta = _theta(cfg, kind)
+        pos = length[None, None] if length.ndim == 0 else length[:, None]
+        pos = jnp.broadcast_to(jnp.asarray(pos, jnp.int32).reshape(1, 1), (1, 1))
+        q = L.apply_rope(q, pos, theta)
+        k = L.apply_rope(k, pos, theta)
+
+    C = cache["k"].shape[1]
+    slot = jnp.mod(length, C)
+    kc = jax.lax.dynamic_update_slice_in_dim(cache["k"], k, slot, axis=1)
+    vc = jax.lax.dynamic_update_slice_in_dim(cache["v"], v, slot, axis=1)
+    new_cache = {"k": kc, "v": vc}
+    q1 = q[:, 0]
+
+    # Absolute position held by each ring slot after this write:
+    # key_pos(s) = p - ((p - s) mod C), where p = length (the new token).
+    slots = jnp.arange(C)
+    key_pos = length - jnp.mod(length - slots, C)
+    if kind == "chunked" and cfg.chunk_size:
+        lo = (length // cfg.chunk_size) * cfg.chunk_size
+    elif kind == "local" and cfg.window:
+        lo = jnp.maximum(0, length - cfg.window + 1)
+    else:
+        lo = 0
+
+    if mesh_info is not None and kind in ("attn", "nope") and C >= SEQ_SHARD_MIN:
+        out = sharded_decode_attention(q1, kc, vc, length + 1, mesh_info)
+    else:
+        valid = (key_pos >= lo) & (key_pos <= length) & (key_pos >= 0)
+        acc, m, l = _decode_math(q1, kc, vc, valid[None])
+        out = (acc / jnp.maximum(l, 1e-30)[..., None]).reshape(B, H * Hd).astype(x.dtype)
+
+    y = out.reshape(B, 1, H * Hd) @ params["wo"]
+    return y, new_cache
+
+
+def attend_cross_decode(params, x, cross_cache, cfg):
+    """Cross-attention during decode: q from x, KV precomputed from the
+    encoder output at prefill (no cache update).  x: (B, 1, D)."""
+    B = x.shape[0]
+    H, Hd = cfg.num_heads, cfg.head_dim
+    q, _, _ = _project_qkv(params, x, x, cfg)
+    kc, vc = cross_cache["k"], cross_cache["v"]       # (B, T_enc, KV, Hd)
+    valid = jnp.ones((B, kc.shape[1]), bool)
+    acc, m, l = _decode_math(q[:, 0], kc, vc, valid)
+    out = (acc / jnp.maximum(l, 1e-30)[..., None]).reshape(B, 1, H * Hd).astype(x.dtype)
+    return out @ params["wo"]

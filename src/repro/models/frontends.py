@@ -1,0 +1,28 @@
+"""Modality frontend STUBS (per the assignment: ``input_specs()`` provides
+precomputed frame/patch embeddings; the conv/ViT towers are out of scope).
+
+Each stub is a learnable linear adapter so the frontend (a) owns parameters
+that train, shard and checkpoint like the real thing and (b) marks the
+interface where a real tower would plug in.
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro.models import layers as L
+from repro.sharding import ShardCtx
+
+
+def init_frontend(ini: L.Initializer, cfg, sc: ShardCtx = ShardCtx()):
+    if cfg.frontend == "none":
+        return {}, {}
+    d = cfg.d_model
+    params = {"adapter": ini.dense((d, d)), "adapter_b": ini.zeros((d,))}
+    specs = {"adapter": P(sc.data(d), None), "adapter_b": P(None)}
+    return params, specs
+
+
+def apply_frontend(params, feats):
+    """feats: (B, T, d) precomputed frame/patch embeddings -> (B, T, d)."""
+    return feats @ params["adapter"] + params["adapter_b"]

@@ -1,0 +1,122 @@
+"""Mixture-of-Experts FFN: token-choice top-k router, capacity-based dense
+dispatch (MaxText-style), experts sharded on the model axis (EP ⊂ TP).
+
+Dispatch math: tokens are grouped into fixed-size groups; within each group
+every expert accepts at most ``capacity`` tokens (position = running count of
+tokens routed to that expert).  Dispatch/combine are dense einsums so the op
+lowers to MXU matmuls and shards cleanly:
+
+    x        (N, g, D)        dp-sharded on N (token groups follow batch)
+    combine  (N, g, E, C)     routing weights (0 where dropped)
+    exp_in   (N, E, C, D)     E sharded on "model"  -> expert-parallel
+    exp_out  (N, E, C, D)     local expert FFN, no cross-device traffic
+    y        (N, g, D)        contraction over (E, C) => all-reduce("model")
+
+This is the TP-style EP used on TPU pods: activations stay data-parallel and
+the only collective is the FFN-output all-reduce that Megatron TP pays
+anyway.  The router aux (load-balance loss, drop fraction) is returned for
+the trainer.
+
+DESIGN.md §Arch-applicability: a random top-1 expert update *is* a
+randomized block-GS step on the expert parameter space — this module is
+where the paper's randomized-block-coordinate view meets the model zoo.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro.models import layers as L
+from repro.sharding import Partitioner, ShardCtx
+
+
+class MoEAux(NamedTuple):
+    load_balance_loss: jax.Array   # switch-style aux loss (scalar)
+    drop_fraction: jax.Array       # fraction of routed slots over capacity
+
+
+def init_moe(ini: L.Initializer, d: int, mcfg, sc: ShardCtx = ShardCtx()):
+    E, F = mcfg.num_experts, mcfg.d_ff
+    ecol = "model" if sc.tp > 1 and E % sc.tp == 0 else None
+    params = {
+        "router": ini.dense((d, E)),
+        "w_gate": ini.dense((E, d, F), fan_in=d),
+        "w_up": ini.dense((E, d, F), fan_in=d),
+        "w_down": ini.dense((E, F, d), fan_in=F),
+    }
+    specs = {
+        "router": P(None, None),
+        "w_gate": P(ecol, sc.data(d), None),
+        "w_up": P(ecol, sc.data(d), None),
+        "w_down": P(ecol, None, sc.data(d)),
+    }
+    if mcfg.shared_expert:
+        sp, ss = L.init_mlp(ini, d, F, "swiglu", sc)
+        params["shared"] = sp
+        specs["shared"] = ss
+    return params, specs
+
+
+def _capacity(group: int, top_k: int, num_experts: int, factor: float) -> int:
+    c = int(group * top_k / num_experts * factor)
+    return max(4, -(-c // 4) * 4)  # >= 4, rounded up to a multiple of 4
+
+
+def apply_moe(params, x, mcfg, *, group: int = 512, part: Partitioner = Partitioner()):
+    """x: (B, S, D) -> (y, MoEAux)."""
+    B, S, D = x.shape
+    E, K = mcfg.num_experts, mcfg.top_k
+    T = B * S
+    g = min(group, T)
+    assert T % g == 0, (T, g)
+    N = T // g
+    C = _capacity(g, K, E, mcfg.capacity_factor)
+
+    xg = x.reshape(N, g, D)
+    logits = (xg @ params["router"].astype(x.dtype)).astype(jnp.float32)  # (N,g,E)
+    probs = jax.nn.softmax(logits, axis=-1)
+    if mcfg.router == "sigmoid":          # llama4: top-k on logits, sigmoid gate
+        top_vals, top_idx = jax.lax.top_k(logits, K)
+        weights = jax.nn.sigmoid(top_vals)
+    else:                                  # softmax, renormalized over the top-k
+        top_vals, top_idx = jax.lax.top_k(probs, K)
+        weights = top_vals / jnp.maximum(top_vals.sum(-1, keepdims=True), 1e-9)
+
+    combine = jnp.zeros((N, g, E, C), jnp.float32)
+    kept = jnp.zeros((), jnp.float32)
+    counts = jnp.zeros((N, 1, E), jnp.float32)   # slots used by earlier k rounds
+    for k in range(K):
+        mask_e = jax.nn.one_hot(top_idx[..., k], E, dtype=jnp.float32)   # (N,g,E)
+        # 0-based slot id = rank among this round's picks + earlier rounds' usage
+        pos = (jnp.cumsum(mask_e, axis=1) - 1.0 + counts) * mask_e
+        keep = (mask_e > 0) & (pos < C)
+        counts = counts + mask_e.sum(axis=1, keepdims=True)
+        kept = kept + keep.sum()
+        disp = mask_e[..., None] * jax.nn.one_hot(
+            jnp.clip(pos, 0, C - 1).astype(jnp.int32), C, dtype=jnp.float32
+        )
+        disp = jnp.where(keep[..., None], disp, 0.0)
+        combine = combine + disp * weights[..., k, None, None]
+
+    dispatch = (combine > 0).astype(x.dtype)
+    exp_in = jnp.einsum("ngec,ngd->necd", dispatch, xg)
+    exp_in = part.constrain(exp_in, P(part.dp, part.sc.col(E), None, None))
+    h = jax.nn.silu(jnp.einsum("necd,edf->necf", exp_in, params["w_gate"]))
+    h = h * jnp.einsum("necd,edf->necf", exp_in, params["w_up"])
+    exp_out = jnp.einsum("necf,efd->necd", h, params["w_down"])
+    y = jnp.einsum("necd,ngec->ngd", exp_out, combine.astype(x.dtype))
+    y = y.reshape(B, S, D)
+    y = part.hidden(y)
+
+    if mcfg.shared_expert:
+        y = y + L.apply_mlp(params["shared"], x, "swiglu")
+
+    # Switch-transformer load-balance loss: E * sum_e f_e * p_e.
+    frac = jax.nn.one_hot(top_idx[..., 0], E, dtype=jnp.float32).mean((0, 1))
+    mean_p = probs.mean((0, 1))
+    lb = E * jnp.sum(frac * mean_p)
+    drop = 1.0 - kept / (N * g * K)
+    return y, MoEAux(load_balance_loss=lb, drop_fraction=drop)

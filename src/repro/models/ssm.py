@@ -1,0 +1,170 @@
+"""Mamba (S6) selective-state-space block — jamba's sequence mixer.
+
+TPU adaptation of the CUDA selective-scan kernel (DESIGN.md hardware notes):
+the GPU implementation fuses the recurrence into one SRAM-resident kernel;
+on TPU we (a) shard d_inner on the model axis, (b) chunk the sequence and
+run a *within-chunk associative scan* (log-depth, MXU/VPU friendly) carrying
+the (B, d_inner, d_state) boundary state between chunks with an outer
+lax.scan.  Materialized working set per chunk is
+(B, chunk, d_inner/TP, d_state) — bounded, never the full (B,S,di,N) tensor
+that a naive port would allocate.
+
+Decode is the O(1) recurrence with a (d_conv-1)-deep conv ring buffer.
+"""
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro.models import layers as L
+from repro.sharding import Partitioner, ShardCtx
+
+
+def dt_rank(d_model: int) -> int:
+    return -(-d_model // 16)
+
+
+def init_mamba(ini: L.Initializer, cfg, sc: ShardCtx = ShardCtx()):
+    d = cfg.d_model
+    di = cfg.ssm_expand * d
+    n = cfg.ssm_state
+    r = dt_rank(d)
+    col = sc.col(di)
+    params = {
+        "in_proj": ini.dense((d, 2 * di)),
+        "conv_w": ini.dense((cfg.ssm_conv, di), fan_in=cfg.ssm_conv),
+        "conv_b": ini.zeros((di,)),
+        "x_proj": ini.dense((di, r + 2 * n)),
+        "dt_w": ini.dense((r, di), fan_in=r),
+        "dt_b": jnp.log(jnp.expm1(0.01)) * ini.ones((di,)),  # softplus^-1(0.01)
+        "A_log": jnp.log(jnp.broadcast_to(jnp.arange(1, n + 1, dtype=jnp.float32), (di, n))).astype(ini.dtype),
+        "D": ini.ones((di,)),
+        "out_proj": ini.dense((di, d)),
+    }
+    specs = {
+        "in_proj": P(sc.data(d), col),          # column-parallel on 2*di (pairwise)
+        "conv_w": P(None, col),
+        "conv_b": P(col),
+        "x_proj": P(col, None),                  # row-parallel: psum of (r+2n) vec
+        "dt_w": P(None, col),
+        "dt_b": P(col),
+        "A_log": P(col, None),
+        "D": P(col),
+        "out_proj": P(col, sc.data(d)),          # row-parallel back to d
+    }
+    return params, specs
+
+
+def _causal_conv(x, w, b):
+    """Depthwise causal conv over S.  x: (B,S,di); w: (K,di)."""
+    K = w.shape[0]
+    y = jnp.zeros_like(x)
+    for k in range(K):
+        shift = K - 1 - k
+        xs = jnp.pad(x, ((0, 0), (shift, 0), (0, 0)))[:, : x.shape[1]]
+        y = y + xs * w[k]
+    return y + b
+
+
+def _ssm_params(params, xc, cfg):
+    """Common discretization: returns dA (B,S,di,n), dBx (B,S,di,n), C (B,S,n)."""
+    n = cfg.ssm_state
+    r = dt_rank(cfg.d_model)
+    proj = xc @ params["x_proj"]                               # (B,S,r+2n)
+    dt, Bm, Cm = jnp.split(proj, [r, r + n], axis=-1)
+    dt = jax.nn.softplus(dt @ params["dt_w"] + params["dt_b"]).astype(jnp.float32)  # (B,S,di)
+    A = -jnp.exp(params["A_log"].astype(jnp.float32))          # (di,n)
+    dA = jnp.exp(dt[..., None] * A)                            # (B,S,di,n)
+    dBx = (dt * xc.astype(jnp.float32))[..., None] * Bm.astype(jnp.float32)[..., None, :]
+    return dA, dBx, Cm.astype(jnp.float32)
+
+
+def _chunk_scan(dA, dBx, h0):
+    """Within-chunk associative scan of h_t = dA_t h_{t-1} + dBx_t.
+
+    dA/dBx: (B, ck, di, n); h0: (B, di, n).  Returns (h (B,ck,di,n), h_last).
+    """
+
+    def combine(l, r):
+        a1, b1 = l
+        a2, b2 = r
+        return a1 * a2, a2 * b1 + b2
+
+    a_cum, b_cum = jax.lax.associative_scan(combine, (dA, dBx), axis=1)
+    h = a_cum * h0[:, None] + b_cum
+    return h, h[:, -1]
+
+
+def mamba_forward(params, x, cfg, *, chunk: int = 256,
+                  part: Partitioner = Partitioner(), return_state: bool = False):
+    """x: (B,S,d) -> (B,S,d).  Chunked parallel selective scan.
+
+    ``return_state=True`` additionally returns the decode cache after the
+    last position (prefill handoff).
+    """
+    B, S, d = x.shape
+    di = cfg.ssm_expand * d
+    n = cfg.ssm_state
+    xz = x @ params["in_proj"]
+    xin, z = jnp.split(xz, 2, axis=-1)                         # (B,S,di) each
+    xc = jax.nn.silu(_causal_conv(xin, params["conv_w"], params["conv_b"]))
+    ck = min(chunk, S)
+    assert S % ck == 0
+    nc = S // ck
+
+    dA, dBx, Cm = _ssm_params(params, xc, cfg)
+
+    def body(h, args):
+        dA_c, dBx_c, C_c = args                                # (B,ck,di,n),(B,ck,n)
+        h_all, h_last = _chunk_scan(dA_c, dBx_c, h)
+        y_c = jnp.einsum("bkdn,bkn->bkd", h_all, C_c)
+        return h_last, y_c
+
+    resh = lambda t: jnp.moveaxis(t.reshape(B, nc, ck, *t.shape[2:]), 1, 0)
+    h0 = jnp.zeros((B, di, n), jnp.float32)
+    h_last, ys = jax.lax.scan(body, h0, (resh(dA), resh(dBx), resh(Cm)))
+    y = jnp.moveaxis(ys, 0, 1).reshape(B, S, di)
+    y = (y + params["D"].astype(jnp.float32) * xc.astype(jnp.float32)).astype(x.dtype)
+    y = y * jax.nn.silu(z)
+    out = y @ params["out_proj"]
+    if return_state:
+        K = cfg.ssm_conv
+        conv = xin[:, -(K - 1):] if K > 1 else jnp.zeros((B, 0, di), xin.dtype)
+        return out, {"conv": conv, "h": h_last}
+    return out
+
+
+# ---------------------------------------------------------------------------
+# Decode (O(1) recurrence)
+# ---------------------------------------------------------------------------
+
+def init_mamba_cache(cfg, batch: int, dtype):
+    di = cfg.ssm_expand * cfg.d_model
+    return {
+        "conv": jnp.zeros((batch, cfg.ssm_conv - 1, di), dtype),
+        "h": jnp.zeros((batch, di, cfg.ssm_state), jnp.float32),
+    }
+
+
+def mamba_cache_specs(cfg, sc: ShardCtx, dp):
+    col = sc.col(cfg.ssm_expand * cfg.d_model)
+    return {"conv": P(dp, None, col), "h": P(dp, col, None)}
+
+
+def mamba_decode(params, x, cache, cfg):
+    """x: (B,1,d); cache: {"conv","h"} -> (y (B,1,d), new_cache)."""
+    B = x.shape[0]
+    xz = x[:, 0] @ params["in_proj"]
+    xin, z = jnp.split(xz, 2, axis=-1)                          # (B,di)
+    window = jnp.concatenate([cache["conv"], xin[:, None]], axis=1)  # (B,K,di)
+    xc = jax.nn.silu(jnp.einsum("bkd,kd->bd", window, params["conv_w"]) + params["conv_b"])
+    dA, dBx, Cm = _ssm_params(params, xc[:, None], cfg)         # S = 1
+    h = dA[:, 0] * cache["h"] + dBx[:, 0]
+    y = jnp.einsum("bdn,bn->bd", h, Cm[:, 0])
+    y = (y + params["D"].astype(jnp.float32) * xc.astype(jnp.float32)).astype(x.dtype)
+    y = y * jax.nn.silu(z)
+    out = (y @ params["out_proj"])[:, None]
+    return out, {"conv": window[:, 1:], "h": h}

@@ -1,0 +1,470 @@
+"""Model assembly: pre-norm residual blocks, scan-over-layers stacking,
+encoder-decoder support, prefill-cache handoff and single-token decode.
+
+Layer layout (configs/base.py): ``cfg.layer_pattern`` is one *period*;
+weights for each pattern position are stacked over ``scan_periods`` and the
+stack is consumed by one ``lax.scan`` (O(1) HLO size for 88-layer granite).
+Layers past the last full period ("tail") are unrolled.
+
+Params tree:
+  embed / frontend? / encoder? / blocks (tuple per pattern position, leaves
+  stacked over periods) / tail (tuple per tail layer) / final_norm
+
+Cache tree mirrors blocks/tail; attention caches are ring buffers sized by
+``cache_capacity`` (window for 'local', chunk for 'chunked', S for global),
+SSM/xLSTM caches are O(1) recurrent states.  Global-attention caches with
+capacity > SEQ_SHARD_MIN are sequence-sharded over the mesh and decoded via
+LSE-merge (attention.sharded_decode_attention).
+"""
+from __future__ import annotations
+
+import math
+from typing import NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro.models import attention as A
+from repro.models import frontends as F
+from repro.models import layers as L
+from repro.models import moe as M
+from repro.models import ssm as S
+from repro.models import xlstm as X
+from repro.sharding import Partitioner, ShardCtx
+
+SEQ_SHARD_MIN = A.SEQ_SHARD_MIN   # decode caches >= this get sequence-sharded
+
+ATTN_KINDS = ("attn", "local", "chunked", "nope", "enc")
+MIXER_FFN_NONE = ("mlstm", "slstm")   # blocks that carry their own FFN
+
+
+class BlockKind(NamedTuple):
+    mixer: str    # attn | local | chunked | nope | mamba | mlstm | slstm
+    ffn: str      # dense | moe | none
+
+
+def block_kinds(cfg) -> tuple[BlockKind, ...]:
+    """Per-pattern-position block structure (one period)."""
+    out = []
+    for pos, mixer in enumerate(cfg.layer_pattern):
+        if mixer in MIXER_FFN_NONE:
+            ffn = "none"
+        elif cfg.moe is not None and pos % cfg.moe.every == cfg.moe.every - 1:
+            ffn = "moe"
+        elif cfg.d_ff > 0:
+            ffn = "dense"
+        else:
+            ffn = "none"
+        out.append(BlockKind(mixer, ffn))
+    if cfg.moe is not None:
+        assert len(cfg.layer_pattern) % cfg.moe.every == 0, (
+            "MoE periodicity must divide the layer pattern")
+    return tuple(out)
+
+
+# ---------------------------------------------------------------------------
+# Init
+# ---------------------------------------------------------------------------
+
+def _init_block(ini: L.Initializer, cfg, bk: BlockKind, sc: ShardCtx,
+                *, cross: bool = False):
+    params: dict = {}
+    specs: dict = {}
+    params["norm1"], specs["norm1"] = L.init_norm(ini, cfg.d_model, cfg.norm)
+    if bk.mixer in ATTN_KINDS:
+        params["mixer"], specs["mixer"] = A.init_attention(ini, cfg, sc)
+    elif bk.mixer == "mamba":
+        params["mixer"], specs["mixer"] = S.init_mamba(ini, cfg, sc)
+    elif bk.mixer == "mlstm":
+        params["mixer"], specs["mixer"] = X.init_mlstm(ini, cfg, sc)
+    elif bk.mixer == "slstm":
+        params["mixer"], specs["mixer"] = X.init_slstm(ini, cfg, sc)
+    else:
+        raise ValueError(bk.mixer)
+    if cfg.post_norm:
+        params["post_norm1"], specs["post_norm1"] = L.init_norm(ini, cfg.d_model, cfg.norm)
+    if cross:
+        params["norm_cross"], specs["norm_cross"] = L.init_norm(ini, cfg.d_model, cfg.norm)
+        params["cross"], specs["cross"] = A.init_attention(ini, cfg, sc, cross=True)
+    if bk.ffn != "none":
+        params["norm2"], specs["norm2"] = L.init_norm(ini, cfg.d_model, cfg.norm)
+        if bk.ffn == "dense":
+            params["ffn"], specs["ffn"] = L.init_mlp(ini, cfg.d_model, cfg.d_ff, cfg.mlp, sc)
+        else:
+            params["ffn"], specs["ffn"] = M.init_moe(ini, cfg.d_model, cfg.moe, sc)
+        if cfg.post_norm:
+            params["post_norm2"], specs["post_norm2"] = L.init_norm(ini, cfg.d_model, cfg.norm)
+    return params, specs
+
+
+def _stack_specs(specs):
+    return jax.tree.map(lambda s: P(None, *s), specs,
+                        is_leaf=lambda s: isinstance(s, P))
+
+
+def init_params(cfg, key: jax.Array, sc: ShardCtx = ShardCtx()):
+    """Returns (params, specs): two pytrees of identical structure."""
+    dtype = jnp.dtype(cfg.dtype)
+    ini = L.Initializer(key, dtype)
+    params: dict = {}
+    specs: dict = {}
+
+    params["embed"], specs["embed"] = L.init_embed(
+        ini, padded_vocab(cfg, sc), cfg.d_model, cfg.tie_embeddings, sc)
+    fp, fs = F.init_frontend(ini, cfg, sc)
+    if fp:
+        params["frontend"], specs["frontend"] = fp, fs
+
+    kinds = block_kinds(cfg)
+    periods = cfg.scan_periods
+    cross = cfg.encoder_layers > 0
+
+    blocks, bspecs = [], []
+    for pos, bk in enumerate(kinds):
+        cap = {}
+
+        def stacked_init(k, _bk=bk, _cap=cap):
+            p, s = _init_block(L.Initializer(k, dtype), cfg, _bk, sc, cross=cross)
+            _cap["specs"] = s   # static python, identical across the vmap
+            return p
+
+        stacked = jax.vmap(stacked_init)(jax.random.split(ini.next_key(), periods))
+        blocks.append(stacked)
+        bspecs.append(_stack_specs(cap["specs"]))
+    params["blocks"] = tuple(blocks)
+    specs["blocks"] = tuple(bspecs)
+
+    tails, tspecs = [], []
+    for bk in tail_kinds_of(cfg):
+        p, s = _init_block(L.Initializer(ini.next_key(), dtype), cfg, bk, sc, cross=cross)
+        tails.append(p)
+        tspecs.append(s)
+    params["tail"] = tuple(tails)
+    specs["tail"] = tuple(tspecs)
+
+    params["final_norm"], specs["final_norm"] = L.init_norm(ini, cfg.d_model, cfg.norm)
+
+    if cfg.encoder_layers > 0:
+        enc_blocks, enc_specs = [], []
+        for _ in range(cfg.encoder_layers):
+            p, s = _init_block(L.Initializer(ini.next_key(), dtype), cfg,
+                               BlockKind("enc", "dense"), sc)
+            enc_blocks.append(p)
+            enc_specs.append(s)
+        params["encoder"] = {"blocks": tuple(enc_blocks)}
+        specs["encoder"] = {"blocks": tuple(enc_specs)}
+        params["encoder"]["final_norm"], specs["encoder"]["final_norm"] = (
+            L.init_norm(ini, cfg.d_model, cfg.norm))
+    return params, specs
+
+
+def padded_vocab(cfg, sc: ShardCtx) -> int:
+    """Vocab rounded up so the model axis divides it (whisper's 51865)."""
+    m = max(sc.tp, 1) * 128
+    return -(-cfg.vocab_size // m) * m
+
+
+def tail_kinds_of(cfg) -> tuple[BlockKind, ...]:
+    kinds = block_kinds(cfg)
+    n_tail = cfg.num_layers - cfg.scan_periods * len(cfg.layer_pattern)
+    return kinds[:n_tail]
+
+
+# ---------------------------------------------------------------------------
+# Forward (train / prefill)
+# ---------------------------------------------------------------------------
+
+def _apply_mixer_full(params, x, cfg, bk: BlockKind, part, q_chunk,
+                      return_cache, capacity_len):
+    if bk.mixer in ATTN_KINDS:
+        y, (k, v) = A.attend_full(params, x, cfg, bk.mixer, q_chunk=q_chunk)
+        if not return_cache:
+            return y, None
+        C = A.cache_capacity(cfg, bk.mixer, capacity_len)
+        return y, {"k": A.ring_from_full(k, C), "v": A.ring_from_full(v, C)}
+    if bk.mixer == "mamba":
+        return (S.mamba_forward(params, x, cfg, part=part, return_state=return_cache)
+                if return_cache else (S.mamba_forward(params, x, cfg, part=part), None))
+    if bk.mixer == "mlstm":
+        return (X.mlstm_forward(params, x, cfg, part=part, return_state=return_cache)
+                if return_cache else (X.mlstm_forward(params, x, cfg, part=part), None))
+    if bk.mixer == "slstm":
+        return (X.slstm_forward(params, x, cfg, part=part, return_state=return_cache)
+                if return_cache else (X.slstm_forward(params, x, cfg, part=part), None))
+    raise ValueError(bk.mixer)
+
+
+def _apply_block_full(params, x, cfg, bk: BlockKind, part: Partitioner,
+                      *, enc_out=None, q_chunk=1024, return_cache=False,
+                      capacity_len=None):
+    """One block, full-sequence.  Returns (x, (cache, moe_aux))."""
+    capacity_len = capacity_len or x.shape[1]
+    sp_attn = (bk.mixer in ATTN_KINDS and part.mesh is not None
+               and not part.sc.attn_tp(cfg.num_heads, cfg.num_kv_heads))
+    h = L.apply_norm(params["norm1"], x, cfg.norm)
+    if sp_attn:
+        h = part.hidden_sp(h)   # sequence-parallel attention region
+    y, cache = _apply_mixer_full(params["mixer"], h, cfg, bk, part, q_chunk,
+                                 return_cache, capacity_len)
+    if cfg.post_norm:
+        y = L.apply_norm(params["post_norm1"], y, cfg.norm)
+    x = x + y
+    x = part.hidden(x)
+
+    if "cross" in params:
+        h = L.apply_norm(params["norm_cross"], x, cfg.norm)
+        y, (ck, cv) = A.attend_full(params["cross"], h, cfg, "cross", kv_x=enc_out,
+                                    q_chunk=q_chunk)
+        x = x + y
+        if return_cache:
+            cache = {"self": cache, "cross": {"k": ck, "v": cv}}
+
+    aux = None
+    if bk.ffn != "none":
+        h = L.apply_norm(params["norm2"], x, cfg.norm)
+        if bk.ffn == "dense":
+            y = L.apply_mlp(params["ffn"], h, cfg.mlp)
+            y = part.hidden(y)
+        else:
+            y, aux = M.apply_moe(params["ffn"], h, cfg.moe, group=cfg.moe_group,
+                                 part=part)
+        if cfg.post_norm:
+            y = L.apply_norm(params["post_norm2"], y, cfg.norm)
+        x = x + y
+        x = part.hidden(x)
+    return x, (cache, aux)
+
+
+def encode(params, cfg, frames, part: Partitioner = Partitioner()):
+    """Whisper-style encoder over precomputed (stub) frames (B, T, D)."""
+    x = F.apply_frontend(params["frontend"], frames).astype(jnp.dtype(cfg.dtype))
+    pos = jnp.arange(x.shape[1])
+    x = x + L.sinusoidal(pos, cfg.d_model)[None].astype(x.dtype)
+    for bp in params["encoder"]["blocks"]:
+        x, _ = _apply_block_full(bp, x, cfg, BlockKind("enc", "dense"), part)
+    return L.apply_norm(params["encoder"]["final_norm"], x, cfg.norm)
+
+
+def embed_input(params, cfg, batch, part: Partitioner = Partitioner()):
+    """Token embedding + modality splice (vlm) + absolute positions."""
+    tokens = batch["tokens"]
+    x = L.embed_tokens(params["embed"], tokens, cfg.d_model)
+    if cfg.embed_scale:
+        x = (x.astype(jnp.float32) * math.sqrt(cfg.d_model)).astype(x.dtype)
+    if cfg.frontend == "vision" and "patches" in batch:
+        pe = F.apply_frontend(params["frontend"], batch["patches"]).astype(x.dtype)
+        x = jnp.concatenate([pe, x[:, pe.shape[1]:]], axis=1)
+    if not cfg.rope:
+        pos = batch.get("positions", jnp.arange(x.shape[1]))
+        x = x + L.sinusoidal(pos, cfg.d_model)[None].astype(x.dtype)
+    return part.hidden(x)
+
+
+def forward(params, cfg, batch, *, part: Partitioner = Partitioner(),
+            remat: str = "block", q_chunk: int = 1024, return_cache: bool = False,
+            capacity_len: int = 0, unroll: bool = False):
+    """Full-sequence forward.  Returns (hidden (B,S,D), caches|None, moe_aux).
+
+    batch: {"tokens": (B,S) int32, optional "frames" (B,T,D), "patches"}.
+    ``capacity_len``: decode-cache sizing horizon (prefill for a longer
+    conversation allocates rings for the full context, not just the prompt).
+    """
+    enc_out = None
+    if cfg.encoder_layers > 0:
+        enc_out = encode(params, cfg, batch["frames"], part)
+
+    x = embed_input(params, cfg, batch, part)
+    kinds = block_kinds(cfg)
+    capacity_len = capacity_len or batch["tokens"].shape[1]
+
+    def period_fn(x, block_params):
+        caches, auxes = [], []
+        for pos, bk in enumerate(kinds):
+            x, (c, a) = _apply_block_full(block_params[pos], x, cfg, bk, part,
+                                          enc_out=enc_out, q_chunk=q_chunk,
+                                          return_cache=return_cache,
+                                          capacity_len=capacity_len)
+            caches.append(c)
+            auxes.append(a)
+        aux = [a.load_balance_loss for a in auxes if a is not None]
+        return x, (tuple(caches), jnp.stack(aux).sum() if aux else jnp.zeros(()))
+
+    if remat == "block":      # full recompute (lowest memory)
+        period_fn = jax.checkpoint(period_fn,
+                                   policy=jax.checkpoint_policies.nothing_saveable)
+    elif remat == "dots":     # save matmul outputs, recompute elementwise
+        period_fn = jax.checkpoint(period_fn,
+                                   policy=jax.checkpoint_policies.dots_saveable)
+
+    x, (caches, lb) = jax.lax.scan(period_fn, x, params["blocks"],
+                                   unroll=cfg.scan_periods if unroll else 1)
+    moe_loss = lb.sum()
+
+    tail_caches = []
+    for tp, bk in zip(params["tail"], tail_kinds_of(cfg)):
+        x, (c, a) = _apply_block_full(tp, x, cfg, bk, part, enc_out=enc_out,
+                                      q_chunk=q_chunk, return_cache=return_cache,
+                                      capacity_len=capacity_len)
+        tail_caches.append(c)
+        if a is not None:
+            moe_loss = moe_loss + a.load_balance_loss
+
+    x = L.apply_norm(params["final_norm"], x, cfg.norm)
+    cache = None
+    if return_cache:
+        cache = {"blocks": caches, "tail": tuple(tail_caches)}
+        if enc_out is not None:
+            cache["enc_out"] = enc_out
+    return x, cache, moe_loss
+
+
+def unembed_logits(params, cfg, hidden):
+    return L.unembed(params["embed"], hidden, cfg.tie_embeddings)
+
+
+# ---------------------------------------------------------------------------
+# Decode
+# ---------------------------------------------------------------------------
+
+def init_cache(cfg, batch: int, seq_len: int, sc: ShardCtx = ShardCtx(),
+               dp=None, enc_len: int = 0):
+    """Zero decode cache + matching PartitionSpec tree.
+
+    dp: batch placement (axis tuple or None); sequence-sharded global caches
+    use the model axis (plus data when the batch is replicated).
+    """
+    dtype = jnp.dtype(cfg.dtype)
+    kinds = block_kinds(cfg)
+    kvc = sc.kv_col(cfg.num_kv_heads, cfg.head_dim)
+    sp_axes = seq_shard_axes(cfg, batch, seq_len, sc, dp)
+
+    def one(bk: BlockKind):
+        if bk.mixer in ATTN_KINDS:
+            C = A.cache_capacity(cfg, bk.mixer, seq_len)
+            shardable = bk.mixer in ("attn", "nope")   # LSE-merge decode path
+            seq_spec = sp_axes if (shardable and C >= SEQ_SHARD_MIN and sp_axes) else None
+            cache = {
+                "k": jnp.zeros((batch, C, cfg.num_kv_heads, cfg.head_dim), dtype),
+                "v": jnp.zeros((batch, C, cfg.num_kv_heads, cfg.head_dim), dtype),
+            }
+            spec = {"k": P(dp, seq_spec, kvc, None), "v": P(dp, seq_spec, kvc, None)}
+        elif bk.mixer == "mamba":
+            cache = S.init_mamba_cache(cfg, batch, dtype)
+            spec = S.mamba_cache_specs(cfg, sc, dp)
+        elif bk.mixer == "mlstm":
+            cache = X.init_mlstm_cache(cfg, batch, dtype)
+            spec = X.mlstm_cache_specs(cfg, sc, dp)
+        elif bk.mixer == "slstm":
+            cache = X.init_slstm_cache(cfg, batch, dtype)
+            spec = X.slstm_cache_specs(cfg, sc, dp)
+        else:
+            raise ValueError(bk.mixer)
+        if cfg.encoder_layers > 0:
+            cross = {
+                "k": jnp.zeros((batch, enc_len, cfg.num_kv_heads, cfg.head_dim), dtype),
+                "v": jnp.zeros((batch, enc_len, cfg.num_kv_heads, cfg.head_dim), dtype),
+            }
+            cspec = {"k": P(dp, None, kvc, None), "v": P(dp, None, kvc, None)}
+            return ({"self": cache, "cross": cross},
+                    {"self": spec, "cross": cspec})
+        return cache, spec
+
+    periods = cfg.scan_periods
+    blocks, bspecs = [], []
+    for bk in kinds:
+        c, s = one(bk)
+        blocks.append(jax.tree.map(
+            lambda a: jnp.broadcast_to(a, (periods,) + a.shape), c))
+        bspecs.append(jax.tree.map(lambda sp: P(None, *sp), s,
+                                   is_leaf=lambda sp: isinstance(sp, P)))
+    tails, tspecs = [], []
+    for bk in tail_kinds_of(cfg):
+        c, s = one(bk)
+        tails.append(c)
+        tspecs.append(s)
+    cache = {"blocks": tuple(blocks), "tail": tuple(tails)}
+    specs = {"blocks": tuple(bspecs), "tail": tuple(tspecs)}
+    return cache, specs
+
+
+def seq_shard_axes(cfg, batch: int, seq_len: int, sc: ShardCtx, dp):
+    """Mesh axes used to shard long decode caches over the sequence dim."""
+    axes = []
+    if sc.tp > 1:
+        axes.append("model")
+    if dp is None and sc.dp > 1:
+        axes.append("data")   # batch replicated (long_500k) -> data shards S too
+    return tuple(axes)
+
+
+def decode_step(params, cfg, cache, tokens, length, *,
+                part: Partitioner = Partitioner(), mesh_info=None,
+                unroll: bool = False):
+    """One decoding step for every sequence in the batch.
+
+    tokens: (B, 1) int32; length: scalar int32 tokens already in context.
+    Returns (logits (B, vocab_padded), new_cache).
+    """
+    x = embed_input(params, cfg, {"tokens": tokens,
+                                  "positions": length[None] if length.ndim == 0 else length},
+                    part)
+    kinds = block_kinds(cfg)
+
+    def apply_one(bp, bc, bk: BlockKind, x):
+        self_cache = bc["self"] if cfg.encoder_layers > 0 else bc
+        h = L.apply_norm(bp["norm1"], x, cfg.norm)
+        if bk.mixer in ATTN_KINDS:
+            y, new_self = A.attend_decode(bp["mixer"], h, self_cache, length, cfg,
+                                          bk.mixer, mesh_info=mesh_info)
+        elif bk.mixer == "mamba":
+            y, new_self = S.mamba_decode(bp["mixer"], h, self_cache, cfg)
+        elif bk.mixer == "mlstm":
+            y, new_self = X.mlstm_decode(bp["mixer"], h, self_cache, cfg)
+        elif bk.mixer == "slstm":
+            y, new_self = X.slstm_decode(bp["mixer"], h, self_cache, cfg)
+        else:
+            raise ValueError(bk.mixer)
+        if cfg.post_norm:
+            y = L.apply_norm(bp["post_norm1"], y, cfg.norm)
+        x = x + y
+        if "cross" in bp:
+            h = L.apply_norm(bp["norm_cross"], x, cfg.norm)
+            x = x + A.attend_cross_decode(bp["cross"], h, bc["cross"], cfg)
+        if bk.ffn != "none":
+            h = L.apply_norm(bp["norm2"], x, cfg.norm)
+            if bk.ffn == "dense":
+                y = L.apply_mlp(bp["ffn"], h, cfg.mlp)
+            else:
+                y, _ = M.apply_moe(bp["ffn"], h, cfg.moe, group=cfg.moe_group,
+                                   part=part)
+            if cfg.post_norm:
+                y = L.apply_norm(bp["post_norm2"], y, cfg.norm)
+            x = x + y
+        new_cache = ({"self": new_self, "cross": bc["cross"]}
+                     if cfg.encoder_layers > 0 else new_self)
+        return x, new_cache
+
+    def period_fn(x, scanned):
+        bps, bcs = scanned
+        new_caches = []
+        for pos, bk in enumerate(kinds):
+            x, nc = apply_one(bps[pos], bcs[pos], bk, x)
+            new_caches.append(nc)
+        return x, tuple(new_caches)
+
+    x, new_block_caches = jax.lax.scan(
+        period_fn, x, (params["blocks"], cache["blocks"]),
+        unroll=cfg.scan_periods if unroll else 1)
+
+    new_tail = []
+    for tp, tc, bk in zip(params["tail"], cache["tail"], tail_kinds_of(cfg)):
+        x, nc = apply_one(tp, tc, bk, x)
+        new_tail.append(nc)
+
+    x = L.apply_norm(params["final_norm"], x, cfg.norm)
+    logits = unembed_logits(params, cfg, x)[:, 0]
+    new_cache = dict(cache)
+    new_cache["blocks"] = new_block_caches
+    new_cache["tail"] = tuple(new_tail)
+    return logits, new_cache

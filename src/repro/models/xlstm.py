@@ -1,0 +1,303 @@
+"""xLSTM blocks: mLSTM (matrix memory, parallel-trainable) and sLSTM
+(scalar memory, inherently sequential) — the xlstm-125m mixers.
+
+mLSTM training uses the stabilized *parallel* form (attention-like D-matrix
+of cumulative forget-gate decays), chunked over queries so the materialized
+score slab is (B, H, q_chunk, S).  Decode uses the O(1) stabilized matrix
+recurrence (C, n, m).  sLSTM has no parallel form — training scans the
+sequence (documented in DESIGN.md; xlstm-125m carries 3 such layers).
+
+Head-structured state means TP requires H % tp == 0; xlstm-125m has H = 4,
+so on the 16-wide model axis these blocks replicate (DESIGN.md §5 notes the
+arch is too small for TP16 — DP carries the parallelism).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro.models import layers as L
+from repro.sharding import Partitioner, ShardCtx
+
+
+def _hcol(cfg, sc: ShardCtx):
+    return "model" if sc.tp > 1 and cfg.num_heads % sc.tp == 0 else None
+
+
+# ---------------------------------------------------------------------------
+# mLSTM
+# ---------------------------------------------------------------------------
+
+def mlstm_dims(cfg):
+    di = int(cfg.xlstm_proj_factor * cfg.d_model)
+    H = cfg.num_heads
+    assert di % H == 0
+    return di, H, di // H
+
+
+def init_mlstm(ini: L.Initializer, cfg, sc: ShardCtx = ShardCtx()):
+    d = cfg.d_model
+    di, H, dh = mlstm_dims(cfg)
+    col = _hcol(cfg, sc)
+    params = {
+        "w_up": ini.dense((d, 2 * di)),
+        "conv_w": ini.dense((4, di), fan_in=4),
+        "conv_b": ini.zeros((di,)),
+        "wq": ini.dense((di, di)),
+        "wk": ini.dense((di, di)),
+        "wv": ini.dense((di, di)),
+        "w_i": ini.dense((di, H)),
+        "b_i": ini.zeros((H,)),
+        "w_f": ini.dense((di, H)),
+        "b_f": 3.0 * ini.ones((H,)),     # forget bias ~ sigmoid ≈ 0.95
+        "h_norm": ini.zeros((di,)),
+        "w_down": ini.dense((di, d)),
+    }
+    specs = {
+        "w_up": P(sc.data(d), col),
+        "conv_w": P(None, col),
+        "conv_b": P(col),
+        "wq": P(col, col), "wk": P(col, col), "wv": P(col, col),
+        "w_i": P(col, None), "b_i": P(None),
+        "w_f": P(col, None), "b_f": P(None),
+        "h_norm": P(col),
+        "w_down": P(col, sc.data(d)),
+    }
+    return params, specs
+
+
+def _conv4(x, w, b):
+    K = w.shape[0]
+    y = jnp.zeros_like(x)
+    for k in range(K):
+        shift = K - 1 - k
+        xs = jnp.pad(x, ((0, 0), (shift, 0), (0, 0)))[:, : x.shape[1]]
+        y = y + xs * w[k]
+    return y + b
+
+
+def _mlstm_from_parts(params, xm, xc, cfg):
+    """(xm, xc): (B,S,di) -> q,k,v (B,S,H,dh) f32; log_i, log_f (B,S,H) f32."""
+    di, H, dh = mlstm_dims(cfg)
+    B, S = xm.shape[:2]
+    q = (xc @ params["wq"]).reshape(B, S, H, dh).astype(jnp.float32)
+    k = (xc @ params["wk"]).reshape(B, S, H, dh).astype(jnp.float32) / (dh ** 0.5)
+    v = (xm @ params["wv"]).reshape(B, S, H, dh).astype(jnp.float32)
+    log_i = (xm @ params["w_i"] + params["b_i"]).astype(jnp.float32)          # pre-act
+    log_f = jax.nn.log_sigmoid((xm @ params["w_f"] + params["b_f"]).astype(jnp.float32))
+    return q, k, v, log_i, log_f
+
+
+def _mlstm_qkv_gates(params, x, cfg):
+    """x: (B,S,d) -> qkv/gates + z (B,S,di) + xm (for the conv cache)."""
+    up = x @ params["w_up"]
+    xm, z = jnp.split(up, 2, axis=-1)
+    xc = jax.nn.silu(_conv4(xm, params["conv_w"], params["conv_b"]))
+    q, k, v, log_i, log_f = _mlstm_from_parts(params, xm, xc, cfg)
+    return q, k, v, log_i, log_f, z, xm
+
+
+def mlstm_forward(params, x, cfg, *, q_chunk: int = 512,
+                  part: Partitioner = Partitioner(), return_state: bool = False):
+    """Stabilized parallel mLSTM.  x: (B,S,d) -> (B,S,d)."""
+    B, S, d = x.shape
+    di, H, dh = mlstm_dims(cfg)
+    q, k, v, log_i, log_f, z, xm = _mlstm_qkv_gates(params, x, cfg)
+    cum = jnp.cumsum(log_f, axis=1)                           # (B,S,H)
+
+    qc = min(q_chunk, S)
+    assert S % qc == 0
+
+    def chunk_fn(_, ci):
+        q0 = ci * qc
+        qi = jax.lax.dynamic_slice_in_dim(q, q0, qc, 1)        # (B,qc,H,dh)
+        cum_i = jax.lax.dynamic_slice_in_dim(cum, q0, qc, 1)   # (B,qc,H)
+        # log decay matrix: cum_i - cum_j + log_i_j, causal.
+        logD = (cum_i[:, :, None] - cum[:, None, :] + log_i[:, None, :, :])  # (B,qc,S,H)
+        pos_q = q0 + jnp.arange(qc)
+        causal = pos_q[:, None] >= jnp.arange(S)[None, :]
+        logD = jnp.where(causal[None, :, :, None], logD, -jnp.inf)
+        m = jnp.max(logD, axis=2)                              # (B,qc,H)
+        Dmat = jnp.exp(logD - m[:, :, None])                   # (B,qc,S,H)
+        scores = jnp.einsum("bqhd,bshd->bqsh", qi, k) * Dmat
+        num = jnp.einsum("bqsh,bshd->bqhd", scores, v)
+        denom = jnp.maximum(jnp.abs(scores.sum(2)), jnp.exp(-m))  # (B,qc,H)
+        return None, num / denom[..., None]
+
+    n_chunks = S // qc
+    if n_chunks == 1:
+        _, h = chunk_fn(None, jnp.int32(0))
+        h = h[None]
+    else:
+        _, h = jax.lax.scan(chunk_fn, None, jnp.arange(n_chunks))
+    h = jnp.moveaxis(h, 0, 1).reshape(B, S, di).astype(x.dtype)
+    h = L.rmsnorm(h.reshape(B, S, H, dh), params["h_norm"].reshape(H, dh)).reshape(B, S, di)
+    out = (h * jax.nn.silu(z)) @ params["w_down"]
+    if return_state:
+        # Closed-form final recurrent state (prefill handoff): weights
+        # w_j = exp(cum_S - cum_j + log_i_j - m_S), m_S = max_j (.).
+        logw = cum[:, -1:, :] - cum + log_i                    # (B,S,H)
+        m_S = jnp.max(logw, axis=1)                            # (B,H)
+        w = jnp.exp(logw - m_S[:, None])
+        C = jnp.einsum("bsh,bshv,bshk->bhvk", w, v, k)
+        n = jnp.einsum("bsh,bshk->bhk", w, k)
+        return out, {"C": C, "n": n, "m": m_S, "conv": xm[:, -3:]}
+    return out
+
+
+def init_mlstm_cache(cfg, batch: int, dtype):
+    di, H, dh = mlstm_dims(cfg)
+    return {
+        "C": jnp.zeros((batch, H, dh, dh), jnp.float32),
+        "n": jnp.zeros((batch, H, dh), jnp.float32),
+        "m": jnp.full((batch, H), -jnp.inf, jnp.float32),
+        "conv": jnp.zeros((batch, 3, di), dtype),   # last 3 pre-conv xm values
+    }
+
+
+def mlstm_cache_specs(cfg, sc: ShardCtx, dp):
+    col = _hcol(cfg, sc)
+    return {"C": P(dp, col, None, None), "n": P(dp, col, None), "m": P(dp, col),
+            "conv": P(dp, None, col)}
+
+
+def mlstm_decode(params, x, cache, cfg):
+    """One-token stabilized recurrence.  x: (B,1,d)."""
+    B = x.shape[0]
+    di, H, dh = mlstm_dims(cfg)
+    up = x[:, 0] @ params["w_up"]
+    xm, z = jnp.split(up, 2, axis=-1)                          # (B,di)
+    window = jnp.concatenate([cache["conv"].astype(xm.dtype), xm[:, None]], axis=1)
+    xc = jax.nn.silu(jnp.einsum("bkd,kd->bd", window, params["conv_w"])
+                     + params["conv_b"])
+    q, k, v, log_i, log_f = _mlstm_from_parts(
+        params, xm[:, None], xc[:, None], cfg)
+    z = z[:, None]                                             # (B,1,di)
+    q, k, v = q[:, 0], k[:, 0], v[:, 0]                        # (B,H,dh)
+    log_i, log_f = log_i[:, 0], log_f[:, 0]                    # (B,H)
+    m_new = jnp.maximum(log_f + cache["m"], log_i)
+    f_eff = jnp.exp(log_f + cache["m"] - m_new)
+    i_eff = jnp.exp(log_i - m_new)
+    C = f_eff[..., None, None] * cache["C"] + i_eff[..., None, None] * (
+        v[..., :, None] * k[..., None, :]
+    )                                                          # (B,H,dh_v,dh_k)
+    n = f_eff[..., None] * cache["n"] + i_eff[..., None] * k
+    num = jnp.einsum("bhvk,bhk->bhv", C, q)
+    denom = jnp.maximum(jnp.abs(jnp.einsum("bhk,bhk->bh", n, q)), jnp.exp(-m_new))
+    h = (num / denom[..., None]).reshape(B, 1, di).astype(x.dtype)
+    h = L.rmsnorm(h.reshape(B, 1, H, dh), params["h_norm"].reshape(H, dh)).reshape(B, 1, di)
+    y = (h * jax.nn.silu(z)) @ params["w_down"]
+    return y, {"C": C, "n": n, "m": m_new, "conv": window[:, 1:]}
+
+
+# ---------------------------------------------------------------------------
+# sLSTM
+# ---------------------------------------------------------------------------
+
+def slstm_dims(cfg):
+    H = cfg.num_heads
+    assert cfg.d_model % H == 0
+    return H, cfg.d_model // H
+
+
+def init_slstm(ini: L.Initializer, cfg, sc: ShardCtx = ShardCtx()):
+    d = cfg.d_model
+    H, dh = slstm_dims(cfg)
+    col = _hcol(cfg, sc)
+    f34 = -(-int(8 * d / 3) // 64) * 64   # GLU up width, 4/3 * 2 * d rounded
+    params = {
+        "w": ini.dense((4, d, d)),                 # z, i, f, o input weights
+        "r": ini.dense((4, H, dh, dh), fan_in=dh),  # block-diagonal recurrent
+        "b": ini.zeros((4, d)),
+        "h_norm": ini.zeros((d,)),
+        "up": ini.dense((d, f34)),
+        "down": ini.dense((f34 // 2, d), fan_in=f34 // 2),
+    }
+    specs = {
+        "w": P(None, sc.data(d), None),
+        "r": P(None, col, None, None),
+        "b": P(None, None),
+        "h_norm": P(None),
+        "up": P(sc.data(d), sc.col(f34)),
+        "down": P(sc.col(f34 // 2), sc.data(d)),
+    }
+    return params, specs
+
+
+def _slstm_step(params, x_t, state, H, dh):
+    """x_t: (B,d); state: (c, n, h, m) each (B,H,dh) / (B,H) for m."""
+    c, n, h, m = state
+    B = x_t.shape[0]
+    wx = jnp.einsum("bd,gde->gbe", x_t.astype(jnp.float32), params["w"].astype(jnp.float32))
+    rh = jnp.einsum("bhe,ghef->gbhf", h, params["r"].astype(jnp.float32))
+    pre = wx.reshape(4, B, H, dh) + rh + params["b"].astype(jnp.float32).reshape(4, 1, H, dh)
+    z_t = jnp.tanh(pre[0])
+    log_i = pre[1].mean(-1)                     # per-head scalar gates
+    log_f = jax.nn.log_sigmoid(pre[2].mean(-1))
+    o_t = jax.nn.sigmoid(pre[3])
+    m_new = jnp.maximum(log_f + m, log_i)
+    i_eff = jnp.exp(log_i - m_new)[..., None]
+    f_eff = jnp.exp(log_f + m - m_new)[..., None]
+    c = f_eff * c + i_eff * z_t
+    n = f_eff * n + i_eff
+    h = o_t * c / jnp.maximum(n, 1e-6)
+    return (c, n, h, m_new)
+
+
+def slstm_forward(params, x, cfg, *, part: Partitioner = Partitioner(),
+                  return_state: bool = False):
+    """x: (B,S,d) -> (B,S,d).  Sequential scan (no parallel form exists)."""
+    B, S, d = x.shape
+    H, dh = slstm_dims(cfg)
+    state0 = (
+        jnp.zeros((B, H, dh), jnp.float32),
+        jnp.zeros((B, H, dh), jnp.float32),
+        jnp.zeros((B, H, dh), jnp.float32),
+        jnp.full((B, H), -jnp.inf, jnp.float32),
+    )
+
+    def step(state, x_t):
+        state = _slstm_step(params, x_t, state, H, dh)
+        return state, state[2]
+
+    state, hs = jax.lax.scan(step, state0, jnp.moveaxis(x, 1, 0))
+    h = jnp.moveaxis(hs, 0, 1).reshape(B, S, d).astype(x.dtype)
+    h = L.rmsnorm(h, params["h_norm"])
+    u = h @ params["up"]
+    a, g = jnp.split(u, 2, axis=-1)
+    out = (a * jax.nn.gelu(g)) @ params["down"]
+    if return_state:
+        c, n, hh, m = state
+        return out, {"c": c, "n": n, "h": hh, "m": m}
+    return out
+
+
+def init_slstm_cache(cfg, batch: int, dtype):
+    H, dh = slstm_dims(cfg)
+    del dtype
+    return {
+        "c": jnp.zeros((batch, H, dh), jnp.float32),
+        "n": jnp.zeros((batch, H, dh), jnp.float32),
+        "h": jnp.zeros((batch, H, dh), jnp.float32),
+        "m": jnp.full((batch, H), -jnp.inf, jnp.float32),
+    }
+
+
+def slstm_cache_specs(cfg, sc: ShardCtx, dp):
+    col = _hcol(cfg, sc)
+    return {"c": P(dp, col, None), "n": P(dp, col, None),
+            "h": P(dp, col, None), "m": P(dp, col)}
+
+
+def slstm_decode(params, x, cache, cfg):
+    H, dh = slstm_dims(cfg)
+    state = (cache["c"], cache["n"], cache["h"], cache["m"])
+    state = _slstm_step(params, x[:, 0], state, H, dh)
+    c, n, h, m = state
+    B, d = x.shape[0], x.shape[2]
+    hx = L.rmsnorm(h.reshape(B, 1, d).astype(x.dtype), params["h_norm"])
+    u = hx @ params["up"]
+    a, g = jnp.split(u, 2, axis=-1)
+    y = (a * jax.nn.gelu(g)) @ params["down"]
+    return y, {"c": c, "n": n, "h": h, "m": m}

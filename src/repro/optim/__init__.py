@@ -1,0 +1,26 @@
+"""Optimizers + the paper's bounded-staleness asynchronous update."""
+from repro.optim.adamw import (
+    AdamWState,
+    AdafactorState,
+    Optimizer,
+    adafactor,
+    adamw,
+    clip_by_global_norm,
+    global_norm,
+    warmup_cosine,
+)
+from repro.optim.async_update import (
+    AsyncGradState,
+    async_state_specs,
+    init_async_grads,
+    push_pop,
+    staleness_beta,
+)
+from repro.optim import compression
+
+__all__ = [
+    "AdamWState", "AdafactorState", "Optimizer", "adafactor", "adamw",
+    "clip_by_global_norm", "global_norm", "warmup_cosine",
+    "AsyncGradState", "async_state_specs", "init_async_grads", "push_pop",
+    "staleness_beta", "compression",
+]

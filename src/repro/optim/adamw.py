@@ -1,0 +1,175 @@
+"""Optimizers as pure functions over parameter pytrees.
+
+* AdamW — fp32 (or bf16, for the 400B-class configs) first/second moments.
+* Adafactor — factored second moment (rank-1 row/col statistics) for the
+  >=100B MoE archs where full AdamW state would not fit a v5e pod
+  (DESIGN.md §5 memory budget).
+
+Every optimizer exposes the same triple:
+    init(params)                      -> state
+    update(grads, state, params, lr)  -> (new_params, new_state)
+    state_specs(param_specs)          -> state spec pytree  (for pjit)
+"""
+from __future__ import annotations
+
+import math
+from typing import Any, Callable, NamedTuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+
+class Optimizer(NamedTuple):
+    init: Callable
+    update: Callable          # (grads, state, params, lr) -> (params, state)
+    state_specs: Callable     # (param_specs, abstract_params) -> state specs
+
+
+class AdamWState(NamedTuple):
+    count: jax.Array
+    m: Any
+    v: Any
+
+
+class _Out(NamedTuple):
+    """Per-leaf multi-output marker; never appears inside params trees, so
+    tree.map(is_leaf=_Out) can unzip without colliding with tuple nodes."""
+    items: tuple
+
+
+def _unzip(out, n):
+    pick = lambda i: jax.tree.map(lambda t: t.items[i], out,
+                                  is_leaf=lambda t: isinstance(t, _Out))
+    return tuple(pick(i) for i in range(n))
+
+
+def adamw(*, b1=0.9, b2=0.95, eps=1e-8, weight_decay=0.1,
+          state_dtype=jnp.float32) -> Optimizer:
+    def init(params):
+        zeros = lambda p: jnp.zeros(p.shape, state_dtype)
+        return AdamWState(count=jnp.zeros((), jnp.int32),
+                          m=jax.tree.map(zeros, params),
+                          v=jax.tree.map(zeros, params))
+
+    def update(grads, state, params, lr):
+        c = state.count + 1
+        bc1 = 1.0 - b1 ** c.astype(jnp.float32)
+        bc2 = 1.0 - b2 ** c.astype(jnp.float32)
+
+        def leaf(g, m, v, p):
+            g = g.astype(state_dtype)
+            m = b1 * m + (1 - b1) * g
+            v = b2 * v + (1 - b2) * g * g
+            upd = (m / bc1) / (jnp.sqrt(v / bc2) + eps)
+            upd = upd + weight_decay * p.astype(state_dtype)
+            new_p = (p.astype(jnp.float32) - lr * upd.astype(jnp.float32)).astype(p.dtype)
+            return _Out((new_p, m, v))
+
+        out = jax.tree.map(leaf, grads, state.m, state.v, params)
+        new_p, new_m, new_v = _unzip(out, 3)
+        return new_p, AdamWState(count=c, m=new_m, v=new_v)
+
+    def state_specs(param_specs, abstract_params=None):
+        del abstract_params
+        return AdamWState(count=P(), m=param_specs, v=param_specs)
+
+    return Optimizer(init, update, state_specs)
+
+
+class AdafactorState(NamedTuple):
+    count: jax.Array
+    m: Any        # bf16 momentum (or None-leaves when disabled)
+    vr: Any       # row statistics  shape[:-1]
+    vc: Any       # col statistics  shape[:-2] + shape[-1:]
+    v: Any        # unfactored second moment for rank<2 leaves
+
+
+def _factored(p) -> bool:
+    return p.ndim >= 2 and p.shape[-1] >= 8 and p.shape[-2] >= 8
+
+
+def adafactor(*, b2_decay=0.8, eps=1e-30, clip_threshold=1.0,
+              momentum=0.9, momentum_dtype=jnp.bfloat16,
+              weight_decay=0.0) -> Optimizer:
+    def init(params):
+        def vr(p):
+            return jnp.zeros(p.shape[:-1], jnp.float32) if _factored(p) else jnp.zeros((0,))
+        def vc(p):
+            return (jnp.zeros(p.shape[:-2] + p.shape[-1:], jnp.float32)
+                    if _factored(p) else jnp.zeros((0,)))
+        def vf(p):
+            return jnp.zeros((0,)) if _factored(p) else jnp.zeros(p.shape, jnp.float32)
+        m = jax.tree.map(lambda p: jnp.zeros(p.shape, momentum_dtype), params)
+        return AdafactorState(count=jnp.zeros((), jnp.int32), m=m,
+                              vr=jax.tree.map(vr, params),
+                              vc=jax.tree.map(vc, params),
+                              v=jax.tree.map(vf, params))
+
+    def update(grads, state, params, lr):
+        c = state.count + 1
+        beta2t = 1.0 - c.astype(jnp.float32) ** (-b2_decay)
+
+        def leaf(g, m, vr, vc, v, p):
+            g32 = g.astype(jnp.float32)
+            g2 = g32 * g32 + eps
+            if _factored(p):
+                vr = beta2t * vr + (1 - beta2t) * g2.mean(-1)
+                vc = beta2t * vc + (1 - beta2t) * g2.mean(-2)
+                r = vr / jnp.maximum(vr.mean(-1, keepdims=True), eps)
+                upd = g32 / (jnp.sqrt(r)[..., None] * jnp.sqrt(vc)[..., None, :] + eps)
+            else:
+                v = beta2t * v + (1 - beta2t) * g2
+                upd = g32 / (jnp.sqrt(v) + eps)
+            rms = jnp.sqrt(jnp.mean(upd * upd) + eps)
+            upd = upd / jnp.maximum(1.0, rms / clip_threshold)
+            if momentum:
+                m = (momentum * m.astype(jnp.float32) + (1 - momentum) * upd).astype(momentum_dtype)
+                upd = m.astype(jnp.float32)
+            if weight_decay:
+                upd = upd + weight_decay * p.astype(jnp.float32)
+            return _Out(((p.astype(jnp.float32) - lr * upd).astype(p.dtype), m, vr, vc, v))
+
+        out = jax.tree.map(leaf, grads, state.m, state.vr, state.vc, state.v, params)
+        new_p, new_m, new_vr, new_vc, new_v = _unzip(out, 5)
+        return new_p, AdafactorState(count=c, m=new_m, vr=new_vr, vc=new_vc, v=new_v)
+
+    def state_specs(param_specs, abstract_params):
+        def vr_spec(s, p):
+            return P(*s[:-1]) if _factored(p) else P(None)
+        def vc_spec(s, p):
+            return P(*(s[:-2] + s[-1:])) if _factored(p) else P(None)
+        def v_spec(s, p):
+            return P(None) if _factored(p) else s
+        as_p = lambda f: jax.tree.map(f, param_specs, abstract_params,
+                                      is_leaf=lambda s: isinstance(s, P))
+        return AdafactorState(
+            count=P(),
+            m=param_specs,
+            vr=as_p(vr_spec),
+            vc=as_p(vc_spec),
+            v=as_p(v_spec),
+        )
+
+    return Optimizer(init, update, state_specs)
+
+
+def global_norm(tree) -> jax.Array:
+    sq = jax.tree.map(lambda g: jnp.sum(jnp.square(g.astype(jnp.float32))), tree)
+    return jnp.sqrt(sum(jax.tree.leaves(sq)))
+
+
+def clip_by_global_norm(tree, max_norm: float):
+    n = global_norm(tree)
+    scale = jnp.minimum(1.0, max_norm / jnp.maximum(n, 1e-12))
+    return jax.tree.map(lambda g: (g.astype(jnp.float32) * scale).astype(g.dtype), tree), n
+
+
+def warmup_cosine(lr: float, warmup: int, total: int, final_frac: float = 0.1):
+    def schedule(step):
+        s = step.astype(jnp.float32)
+        warm = lr * jnp.minimum(1.0, s / max(warmup, 1))
+        t = jnp.clip((s - warmup) / max(total - warmup, 1), 0.0, 1.0)
+        cos = final_frac * lr + (1 - final_frac) * lr * 0.5 * (1 + jnp.cos(math.pi * t))
+        return jnp.where(s < warmup, warm, cos)
+    return schedule

@@ -1,0 +1,76 @@
+"""Gradient compression codec: int8 quantization with per-block scales.
+
+Used as an optional wire format for the cross-pod gradient exchange (the
+"pod" axis rides DCN, ~25x slower than ICI): quantize -> all-reduce in low
+precision -> dequantize.  The codec is error-feedback-free but unbiased-ish
+(symmetric stochastic-free rounding); an error-feedback accumulator is
+provided for drift-free long runs.
+
+Under pjit we expose the codec as a pair of pure functions applied around
+the gradient all-reduce point; the roundtrip is also used by tests to bound
+the quantization error (property test: |dequant(quant(g)) - g| <= scale/2).
+"""
+from __future__ import annotations
+
+from typing import Any, NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+BLOCK = 256
+
+
+class Compressed(NamedTuple):
+    q: Any          # int8 pytree (padded to BLOCK multiples, flattened)
+    scales: Any     # fp32 per-block scales
+    shapes: Any     # static: original shapes
+
+
+def _pad_len(n: int) -> int:
+    return -(-n // BLOCK) * BLOCK
+
+
+def quantize(tree) -> Compressed:
+    def leaf(g):
+        flat = g.astype(jnp.float32).reshape(-1)
+        pad = _pad_len(flat.size)
+        flat = jnp.pad(flat, (0, pad - flat.size)).reshape(-1, BLOCK)
+        scale = jnp.max(jnp.abs(flat), axis=1, keepdims=True) / 127.0
+        q = jnp.round(flat / jnp.maximum(scale, 1e-12)).astype(jnp.int8)
+        return q, scale[:, 0]
+
+    qs = jax.tree.map(lambda g: leaf(g)[0], tree)
+    ss = jax.tree.map(lambda g: leaf(g)[1], tree)
+    shapes = jax.tree.map(lambda g: g.shape, tree)
+    return Compressed(q=qs, scales=ss, shapes=shapes)
+
+
+def dequantize(c: Compressed, like):
+    def leaf(q, s, g):
+        flat = q.astype(jnp.float32) * s[:, None]
+        return flat.reshape(-1)[: g.size].reshape(g.shape).astype(g.dtype)
+
+    return jax.tree.map(leaf, c.q, c.scales, like)
+
+
+def roundtrip(tree):
+    """quantize -> dequantize (what the wire does to a gradient)."""
+    return dequantize(quantize(tree), tree)
+
+
+class ErrorFeedback(NamedTuple):
+    residual: Any
+
+
+def init_error_feedback(params) -> ErrorFeedback:
+    return ErrorFeedback(residual=jax.tree.map(
+        lambda p: jnp.zeros(p.shape, jnp.float32), params))
+
+
+def compress_with_feedback(tree, ef: ErrorFeedback):
+    """Error-feedback compression: quantize (g + residual), carry the
+    quantization error into the next step (Karimireddy et al. style)."""
+    corrected = jax.tree.map(lambda g, r: g.astype(jnp.float32) + r, tree, ef.residual)
+    sent = roundtrip(corrected)
+    residual = jax.tree.map(lambda c, s: c - s.astype(jnp.float32), corrected, sent)
+    return sent, ErrorFeedback(residual=residual)

@@ -1,0 +1,131 @@
+"""Sharding policy: logical placement rules -> PartitionSpecs.
+
+Physical mesh axes (DESIGN.md §5):
+  "pod"    outer data parallelism across pods (never shards weights)
+  "data"   inner data parallelism; also the FSDP axis for weights
+  "model"  tensor parallelism (column/row parallel, experts, vocab)
+
+Two objects drive every placement decision:
+
+* ``ShardCtx`` — static divisibility-aware rules used at *init* time to build
+  the parameter PartitionSpec pytree.  A dimension is only sharded when the
+  axis size divides it; otherwise it silently falls back to replication (the
+  caller can inspect the produced spec).  ``ShardCtx(1, 1)`` (the default for
+  CPU tests) replicates everything.
+
+* ``Partitioner`` — runtime helper bound to a mesh that applies activation
+  sharding constraints (``with_sharding_constraint``) and knows the dp/tp
+  axis names.  A ``Partitioner(None)`` is a no-op so model code can call it
+  unconditionally.
+
+Per-arch attention parallelism (DESIGN.md §5): heads divisible by the model
+axis -> Megatron TP; otherwise -> sequence parallelism (activations sharded
+over S on the model axis, attention weights replicated on "model" but FSDP
+on "data").  ``ShardCtx.attn_tp(cfg)`` makes that call.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Optional
+
+import jax
+from jax.sharding import Mesh, NamedSharding
+from jax.sharding import PartitionSpec as P
+
+
+@dataclass(frozen=True)
+class ShardCtx:
+    """Static parameter-placement rules."""
+
+    tp: int = 1                       # size of the "model" axis
+    dp: int = 1                       # size of the "data" axis (FSDP)
+    fsdp: bool = True                 # shard weights over "data" too
+
+    def col(self, dim: int) -> Optional[str]:
+        """Tensor-parallel (column/row) placement for an out/in feature dim."""
+        return "model" if self.tp > 1 and dim % self.tp == 0 else None
+
+    def data(self, dim: int) -> Optional[str]:
+        """FSDP placement for the complementary weight dim."""
+        return "data" if self.fsdp and self.dp > 1 and dim % self.dp == 0 else None
+
+    def dense_col(self, d_in: int, d_out: int) -> P:
+        """(d_in, d_out) weight, column-parallel on d_out."""
+        c = self.col(d_out)
+        d = self.data(d_in)
+        if c is None and d is None and self.fsdp and self.dp > 1:
+            # keep at least FSDP on the out dim if the in dim doesn't divide
+            return P(None, self.data(d_out))
+        return P(d, c)
+
+    def dense_row(self, d_in: int, d_out: int) -> P:
+        """(d_in, d_out) weight, row-parallel on d_in."""
+        return P(self.col(d_in), self.data(d_out))
+
+    def replicated_fsdp(self, d_in: int) -> P:
+        """No TP (e.g. head count not divisible): FSDP on dim 0 only."""
+        return P(self.data(d_in), None)
+
+    def vec(self, dim: int) -> P:
+        """1-D bias/scale aligned with a column-parallel out dim."""
+        return P(self.col(dim))
+
+    def attn_tp(self, n_heads: int, n_kv: int) -> bool:
+        """True -> Megatron TP attention; False -> sequence-parallel."""
+        del n_kv  # KV replication is decided separately (kv_col)
+        return self.tp == 1 or n_heads % self.tp == 0
+
+    def kv_col(self, n_kv: int, head_dim: int) -> Optional[str]:
+        return "model" if self.tp > 1 and n_kv % self.tp == 0 else None
+
+
+@dataclass(frozen=True)
+class Partitioner:
+    """Runtime activation-sharding helper.  ``mesh=None`` -> no-op."""
+
+    mesh: Optional[Mesh] = None
+    dp_axes: tuple[str, ...] = ("data",)   # ("pod", "data") multi-pod
+    tp_axis: str = "model"
+    sc: ShardCtx = field(default_factory=ShardCtx)
+
+    @property
+    def dp(self):
+        return tuple(self.dp_axes) if self.mesh is not None else None
+
+    def constrain(self, x, spec: P):
+        if self.mesh is None:
+            return x
+        return jax.lax.with_sharding_constraint(x, NamedSharding(self.mesh, spec))
+
+    # -- common activation layouts ------------------------------------------
+    def tokens(self, x):                       # (B, S)
+        return self.constrain(x, P(self.dp, None))
+
+    def hidden(self, x):                       # (B, S, D) TP region
+        return self.constrain(x, P(self.dp, None, None))
+
+    def hidden_sp(self, x):                    # (B, S, D) sequence-parallel region
+        return self.constrain(x, P(self.dp, self.tp_axis, None))
+
+    def heads(self, x, n_heads: int):          # (B, S, H, Hd)
+        c = self.sc.col(n_heads) if self.sc.tp > 1 else None
+        return self.constrain(x, P(self.dp, None, c, None))
+
+    def ffn_hidden(self, x, f: int):           # (B, S, F) column-parallel
+        return self.constrain(x, P(self.dp, None, self.sc.col(f)))
+
+    def logits(self, x, vocab: int):           # (B, S, V) vocab-sharded
+        return self.constrain(x, P(self.dp, None, self.sc.col(vocab)))
+
+
+def named(mesh: Optional[Mesh], spec: P):
+    """NamedSharding or None (for jit in_shardings on an inactive mesh)."""
+    return None if mesh is None else NamedSharding(mesh, spec)
+
+
+def spec_tree_to_shardings(mesh: Mesh, specs):
+    return jax.tree.map(
+        lambda s: NamedSharding(mesh, s),
+        specs,
+        is_leaf=lambda s: isinstance(s, P),
+    )

@@ -1,0 +1,305 @@
+"""Step builders: train_step / prefill_step / serve_step as pjit-able pure
+functions, plus the abstract-state and input-spec machinery the multi-pod
+dry-run lowers against (no allocation — everything ShapeDtypeStruct).
+
+This is the single place where (arch config x input shape x mesh) becomes a
+concrete jittable program with in/out shardings.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding
+from jax.sharding import PartitionSpec as P
+
+from repro.configs.base import ModelConfig, RunConfig, ShapeConfig
+from repro.models import attention as A
+from repro.models import transformer as T
+from repro.optim import (adamw, adafactor, clip_by_global_norm,
+                         init_async_grads, push_pop, staleness_beta,
+                         warmup_cosine, compression)
+from repro.sharding import Partitioner, ShardCtx
+
+
+class TrainState(NamedTuple):
+    step: jax.Array
+    params: Any
+    opt: Any
+    async_grads: Any = None       # AsyncGradState when rcfg.async_tau > 0
+
+
+# ---------------------------------------------------------------------------
+# Mesh plumbing
+# ---------------------------------------------------------------------------
+
+def mesh_axes(mesh: Optional[Mesh], fsdp: bool = True, pure_dp: bool = False):
+    """(dp_axes, tp_axis, sc) for a production mesh (or CPU fallback)."""
+    if mesh is None:
+        return (), "model", ShardCtx(tp=1, dp=1, fsdp=fsdp)
+    names = mesh.axis_names
+    if pure_dp:
+        # fold "model" into data parallelism: no TP anywhere; weights are
+        # FSDP over "data" only (small-model right-sizing, §Perf q5)
+        dp_axes = tuple(names)
+        tp = 1
+    else:
+        dp_axes = tuple(a for a in names if a != "model")
+        tp = mesh.shape["model"] if "model" in names else 1
+    dp = 1
+    for a in dp_axes:
+        dp *= mesh.shape[a]
+    if pure_dp:
+        dp_for_fsdp = mesh.shape["data"]  # shard weights over "data" only
+        return dp_axes, "model", ShardCtx(tp=1, dp=dp_for_fsdp, fsdp=fsdp)
+    return dp_axes, "model", ShardCtx(tp=tp, dp=dp, fsdp=fsdp)
+
+
+def make_partitioner(mesh: Optional[Mesh], global_batch: int,
+                     fsdp: bool = True, pure_dp: bool = False) -> Partitioner:
+    """Batch placement falls back to replication when dp doesn't divide B
+    (long_500k's batch of 1).  fsdp=False keeps weights replicated over the
+    data axis (no ZeRO gathers); pure_dp=True folds the model axis into
+    data parallelism — right for models whose full state fits a chip
+    (§Perf q4/q5)."""
+    dp_axes, tp_axis, sc = mesh_axes(mesh, fsdp, pure_dp)
+    dp = 1
+    for a in dp_axes:
+        dp *= mesh.shape[a] if mesh else 1
+    if dp > 1 and global_batch % dp != 0:
+        dp_axes = ()
+    return Partitioner(mesh=mesh, dp_axes=dp_axes, tp_axis=tp_axis, sc=sc)
+
+
+def make_mesh_info(part: Partitioner, cfg: ModelConfig, batch: int, seq_len: int):
+    """MeshInfo for sequence-sharded decode attention (None on CPU)."""
+    if part.mesh is None:
+        return None
+    sp = T.seq_shard_axes(cfg, batch, seq_len,
+                          part.sc, part.dp_axes or None)
+    if not sp:
+        return None
+    return A.MeshInfo(mesh=part.mesh, dp_axes=part.dp_axes, sp_axes=sp)
+
+
+# ---------------------------------------------------------------------------
+# Inputs
+# ---------------------------------------------------------------------------
+
+def input_specs(cfg: ModelConfig, shape: ShapeConfig, part: Partitioner):
+    """(abstract_batch, batch_pspecs) for one (arch x shape) cell."""
+    B, S = shape.global_batch, shape.seq_len
+    dp = part.dp
+    dt = jnp.dtype(cfg.dtype)
+    i32 = jnp.int32
+    sds = jax.ShapeDtypeStruct
+    if shape.kind in ("train", "prefill"):
+        batch = {"tokens": sds((B, S), i32)}
+        specs = {"tokens": P(dp, None)}
+        if shape.kind == "train":
+            batch["labels"] = sds((B, S), i32)
+            specs["labels"] = P(dp, None)
+        if cfg.frontend == "audio":
+            batch["frames"] = sds((B, cfg.encoder_len, cfg.d_model), dt)
+            specs["frames"] = P(dp, None, None)
+        if cfg.frontend == "vision":
+            batch["patches"] = sds((B, cfg.frontend_len, cfg.d_model), dt)
+            specs["patches"] = P(dp, None, None)
+        return batch, specs
+    # decode: one new token against a seq_len-deep cache
+    batch = {"tokens": sds((B, 1), i32), "length": sds((), i32)}
+    specs = {"tokens": P(dp, None), "length": P()}
+    return batch, specs
+
+
+# ---------------------------------------------------------------------------
+# Loss
+# ---------------------------------------------------------------------------
+
+def lm_loss(params, cfg: ModelConfig, hidden, labels, part: Partitioner,
+            *, chunk: int = 512):
+    """Chunked cross-entropy: logits materialize one (B, chunk, V) slab at a
+    time (checkpointed, so backward recomputes them) — the full (B, S, V)
+    fp32 logits tensor never exists.  labels == -1 are ignored."""
+    B, S, D = hidden.shape
+    c = min(chunk, S)
+    while S % c != 0:
+        c -= 1
+    nc = S // c
+
+    vocab = T.padded_vocab(cfg, part.sc)
+
+    @jax.checkpoint
+    def piece(h, l):
+        logits = T.unembed_logits(params, cfg, h).astype(jnp.float32)
+        logits = part.logits(logits, vocab)
+        lse = jax.scipy.special.logsumexp(logits, axis=-1)
+        ll = jnp.take_along_axis(logits, jnp.maximum(l, 0)[..., None], axis=-1)[..., 0]
+        mask = l >= 0
+        return jnp.where(mask, lse - ll, 0.0).sum(), mask.sum()
+
+    def body(carry, i):
+        h = jax.lax.dynamic_slice_in_dim(hidden, i * c, c, axis=1)
+        l = jax.lax.dynamic_slice_in_dim(labels, i * c, c, axis=1)
+        s, n = piece(h, l)
+        return (carry[0] + s, carry[1] + n), None
+
+    (total, count), _ = jax.lax.scan(
+        body, (jnp.zeros(()), jnp.zeros((), jnp.int32)), jnp.arange(nc))
+    return total / jnp.maximum(count, 1).astype(jnp.float32)
+
+
+# ---------------------------------------------------------------------------
+# Train
+# ---------------------------------------------------------------------------
+
+def make_optimizer(rcfg: RunConfig):
+    if rcfg.optimizer == "adafactor":
+        return adafactor(weight_decay=rcfg.weight_decay)
+    state_dtype = jnp.bfloat16 if rcfg.optimizer == "adamw_bf16" else jnp.float32
+    return adamw(b1=rcfg.beta1, b2=rcfg.beta2, weight_decay=rcfg.weight_decay,
+                 state_dtype=state_dtype)
+
+
+def make_train_step(cfg: ModelConfig, rcfg: RunConfig, part: Partitioner):
+    opt = make_optimizer(rcfg)
+    schedule = warmup_cosine(rcfg.learning_rate, rcfg.warmup_steps, rcfg.total_steps)
+    beta = staleness_beta(rcfg.async_tau) if (
+        rcfg.async_tau > 0 and rcfg.staleness_damping) else 1.0
+
+    def loss_fn(params, batch):
+        hidden, _, moe_loss = T.forward(params, cfg, batch, part=part,
+                                        remat=rcfg.remat, q_chunk=rcfg.q_chunk,
+                                        unroll=rcfg.scan_unroll)
+        loss = lm_loss(params, cfg, hidden, batch["labels"], part,
+                       chunk=rcfg.loss_chunk)
+        total = loss + rcfg.moe_loss_weight * moe_loss
+        return total, {"loss": loss, "moe_loss": moe_loss}
+
+    def compute_grads(params, batch):
+        if rcfg.microbatches <= 1:
+            (_, metrics), grads = jax.value_and_grad(loss_fn, has_aux=True)(params, batch)
+            return grads, metrics
+        mb = rcfg.microbatches
+        split = jax.tree.map(lambda x: x.reshape((mb, x.shape[0] // mb) + x.shape[1:]),
+                             batch)
+
+        def body(acc, micro):
+            (_, metrics), grads = jax.value_and_grad(loss_fn, has_aux=True)(params, micro)
+            acc = jax.tree.map(lambda a, g: a + g.astype(a.dtype), acc, grads)
+            return acc, metrics
+
+        zeros = jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params)
+        grads, metrics = jax.lax.scan(body, zeros, split)
+        grads = jax.tree.map(lambda g: g / mb, grads)
+        metrics = jax.tree.map(lambda m: m.mean(), metrics)
+        return grads, metrics
+
+    def train_step(state: TrainState, batch):
+        grads, metrics = compute_grads(state.params, batch)
+        if rcfg.grad_compression == "int8":
+            grads = compression.roundtrip(grads)   # wire codec for the DCN hop
+        async_grads = state.async_grads
+        if rcfg.async_tau > 0:
+            grads, async_grads = push_pop(async_grads, grads)
+        grads, gnorm = clip_by_global_norm(grads, rcfg.grad_clip)
+        lr = schedule(state.step) * beta
+        params, opt_state = opt.update(grads, state.opt, state.params, lr)
+        metrics.update({"grad_norm": gnorm, "lr": lr})
+        return TrainState(step=state.step + 1, params=params, opt=opt_state,
+                          async_grads=async_grads), metrics
+
+    return train_step, opt
+
+
+def abstract_train_state(cfg: ModelConfig, rcfg: RunConfig, part: Partitioner):
+    """(state_shapes, state_pspecs) — no device allocation."""
+    opt = make_optimizer(rcfg)
+    cap = {}
+
+    def build(key):
+        params, specs = T.init_params(cfg, key, part.sc)
+        cap["pspecs"] = specs
+        st = TrainState(step=jnp.zeros((), jnp.int32), params=params,
+                        opt=opt.init(params),
+                        async_grads=(init_async_grads(params, rcfg.async_tau)
+                                     if rcfg.async_tau > 0 else None))
+        return st
+
+    shapes = jax.eval_shape(build, jax.random.key(0))
+    pspecs = cap["pspecs"]
+    ospecs = opt.state_specs(pspecs, shapes.params)
+    aspecs = None
+    if rcfg.async_tau > 0:
+        from repro.optim import async_state_specs
+        aspecs = async_state_specs(pspecs, rcfg.async_tau)
+    sspecs = TrainState(step=P(), params=pspecs, opt=ospecs, async_grads=aspecs)
+    return shapes, sspecs
+
+
+def init_train_state(cfg: ModelConfig, rcfg: RunConfig, part: Partitioner,
+                     key: jax.Array) -> tuple[TrainState, Any]:
+    """Materialized state (CPU tests / real runs).  Returns (state, specs)."""
+    opt = make_optimizer(rcfg)
+    params, pspecs = T.init_params(cfg, key, part.sc)
+    st = TrainState(step=jnp.zeros((), jnp.int32), params=params,
+                    opt=opt.init(params),
+                    async_grads=(init_async_grads(params, rcfg.async_tau)
+                                 if rcfg.async_tau > 0 else None))
+    _, sspecs = abstract_train_state(cfg, rcfg, part)
+    return st, sspecs
+
+
+# ---------------------------------------------------------------------------
+# Serve (prefill + decode)
+# ---------------------------------------------------------------------------
+
+def make_prefill_step(cfg: ModelConfig, part: Partitioner, *, q_chunk: int = 1024,
+                      capacity_len: int = 0, unroll: bool = False):
+    def prefill_step(params, batch):
+        hidden, cache, _ = T.forward(params, cfg, batch, part=part,
+                                     remat="none", q_chunk=q_chunk,
+                                     return_cache=True, capacity_len=capacity_len,
+                                     unroll=unroll)
+        logits = T.unembed_logits(params, cfg, hidden[:, -1:])[:, 0]
+        return logits, cache
+    return prefill_step
+
+
+def make_serve_step(cfg: ModelConfig, part: Partitioner, shape: ShapeConfig,
+                    *, unroll: bool = False):
+    mesh_info = make_mesh_info(part, cfg, shape.global_batch, shape.seq_len)
+
+    def serve_step(params, cache, tokens, length):
+        return T.decode_step(params, cfg, cache, tokens, length,
+                             part=part, mesh_info=mesh_info, unroll=unroll)
+    return serve_step
+
+
+def abstract_cache(cfg: ModelConfig, shape: ShapeConfig, part: Partitioner):
+    """(cache_shapes, cache_pspecs) for a decode cell."""
+    cap = {}
+
+    def build(_):
+        cache, specs = T.init_cache(cfg, shape.global_batch, shape.seq_len,
+                                    part.sc, dp=part.dp,
+                                    enc_len=cfg.encoder_len)
+        cap["specs"] = specs
+        return cache
+
+    shapes = jax.eval_shape(build, 0)
+    return shapes, cap["specs"]
+
+
+def param_count(shapes) -> int:
+    leaves = jax.tree.leaves(shapes.params if hasattr(shapes, "params") else shapes)
+    return sum(int(np_prod(l.shape)) for l in leaves)
+
+
+def np_prod(shape) -> int:
+    out = 1
+    for s in shape:
+        out *= int(s)
+    return out

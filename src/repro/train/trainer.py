@@ -1,0 +1,113 @@
+"""Training loop: checkpoint/restart, logging, fault-tolerance hooks.
+
+Scale features (DESIGN.md §3):
+* restart — on startup the trainer resumes from the latest complete
+  checkpoint in ``rcfg.checkpoint_dir`` (atomic manifests mean a crash
+  mid-save can never corrupt the resume point);
+* elastic rescaling — checkpoints are mesh-agnostic (train/checkpoint.py),
+  so the resumed run may use a different mesh/pod count;
+* straggler mitigation — ``rcfg.async_tau > 0`` switches to the paper's
+  bounded-staleness update (optim/async_update.py): a slow worker's
+  gradient lands up to tau steps late instead of stalling the step barrier,
+  with the paper's beta~ LR damping keeping the dynamics convergent;
+* preemption — ``request_checkpoint()`` (e.g. from a SIGTERM handler)
+  forces a save at the next step boundary.
+"""
+from __future__ import annotations
+
+import time
+from dataclasses import dataclass, field
+from typing import Any, Callable, Optional
+
+import jax
+import numpy as np
+
+from repro.configs.base import ModelConfig, RunConfig
+from repro.data.pipeline import DataConfig, SyntheticLM
+from repro.sharding import Partitioner, spec_tree_to_shardings
+from repro.train import checkpoint as ckpt
+from repro.train import steps as ST
+
+
+@dataclass
+class Trainer:
+    cfg: ModelConfig
+    rcfg: RunConfig
+    part: Partitioner
+    data: SyntheticLM
+    log_every: int = 10
+    log_fn: Callable[[str], None] = print
+
+    state: Any = None
+    step_fn: Any = None
+    _want_ckpt: bool = field(default=False, init=False)
+    history: list = field(default_factory=list)
+
+    def __post_init__(self):
+        step_fn, _ = ST.make_train_step(self.cfg, self.rcfg, self.part)
+        self.step_fn = jax.jit(step_fn, donate_argnums=(0,))
+        if self.state is None:
+            self.state, self.sspecs = ST.init_train_state(
+                self.cfg, self.rcfg, self.part, jax.random.key(self.rcfg.seed))
+        self._maybe_resume()
+
+    # -- fault tolerance ----------------------------------------------------
+    def request_checkpoint(self):
+        """Preemption hook: force a save at the next step boundary."""
+        self._want_ckpt = True
+
+    def _maybe_resume(self):
+        d = self.rcfg.checkpoint_dir
+        if not d:
+            return
+        latest = ckpt.latest_step(d)
+        if latest is None:
+            return
+        shardings = None
+        if self.part.mesh is not None:
+            shardings = spec_tree_to_shardings(self.part.mesh, self.sspecs)
+        self.state, manifest = ckpt.restore(d, latest, self.state,
+                                            shardings=shardings)
+        self.log_fn(f"[trainer] resumed from step {latest} "
+                    f"(data cursor from manifest: {manifest['extra']})")
+
+    def _save(self, step: int):
+        if not self.rcfg.checkpoint_dir:
+            return
+        path = ckpt.save(self.rcfg.checkpoint_dir, step, self.state,
+                         extra={"data_step": step})
+        self.log_fn(f"[trainer] checkpoint -> {path}")
+
+    # -- loop ----------------------------------------------------------------
+    def run(self, num_steps: int):
+        start = int(self.state.step)
+        t0 = time.time()
+        tokens_per_step = self.data.cfg.global_batch * self.data.cfg.seq_len
+        for step in range(start, start + num_steps):
+            batch = self.data.batch_at(step)
+            batch = {k: jax.numpy.asarray(v) for k, v in batch.items()}
+            self.state, metrics = self.step_fn(self.state, batch)
+            if (step + 1) % self.log_every == 0 or step == start:
+                m = {k: float(v) for k, v in metrics.items()}
+                dt = time.time() - t0
+                done = step - start + 1
+                m["tokens_per_s"] = tokens_per_step * done / max(dt, 1e-9)
+                self.history.append({"step": step + 1, **m})
+                self.log_fn(f"[step {step+1}] loss={m['loss']:.4f} "
+                            f"gnorm={m['grad_norm']:.2f} lr={m['lr']:.2e} "
+                            f"tok/s={m['tokens_per_s']:.0f}")
+            ce = self.rcfg.checkpoint_every
+            if (ce and (step + 1) % ce == 0) or self._want_ckpt:
+                self._save(step + 1)
+                self._want_ckpt = False
+        return self.history
+
+
+def make_data(cfg: ModelConfig, seq_len: int, global_batch: int,
+              seed: int = 0) -> SyntheticLM:
+    return SyntheticLM(DataConfig(
+        vocab_size=cfg.vocab_size, seq_len=seq_len, global_batch=global_batch,
+        seed=seed,
+        frames=cfg.encoder_len if cfg.frontend == "audio" else 0,
+        patches=cfg.frontend_len if cfg.frontend == "vision" else 0,
+        d_model=cfg.d_model))

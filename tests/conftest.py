@@ -1,0 +1,18 @@
+import os
+
+# Tests run against the single real CPU device (the dry-run, and ONLY the
+# dry-run, forces 512 placeholder devices — in its own process).
+os.environ.setdefault("JAX_PLATFORMS", "cpu")
+
+import jax  # noqa: E402
+import pytest  # noqa: E402
+
+from hypothesis import settings  # noqa: E402
+
+settings.register_profile("ci", max_examples=15, deadline=None)
+settings.load_profile("ci")
+
+
+@pytest.fixture(scope="session")
+def rng_key():
+    return jax.random.key(0)

@@ -1,0 +1,112 @@
+"""Asynchronous RGS under the bounded-delay model: the exact per-iteration
+identity (eq. 7/14), Theorem 4.1/6.1 rate validation, and the step-size
+theory of Sec. 5."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, strategies as st
+
+from repro.core import (a_norm_sq, async_rgs_solve, iteration_identity_gap,
+                        random_sparse_spd, rgs_solve, theory)
+
+
+@pytest.fixture(scope="module")
+def prob():
+    return random_sparse_spd(160, row_nnz=6, n_rhs=2, seed=1)
+
+
+@given(r=st.integers(0, 39), beta=st.floats(0.2, 1.0), seed=st.integers(0, 10**6))
+def test_iteration_identity_eq7_eq14(r, beta, seed):
+    """||x_{j+1}-x*||_A^2 identity holds exactly for ANY stale read."""
+    prob = random_sparse_spd(40, row_nnz=4, seed=9)
+    rng = np.random.default_rng(seed)
+    x = jnp.asarray(rng.standard_normal(40), jnp.float32)
+    x_stale = jnp.asarray(rng.standard_normal(40), jnp.float32)
+    lhs, rhs = iteration_identity_gap(prob.A, prob.b[:, 0], x,
+                                      prob.x_star[:, 0], x_stale, r, beta)
+    np.testing.assert_allclose(float(lhs), float(rhs), rtol=2e-4, atol=2e-4)
+
+
+def test_tau0_matches_sync(prob):
+    """tau=0 async == synchronous RGS bit-for-bit (same direction stream)."""
+    k = jax.random.key(3)
+    a = rgs_solve(prob.A, prob.b, jnp.zeros_like(prob.x_star), prob.x_star,
+                  key=k, num_iters=300)
+    b = async_rgs_solve(prob.A, prob.b, jnp.zeros_like(prob.x_star),
+                        prob.x_star, key=k, delay_key=jax.random.key(4),
+                        num_iters=300, tau=0)
+    np.testing.assert_allclose(np.asarray(a.x), np.asarray(b.x), atol=1e-6)
+
+
+@pytest.mark.parametrize("delay_mode", ["fixed", "uniform", "cyclic"])
+def test_consistent_read_converges(prob, delay_mode):
+    tau = 8
+    rho = float(theory.rho(prob.A))
+    assert 2 * rho * tau < 1, "test problem must satisfy Thm 4.1's condition"
+    m = 6 * prob.n
+    res = async_rgs_solve(prob.A, prob.b, jnp.zeros_like(prob.x_star),
+                          prob.x_star, key=jax.random.key(0),
+                          delay_key=jax.random.key(1), num_iters=m, tau=tau,
+                          delay_mode=delay_mode)
+    e0 = float(a_norm_sq(prob.A, -prob.x_star).max())
+    assert float(res.err_sq[-1].max()) < 1e-2 * e0
+
+
+def test_thm41a_epoch_factor(prob):
+    """After an epoch of ~0.693 n / lam_max iterations, the measured expected
+    error is below the Thm 4.1(a) factor (with seed-averaging slack)."""
+    tau = 6
+    rho = float(theory.rho(prob.A))
+    kappa = float(prob.kappa)
+    m = max(theory.epoch_len(float(prob.lam_max), prob.n), prob.n)
+    factor = theory.thm41a_factor(rho, tau, kappa)
+    assert 0 < factor < 1
+    ratios = []
+    for seed in range(6):
+        res = async_rgs_solve(prob.A, prob.b, jnp.zeros_like(prob.x_star),
+                              prob.x_star, key=jax.random.key(10 + seed),
+                              delay_key=jax.random.key(100 + seed),
+                              num_iters=m, tau=tau, delay_mode="uniform")
+        e0 = float(a_norm_sq(prob.A, -prob.x_star).max())
+        ratios.append(float(res.err_sq[-1].max()) / e0)
+    assert np.mean(ratios) <= factor * 1.25, (np.mean(ratios), factor)
+
+
+def test_inconsistent_read_with_step_size(prob):
+    """Thm 6.1: inconsistent reads converge with the optimal beta."""
+    tau = 6
+    rho2 = float(theory.rho2(prob.A))
+    beta = theory.beta_opt_inconsistent(rho2, tau)
+    assert theory.omega_tau(rho2, tau, beta) > 0
+    m = 8 * prob.n
+    res = async_rgs_solve(prob.A, prob.b, jnp.zeros_like(prob.x_star),
+                          prob.x_star, key=jax.random.key(2),
+                          delay_key=jax.random.key(3), num_iters=m, tau=tau,
+                          beta=beta, read_model="inconsistent", miss_prob=0.5)
+    e0 = float(a_norm_sq(prob.A, -prob.x_star).max())
+    assert float(res.err_sq[-1].max()) < 5e-2 * e0
+
+
+def test_step_size_rescues_large_tau():
+    """Sec. 5: for tau with 2*rho*tau > 1 (Thm 4.1 inapplicable), beta~ still
+    converges while beta=1 with worst-case delays can stall or diverge."""
+    prob = random_sparse_spd(96, row_nnz=12, offdiag=0.95, seed=5, n_rhs=1)
+    rho = float(theory.rho(prob.A))
+    tau = int(np.ceil(1.2 / (2 * rho)))      # violates 2 rho tau < 1
+    beta = theory.beta_opt(rho, tau)
+    m = 12 * prob.n
+    damped = async_rgs_solve(prob.A, prob.b, jnp.zeros_like(prob.x_star),
+                             prob.x_star, key=jax.random.key(0),
+                             delay_key=jax.random.key(1), num_iters=m,
+                             tau=tau, beta=beta, delay_mode="fixed")
+    e0 = float(a_norm_sq(prob.A, -prob.x_star).max())
+    assert float(damped.err_sq[-1].max()) < 0.2 * e0
+
+
+def test_theory_formulas():
+    assert theory.nu_tau(0.1, 2, 1.0) == pytest.approx(1 - 2 * 0.1 * 2)
+    b = theory.beta_opt(0.1, 2)
+    assert b == pytest.approx(1 / 1.4)
+    assert theory.nu_tau(0.1, 2, b) == pytest.approx(b, rel=1e-6)
+    assert theory.beta_opt_inconsistent(0.2, 3) == pytest.approx(1 / (2 + 0.2 * 9))

@@ -1,0 +1,65 @@
+"""Dry-run machinery smoke (deliverable e, in miniature): one small cell
+lowers + compiles on the production 16x16 and 2x16x16 meshes inside a
+subprocess with 512 placeholder devices, and the roofline record is sane."""
+import json
+import os
+import subprocess
+import sys
+
+import pytest
+
+from repro import roofline as RL
+
+
+@pytest.mark.slow
+def test_dryrun_one_cell_both_meshes(tmp_path):
+    env = dict(os.environ)
+    env["PYTHONPATH"] = "src"
+    env.pop("JAX_PLATFORMS", None)
+    out = subprocess.run(
+        [sys.executable, "-m", "repro.launch.dryrun", "--arch", "qwen2-1.5b",
+         "--shape", "decode_32k", "--mesh", "both", "--no-unroll",
+         "--out", str(tmp_path)],
+        env=env, capture_output=True, text=True, timeout=900,
+        cwd=os.path.dirname(os.path.dirname(__file__)))
+    assert out.returncode == 0, out.stderr[-2000:] + out.stdout[-500:]
+    for mesh in ("16x16", "2x16x16"):
+        rec = json.load(open(tmp_path / f"qwen2-1.5b__decode_32k__{mesh}.json"))
+        assert rec["ok"], rec
+        assert rec["flops_per_device"] > 0
+        assert rec["bytes_per_device"] > 0
+        assert rec["bottleneck"] in ("compute", "memory", "collective")
+        assert rec["memory"].get("argument_size_in_bytes", 0) > 0
+
+
+# -- HLO collective parser (pure-unit, no compilation) ------------------------
+
+def test_shape_bytes():
+    assert RL.shape_bytes("f32[128,256]") == 128 * 256 * 4
+    assert RL.shape_bytes("bf16[8]") == 16
+    assert RL.shape_bytes("(f32[4], bf16[2,2])") == 16 + 8
+    assert RL.shape_bytes("pred[]") == 0 or RL.shape_bytes("pred[]") == 1
+
+
+def test_collective_parse_and_wire_model():
+    hlo = """
+  %ag = f32[64,128]{1,0} all-gather(f32[4,128]{1,0} %x), replica_groups={{0,1,2,3,4,5,6,7,8,9,10,11,12,13,14,15}}, dimensions={0}
+  %ar = bf16[1024]{0} all-reduce(bf16[1024]{0} %y), replica_groups=[16,16]<=[256] to_apply=%add
+  %cp = f32[32]{0} collective-permute(f32[32]{0} %z), source_target_pairs={{0,1}}
+"""
+    stats = RL.collective_bytes(hlo)
+    ag = 64 * 128 * 4 * 15 / 16
+    ar = 2 * 1024 * 2 * 15 / 16
+    cp = 32 * 4
+    assert stats.by_kind["all-gather"][1] == pytest.approx(ag)
+    assert stats.by_kind["all-reduce"][1] == pytest.approx(ar)
+    assert stats.by_kind["collective-permute"][1] == pytest.approx(cp)
+    assert stats.wire_bytes == pytest.approx(ag + ar + cp)
+
+
+def test_analyze_bottleneck():
+    r = RL.analyze({"flops": 1e12, "bytes accessed": 1e9}, "", chips=256,
+                   model_flops=6e14)
+    assert r.t_comp > r.t_mem >= r.t_coll
+    assert r.bottleneck == "compute"
+    assert 0 < r.useful_ratio

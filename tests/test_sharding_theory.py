@@ -1,0 +1,128 @@
+"""ShardCtx placement rules, spec/shape consistency for every arch, and the
+paper's theory module (Lemma 2.1, Lanczos extremes)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, strategies as st
+from jax.sharding import PartitionSpec as P
+
+from repro.configs import ARCH_NAMES, get_config, get_smoke_config
+from repro.core import random_sparse_spd, theory
+from repro.models import transformer as T
+from repro.sharding import Partitioner, ShardCtx
+
+AXIS_SIZES = {"data": 16, "model": 16, "pod": 2, None: 1}
+
+
+def test_shardctx_divisibility_rules():
+    sc = ShardCtx(tp=16, dp=16)
+    assert sc.col(64) == "model"
+    assert sc.col(56) is None          # llava's 56 heads
+    assert sc.data(48) == "data"
+    assert sc.data(7) is None
+    assert ShardCtx().col(64) is None  # CPU default replicates
+
+
+def test_attn_tp_choice():
+    sc = ShardCtx(tp=16, dp=16)
+    assert sc.attn_tp(48, 1)           # granite -> Megatron TP
+    assert not sc.attn_tp(40, 8)       # llama4 -> sequence parallel
+    assert not sc.attn_tp(56, 8)       # llava  -> sequence parallel
+
+
+@pytest.mark.parametrize("arch", ARCH_NAMES)
+def test_full_config_specs_divide_shapes(arch):
+    """For the FULL config under the production ShardCtx, every sharded dim
+    must be divisible by its mesh axis — the invariant that makes the 16x16
+    dry-run lower (checked here without any compilation)."""
+    cfg = get_config(arch)
+    sc = ShardCtx(tp=16, dp=16)
+    cap = {}
+
+    def build(key):
+        p, s = T.init_params(cfg, key, sc)
+        cap["specs"] = s
+        return p
+
+    shapes = jax.eval_shape(build, jax.random.key(0))
+    specs = cap["specs"]
+    flat_s, _ = jax.tree_util.tree_flatten_with_path(
+        specs, is_leaf=lambda x: isinstance(x, P))
+    flat_p = dict(jax.tree_util.tree_flatten_with_path(shapes)[0])
+    checked = 0
+    for path, spec in flat_s:
+        shape = flat_p[tuple(path)].shape
+        for dim, axis in zip(shape, tuple(spec)):
+            if axis is None:
+                continue
+            axes = axis if isinstance(axis, tuple) else (axis,)
+            size = 1
+            for a in axes:
+                size *= AXIS_SIZES[a]
+            assert dim % size == 0, (jax.tree_util.keystr(path), shape, spec)
+            checked += 1
+    assert checked > 0
+
+
+@pytest.mark.parametrize("arch", ["gemma3-1b", "jamba-v0.1-52b", "whisper-small"])
+def test_cache_specs_divide_shapes(arch):
+    from repro.configs import SHAPES
+    from repro.train import steps as ST
+    cfg = get_config(arch)
+    sc = ShardCtx(tp=16, dp=16)
+    part = Partitioner(mesh=None, dp_axes=("data",), sc=sc)
+    shape = SHAPES["decode_32k"]
+    cache_shapes, cspecs = ST.abstract_cache(cfg, shape, part)
+    flat_s, _ = jax.tree_util.tree_flatten_with_path(
+        cspecs, is_leaf=lambda x: isinstance(x, P))
+    flat_p = dict(jax.tree_util.tree_flatten_with_path(cache_shapes)[0])
+    for path, spec in flat_s:
+        shp = flat_p[tuple(path)].shape
+        for dim, axis in zip(shp, tuple(spec)):
+            if axis is None:
+                continue
+            axes = axis if isinstance(axis, tuple) else (axis,)
+            size = 1
+            for a in axes:
+                size *= AXIS_SIZES[a]
+            assert dim % size == 0, (jax.tree_util.keystr(path), shp, spec)
+
+
+def test_partitioner_noop_without_mesh():
+    part = Partitioner(mesh=None)
+    x = jnp.ones((2, 3))
+    assert part.tokens(x) is x
+
+
+# -- theory -------------------------------------------------------------------
+
+def test_lemma21_bounds_empirically():
+    """lam_min/n E||e||_A^2 <= E[(e,d)_A^2] <= lam_max/n E||e||_A^2."""
+    prob = random_sparse_spd(64, row_nnz=5, seed=2)
+    rng = np.random.default_rng(0)
+    e = jnp.asarray(rng.standard_normal(64), jnp.float32)
+    Ae = prob.A @ e
+    sq = np.asarray(Ae) ** 2            # (e, e_i)_A^2 for each direction i
+    mean = sq.mean()
+    err = float(e @ Ae)
+    lo = float(prob.lam_min) / 64 * err
+    hi = float(prob.lam_max) / 64 * err
+    assert lo - 1e-5 <= mean <= hi + 1e-5
+
+
+def test_lanczos_matches_dense_eigs():
+    prob = random_sparse_spd(128, row_nnz=6, seed=4)
+    lo, hi = theory.lanczos_extreme_eigs(prob.A, jax.random.key(0), iters=96)
+    np.testing.assert_allclose(float(lo), float(prob.lam_min), rtol=2e-2)
+    np.testing.assert_allclose(float(hi), float(prob.lam_max), rtol=2e-2)
+
+
+@given(st.floats(0.01, 0.4), st.integers(0, 8))
+def test_block_rho_reduces_to_rho(off, tau):
+    prob = random_sparse_spd(32, row_nnz=4, offdiag=off, seed=1)
+    r1 = float(theory.rho(prob.A))
+    rb = float(theory.block_rho(prob.A, 1))
+    np.testing.assert_allclose(r1, rb, rtol=1e-5)
+    # nu_tau decreasing in tau
+    assert theory.nu_tau(r1, tau) >= theory.nu_tau(r1, tau + 1)

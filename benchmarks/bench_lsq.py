@@ -1,0 +1,84 @@
+"""RK vs CG-on-normal-equations in the low-accuracy regime (paper Sec. 7/8).
+
+Equal-work comparison on overdetermined least squares: one RK sweep
+(m row updates, O(mn) flops) vs one CG iteration on A^T A (two A matvecs,
+O(mn) flops).  Reports per-sweep residual trajectories, wall time, and the
+sweep count at which each solver first reaches the low-accuracy targets the
+paper's regression workload needs (1e-1, 1e-2 relative residual above the
+LSQ optimum).
+
+Honest-reporting note (mirrors fig1_residual): with the fair baseline —
+Jacobi-rescaled normal equations, Sec. 2.3 — CG leads at high accuracy
+even on skewed designs.  RK's measured edge is the first sweeps (it
+reaches the 1e-1 low-accuracy target in ~2 sweeps, before CG's spectrum
+advantage compounds) plus the paper's scalability argument: an RK sweep
+has ZERO global synchronization points while every CG iteration pays 2
+blocking all-reduces, after an up-front A^T A formation the row-action
+method never needs.
+
+    PYTHONPATH=src python benchmarks/bench_lsq.py
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.common import emit, timed
+from repro.core import cg_solve, random_lsq, rk_solve, theory, to_unit_diagonal
+
+
+def _first_at(relresid, targets, floor):
+    out = {}
+    for t in targets:
+        hit = np.nonzero(relresid <= floor + t)[0]
+        out[t] = int(hit[0]) + 1 if hit.size else 0   # 0 = never reached
+    return out
+
+
+def run(m: int = 4096, n: int = 512, rhs: int = 8, sweeps: int = 12,
+        noise: float = 0.01, col_scale: float = 1.0, seed: int = 0):
+    prob = random_lsq(m, n, n_rhs=rhs, noise=noise, col_scale=col_scale,
+                      seed=seed)
+    x0 = jnp.zeros_like(prob.x_star)
+    bn = float(jnp.linalg.norm(prob.b))
+    floor = float(jnp.linalg.norm(prob.b - prob.A @ prob.x_star)) / bn
+
+    res = rk_solve(prob.A, prob.b, x0, prob.x_star, key=jax.random.key(1),
+                   num_iters=sweeps * m, record_every=m)
+    # Jacobi-rescaled normal equations (Sec. 2.3) — the strongest fair
+    # version of the baseline on skewed designs.
+    An, dn = to_unit_diagonal(prob.A.T @ prob.A)
+    bn_eq = dn[:, None] * (prob.A.T @ prob.b)
+    cg = cg_solve(An, bn_eq, x0, prob.x_star / dn[:, None], num_iters=sweeps)
+
+    rk_r = np.linalg.norm(np.asarray(res.resid), axis=1) / bn
+    # CG records the (rescaled) normal-equation residual per iteration
+    # (per-iteration x is not kept); the final true residual is recomputed.
+    cg_ne = np.linalg.norm(np.asarray(cg.resid), axis=1)
+    cg_final = float(jnp.linalg.norm(
+        prob.b - prob.A @ (dn[:, None] * cg.x))) / bn
+
+    t_rk = timed(lambda: rk_solve(prob.A, prob.b, x0, prob.x_star,
+                                  key=jax.random.key(1), num_iters=sweeps * m,
+                                  record_every=m).x)
+    t_cg = timed(lambda: cg_solve(An, bn_eq, x0, prob.x_star / dn[:, None],
+                                  num_iters=sweeps).x)
+    t_ne = timed(lambda: prob.A.T @ prob.A)   # normal-equation formation cost
+
+    for s in range(sweeps):
+        emit("bench_lsq", sweep=s + 1, rk_relresid=f"{rk_r[s]:.4e}",
+             cg_ne_resid=f"{cg_ne[s]:.4e}")
+    hits = _first_at(rk_r, (1e-1, 1e-2), floor)
+    emit("bench_lsq", summary=1, m=m, n=n, rhs=rhs,
+         kappa=f"{float(prob.kappa):.1f}", floor=f"{floor:.3e}",
+         rk_final=f"{rk_r[-1]:.3e}", cg_final=f"{cg_final:.3e}",
+         rk_sweeps_to_1e1=hits[1e-1], rk_sweeps_to_1e2=hits[1e-2],
+         rk_s=f"{t_rk:.2f}", cg_s=f"{t_cg:.2f}", ne_form_s=f"{t_ne:.2f}",
+         rk_syncs_per_sweep=0, cg_syncs_per_iter=2,
+         theory_factor=f"{float(theory.rk_factor(prob.A)):.6f}")
+    return rk_r, cg_ne
+
+
+if __name__ == "__main__":
+    run()

@@ -30,12 +30,12 @@ import jax, jax.numpy as jnp
 from repro.core.parallel_rgs import (parallel_rgs_solve, parallel_rgs_banded,
                                      parallel_rgs_halo)
 from repro import roofline as RL
+from repro.compat import cost_analysis, make_mesh
 
 n = %(n)d; k = %(k)d; rounds = %(rounds)d; local_steps = %(local)d
 block = %(block)d; bands = %(bands)d; layout = "%(layout)s"
 dtype = jnp.%(dtype)s  # metrics flag: %(metrics)s
-mesh = jax.make_mesh((256,), ("workers",),
-                     axis_types=(jax.sharding.AxisType.Auto,))
+mesh = make_mesh((256,), ("workers",))
 sds = jax.ShapeDtypeStruct
 b = sds((n, k), dtype)
 x0 = sds((n, k), dtype)
@@ -73,7 +73,7 @@ else:  # halo
 
 lowered = jax.jit(run).lower(A, b, x0, xs, key)
 compiled = lowered.compile()
-cost = compiled.cost_analysis() or {}
+cost = cost_analysis(compiled)
 hlo = compiled.as_text()
 rl = RL.analyze(cost, hlo, chips=256, model_flops=mf)
 mem = compiled.memory_analysis()

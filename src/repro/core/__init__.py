@@ -21,14 +21,24 @@ from repro.core.parallel_rgs import (
     parallel_rgs_solve,
 )
 from repro.core.cg import cg_solve, fcg_solve, make_rgs_preconditioner
+from repro.core.kaczmarz import (
+    LSQProblem,
+    async_rk_solve,
+    parallel_rk_solve,
+    random_lsq,
+    rk_effective_tau,
+    rk_solve,
+)
 from repro.core import theory
 
 __all__ = [
+    "LSQProblem",
     "SPDProblem",
     "SolveResult",
     "ParallelSolveResult",
     "a_norm_sq",
     "async_rgs_solve",
+    "async_rk_solve",
     "block_banded_spd",
     "block_gs_solve",
     "cg_solve",
@@ -42,9 +52,13 @@ __all__ = [
     "parallel_rgs_banded",
     "parallel_rgs_halo",
     "parallel_rgs_solve",
+    "parallel_rk_solve",
+    "random_lsq",
     "random_sparse_spd",
     "rgs_general",
     "rgs_solve",
+    "rk_effective_tau",
+    "rk_solve",
     "theory",
     "to_unit_diagonal",
 ]

@@ -21,8 +21,9 @@ from typing import NamedTuple
 
 import jax
 import jax.numpy as jnp
-from jax import shard_map
 from jax.sharding import PartitionSpec as P
+
+from repro.compat import pvary, shard_map
 
 
 class ParallelSolveResult(NamedTuple):
@@ -75,7 +76,7 @@ def parallel_rgs_solve(
             rkey = jax.random.fold_in(rkey, w)
             picks = jax.random.randint(rkey, (local_steps,), 0, slab // block)
             # Mark as device-varying: each worker accumulates its own deltas.
-            delta = jax.lax.pvary(
+            delta = pvary(
                 jnp.zeros((slab, b_sh.shape[1]), x.dtype), (axis,)
             )
 
@@ -106,7 +107,7 @@ def parallel_rgs_solve(
             return jax.lax.all_gather(xs_sh, axis, axis=0, tiled=True)
 
         x, (errs, resids) = jax.lax.scan(
-            round_body, jax.lax.pvary(x0_full, (axis,)), keys,
+            round_body, pvary(x0_full, (axis,)), keys,
             unroll=rounds if unroll else 1,
         )
         # Every worker's x is identical after the final all-gather, but the
@@ -230,7 +231,7 @@ def parallel_rgs_banded(
             return x, (esq, jnp.sqrt(rsq))
 
         x, (errs, resids) = jax.lax.scan(
-            round_body, jax.lax.pvary(x0_full, (axis,)), keys,
+            round_body, pvary(x0_full, (axis,)), keys,
             unroll=rounds if unroll else 1)
         x_slab = jax.lax.dynamic_slice_in_dim(x, row0, slab, 0)
         return x_slab, errs, resids

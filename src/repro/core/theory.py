@@ -131,3 +131,74 @@ def thm61a_factor(rho2_val, tau, kappa, beta):
 def iters_to_eps(n: int, lam_min: float, eps: float, delta: float) -> int:
     """Sec. 2.2 Markov bound: m >= (n/lam_min) ln(1/(delta eps^2))."""
     return int(math.ceil(n / lam_min * math.log(1.0 / (delta * eps**2))))
+
+
+# ---------------------------------------------------------------------------
+# Randomized Kaczmarz (Sec. 7: unsymmetric / overdetermined least squares)
+# ---------------------------------------------------------------------------
+#
+# RK with row sampling P(i) = ||A_i||^2 / ||A||_F^2 is RGS run implicitly on
+# the normal equations without ever forming them; the analogues of the
+# paper's quantities are built from *normalized-row coherences*
+# <A_l/||A_l||, A_r/||A_r||> in place of the unit-diagonal couplings A_lr,
+# and the sampling distribution p_r in place of the uniform 1/n.
+
+def rk_row_probs(A: jax.Array) -> jax.Array:
+    """Row sampling distribution p_i = ||A_i||^2 / ||A||_F^2."""
+    rn = jnp.einsum("mn,mn->m", A, A)
+    return rn / jnp.sum(rn)
+
+
+def rk_rho(A: jax.Array) -> jax.Array:
+    """RK analogue of rho (Thm 4.1): max_l E_r |<A_l/||A_l||, A_r/||A_r||>|
+    under row sampling — the expected |coherence| a stale update can inject
+    into a row's residual, maximized over rows.  Reduces to the paper's
+    rho = max_l (1/n) sum_r |A_lr| when A is square, unit-diagonal SPD and
+    sampling is uniform.  O(m^2 n): diagnostic / step-size use only.
+    """
+    norms = jnp.sqrt(jnp.einsum("mn,mn->m", A, A))
+    Ahat = A / norms[:, None]
+    return jnp.max(jnp.abs(Ahat @ Ahat.T) @ rk_row_probs(A))
+
+
+def rk_rho2(A: jax.Array) -> jax.Array:
+    """RK analogue of rho_2 (Thm 6.1): max_l E_r <A_l/||A_l||, A_r/||A_r||>^2
+    under row sampling (squared coherences, for the inconsistent-read rate).
+    """
+    norms = jnp.sqrt(jnp.einsum("mn,mn->m", A, A))
+    Ahat = A / norms[:, None]
+    G = Ahat @ Ahat.T
+    return jnp.max((G * G) @ rk_row_probs(A))
+
+
+def rk_factor(A: jax.Array, beta: float = 1.0) -> jax.Array:
+    """Strohmer-Vershynin per-iteration contraction of E||x - x*||^2 for
+    (beta-damped) RK on a consistent system:
+    1 - beta(2-beta) sigma_min(A)^2 / ||A||_F^2."""
+    s = jnp.linalg.svd(A, compute_uv=False)
+    return 1.0 - beta * (2.0 - beta) * (s[-1] ** 2) / jnp.sum(s**2)
+
+
+def rk_bound(e0, m, factor):
+    """Expected-error bound curve: E||x_m - x*||^2 <= factor^m * E_0."""
+    return factor**m * e0
+
+
+def beta_opt_rk(rho_rk: float, tau: int) -> float:
+    """Thm-analogous step size for asynchronous RK: beta~ = 1/(1+2 rho_rk tau)
+    — the paper's beta~ = 1/(1+2 rho tau) with the coherence constant of
+    ``rk_rho`` standing in for rho (AsyRK, Liu-Wright-Sridhar style)."""
+    return 1.0 / (1.0 + 2.0 * rho_rk * tau)
+
+
+def async_rk_factor(A: jax.Array, tau: int, beta: float,
+                    rho_rk: float | None = None) -> jax.Array:
+    """Per-iteration factor for delay-tau RK: 1 - nu_tau(rho_rk) sigma_min^2
+    / ||A||_F^2 — Thm 4.1(a)'s shape with the RK contraction modulus.
+
+    Pass ``rho_rk`` when already computed: ``rk_rho`` costs O(m^2 n)."""
+    s = jnp.linalg.svd(A, compute_uv=False)
+    if rho_rk is None:
+        rho_rk = float(rk_rho(A))
+    nu = nu_tau(rho_rk, tau, beta)
+    return 1.0 - nu * (s[-1] ** 2) / jnp.sum(s**2)

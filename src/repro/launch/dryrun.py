@@ -16,6 +16,7 @@ import traceback
 import jax
 import jax.numpy as jnp
 
+from repro import compat
 from repro import roofline as RL
 from repro.configs import SHAPES, all_cells, cell as get_cell, get_config, get_run_config
 from repro.launch.mesh import make_production_mesh
@@ -129,7 +130,7 @@ def lower_cell(arch: str, shape_name: str, mesh, *, multi_pod: bool,
     compiled = lowered.compile()
     record["compile_s"] = round(time.time() - t0, 1)
 
-    cost = compiled.cost_analysis() or {}
+    cost = compat.cost_analysis(compiled)
     mem = memory_dict(compiled.memory_analysis())
     hlo = compiled.as_text()
     chips = 512 if multi_pod else 256

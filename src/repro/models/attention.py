@@ -23,8 +23,9 @@ from typing import NamedTuple, Optional
 
 import jax
 import jax.numpy as jnp
-from jax import shard_map
 from jax.sharding import PartitionSpec as P
+
+from repro.compat import shard_map
 
 from repro.models import layers as L
 from repro.sharding import ShardCtx

@@ -1,4 +1,6 @@
 import os
+import subprocess
+import sys
 
 # Tests run against the single real CPU device (the dry-run, and ONLY the
 # dry-run, forces 512 placeholder devices — in its own process).
@@ -7,10 +9,44 @@ os.environ.setdefault("JAX_PLATFORMS", "cpu")
 import jax  # noqa: E402
 import pytest  # noqa: E402
 
-from hypothesis import settings  # noqa: E402
+# hypothesis is an optional dev dependency (requirements-dev.txt).  Tier-1
+# must collect and run on a bare jax+pytest environment: register the ci
+# profile only when hypothesis is importable; property-based test modules
+# guard themselves with pytest.importorskip("hypothesis").
+try:
+    from hypothesis import settings  # noqa: E402
+except ImportError:
+    settings = None
 
-settings.register_profile("ci", max_examples=15, deadline=None)
-settings.load_profile("ci")
+if settings is not None:
+    settings.register_profile("ci", max_examples=15, deadline=None)
+    settings.load_profile("ci")
+
+
+def pytest_configure(config):
+    config.addinivalue_line(
+        "markers", "slow: long-running test (subprocess / forced multi-device)")
+
+
+def run_in_subprocess(argv, *, timeout=600):
+    """Run ``argv`` in a fresh interpreter from the repo root.
+
+    The subprocess gets PYTHONPATH=src and is pinned to the CPU backend:
+    the forced host-platform placeholder devices these tests rely on are
+    CPU devices, and letting jax probe a (libtpu-equipped but TPU-less)
+    image first can hang for minutes on multi-host discovery.
+    """
+    env = dict(os.environ)
+    env["PYTHONPATH"] = "src"
+    env["JAX_PLATFORMS"] = "cpu"
+    return subprocess.run(argv, env=env, capture_output=True, text=True,
+                          timeout=timeout,
+                          cwd=os.path.dirname(os.path.dirname(__file__)))
+
+
+def run_script_in_subprocess(script, *, timeout=600):
+    """``run_in_subprocess`` for an inline ``python -c`` test script."""
+    return run_in_subprocess([sys.executable, "-c", script], timeout=timeout)
 
 
 @pytest.fixture(scope="session")

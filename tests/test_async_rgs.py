@@ -5,6 +5,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
+pytest.importorskip("hypothesis")  # optional dev dep; see requirements-dev.txt
 from hypothesis import given, strategies as st
 
 from repro.core import (a_norm_sq, async_rgs_solve, iteration_identity_gap,

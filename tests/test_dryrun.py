@@ -2,26 +2,22 @@
 lowers + compiles on the production 16x16 and 2x16x16 meshes inside a
 subprocess with 512 placeholder devices, and the roofline record is sane."""
 import json
-import os
-import subprocess
 import sys
 
 import pytest
+
+from conftest import run_in_subprocess
 
 from repro import roofline as RL
 
 
 @pytest.mark.slow
 def test_dryrun_one_cell_both_meshes(tmp_path):
-    env = dict(os.environ)
-    env["PYTHONPATH"] = "src"
-    env.pop("JAX_PLATFORMS", None)
-    out = subprocess.run(
+    out = run_in_subprocess(
         [sys.executable, "-m", "repro.launch.dryrun", "--arch", "qwen2-1.5b",
          "--shape", "decode_32k", "--mesh", "both", "--no-unroll",
          "--out", str(tmp_path)],
-        env=env, capture_output=True, text=True, timeout=900,
-        cwd=os.path.dirname(os.path.dirname(__file__)))
+        timeout=900)
     assert out.returncode == 0, out.stderr[-2000:] + out.stdout[-500:]
     for mesh in ("16x16", "2x16x16"):
         rec = json.load(open(tmp_path / f"qwen2-1.5b__decode_32k__{mesh}.json"))

@@ -1,0 +1,160 @@
+"""Randomized Kaczmarz subsystem (paper Sec. 7): agreement with lstsq,
+exact degeneracy of the distributed solver at P=1, the bounded-delay
+simulator, and the Strohmer-Vershynin expected-error bound."""
+import textwrap
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from conftest import run_script_in_subprocess
+from repro.core import (async_rk_solve, parallel_rk_solve, random_lsq,
+                        rk_effective_tau, rk_solve, theory)
+from repro.launch.mesh import make_host_mesh
+
+
+def test_rk_matches_lstsq_consistent():
+    """On a consistent overdetermined system RK converges to the unique
+    least-squares solution (== the planted coefficients)."""
+    prob = random_lsq(240, 40, n_rhs=3, noise=0.0, col_scale=0.0, seed=0)
+    assert bool(jnp.allclose(prob.x_star, prob.x_true))
+    x0 = jnp.zeros_like(prob.x_star)
+    res = rk_solve(prob.A, prob.b, x0, prob.x_star, key=jax.random.key(1),
+                   num_iters=4000, record_every=1000)
+    rel = float(jnp.linalg.norm(res.x - prob.x_star) /
+                jnp.linalg.norm(prob.x_star))
+    assert rel < 1e-3, rel
+    relresid = float(jnp.linalg.norm(prob.b - prob.A @ res.x) /
+                     jnp.linalg.norm(prob.b))
+    assert relresid < 1e-3, relresid
+    # error drops by orders of magnitude over the recorded trajectory
+    # (no strict per-record monotonicity: the tail sits at the f32 floor)
+    e = np.asarray(res.err_sq).max(axis=1)
+    assert e[-1] < 1e-3 * e[0], e
+
+
+def test_rk_matches_lstsq_noisy():
+    """With noisy b, RK reaches the low-accuracy neighborhood of the
+    jnp.linalg.lstsq solution (its convergence horizon)."""
+    prob = random_lsq(240, 40, n_rhs=3, noise=0.05, col_scale=0.0, seed=1)
+    x0 = jnp.zeros_like(prob.x_star)
+    res = rk_solve(prob.A, prob.b, x0, prob.x_star, key=jax.random.key(2),
+                   num_iters=6000)
+    rel = float(jnp.linalg.norm(res.x - prob.x_star) /
+                jnp.linalg.norm(prob.x_star))
+    assert rel < 0.1, rel
+    # and the residual sits within RK's convergence horizon of the optimum
+    # (plain RK does not reach the LSQ residual exactly on inconsistent b)
+    floor = float(jnp.linalg.norm(prob.b - prob.A @ prob.x_star))
+    got = float(jnp.linalg.norm(prob.b - prob.A @ res.x))
+    assert got < 2.0 * floor, (got, floor)
+
+
+def test_parallel_p1_bit_identical_to_sequential():
+    """The acceptance-criterion degeneracy: parallel_rk_solve on a 1-worker
+    mesh reproduces sequential RK bit-for-bit (same key, same schedule)."""
+    prob = random_lsq(256, 64, n_rhs=2, noise=0.0, col_scale=0.0, seed=1)
+    x0 = jnp.zeros_like(prob.x_star)
+    mesh = make_host_mesh(1)
+    for local_steps, rounds in ((1, 64), (16, 8)):
+        p = parallel_rk_solve(prob.A, prob.b, x0, prob.x_star,
+                              key=jax.random.key(3), mesh=mesh,
+                              rounds=rounds, local_steps=local_steps)
+        s = rk_solve(prob.A, prob.b, x0, prob.x_star, key=jax.random.key(3),
+                     num_iters=rounds * local_steps)
+        assert bool(jnp.array_equal(p.x, s.x)), (
+            local_steps, float(jnp.abs(p.x - s.x).max()))
+        assert p.tau == rk_effective_tau(1, local_steps) == 0
+
+
+def test_rk_error_under_theory_bound():
+    """E||x_t - x*||^2 <= rk_factor^t ||x0 - x*||^2 (Strohmer-Vershynin):
+    the mean over independent runs stays under the bound curve (with slack
+    for finite sampling)."""
+    prob = random_lsq(160, 32, n_rhs=4, noise=0.0, col_scale=0.0, seed=2)
+    x0 = jnp.zeros_like(prob.x_star)
+    factor = float(theory.rk_factor(prob.A))
+    assert 0.0 < factor < 1.0
+    e0 = float(jnp.sum(prob.x_star**2))  # per-RHS errors summed below
+    runs = []
+    for seed in range(5):
+        res = rk_solve(prob.A, prob.b, x0, prob.x_star,
+                       key=jax.random.key(10 + seed), num_iters=1200,
+                       record_every=200)
+        runs.append(np.asarray(res.err_sq).sum(axis=1))
+    mean_err = np.stack(runs).mean(axis=0)
+    iters = np.asarray(res.iters)
+    bound = np.asarray([float(theory.rk_bound(e0, int(t), factor))
+                        for t in iters])
+    assert (mean_err <= 3.0 * bound).all(), np.stack([mean_err, bound])
+
+
+def test_async_rk_tau0_matches_sequential():
+    """tau = 0 degenerates to synchronous RK (no invisible updates)."""
+    prob = random_lsq(120, 24, n_rhs=2, noise=0.0, col_scale=0.0, seed=3)
+    x0 = jnp.zeros_like(prob.x_star)
+    a = async_rk_solve(prob.A, prob.b, x0, prob.x_star,
+                       key=jax.random.key(5), delay_key=jax.random.key(6),
+                       num_iters=500, tau=0)
+    s = rk_solve(prob.A, prob.b, x0, prob.x_star, key=jax.random.key(5),
+                 num_iters=500)
+    assert bool(jnp.allclose(a.x, s.x, atol=1e-5)), \
+        float(jnp.abs(a.x - s.x).max())
+
+
+@pytest.mark.parametrize("read_model", ["consistent", "inconsistent"])
+def test_async_rk_converges_with_theory_step(read_model):
+    """Delay-tau RK with beta~ = 1/(1+2 rho_rk tau) still contracts."""
+    prob = random_lsq(160, 32, n_rhs=2, noise=0.0, col_scale=0.0, seed=4)
+    x0 = jnp.zeros_like(prob.x_star)
+    tau = 16
+    beta = theory.beta_opt_rk(float(theory.rk_rho(prob.A)), tau)
+    assert 0.0 < beta <= 1.0
+    res = async_rk_solve(prob.A, prob.b, x0, prob.x_star,
+                         key=jax.random.key(7), delay_key=jax.random.key(8),
+                         num_iters=4000, tau=tau, beta=beta,
+                         read_model=read_model, record_every=1000)
+    e = np.asarray(res.err_sq).max(axis=1)
+    assert e[-1] < 0.1 * float(jnp.sum(prob.x_star**2, axis=0).max()), e
+
+
+SCRIPT = textwrap.dedent("""
+    import os
+    os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+    import jax, jax.numpy as jnp, numpy as np
+    from repro.core import (parallel_rk_solve, random_lsq, rk_effective_tau,
+                            rk_solve, theory)
+    from repro.launch.mesh import make_host_mesh
+
+    prob = random_lsq(512, 64, n_rhs=2, noise=0.0, col_scale=0.0, seed=0)
+    x0 = jnp.zeros_like(prob.x_star)
+    mesh = make_host_mesh(8)
+    tau = rk_effective_tau(8, 16)
+    beta = theory.beta_opt_rk(float(theory.rk_rho(prob.A)), tau)
+
+    res = parallel_rk_solve(prob.A, prob.b, x0, prob.x_star,
+                            key=jax.random.key(0), mesh=mesh, rounds=150,
+                            local_steps=16, beta=beta)
+    assert res.tau == tau == 15
+    e = np.asarray(res.err_sq)
+    assert e[-1].max() < 1e-2 * e[0].max(), e[:, 0]
+    resid = float(jnp.linalg.norm(prob.b - prob.A @ res.x) /
+                  jnp.linalg.norm(prob.b))
+    assert resid < 0.05, resid
+
+    # the stale schedule tracks the sequential solver closely: same picks,
+    # staleness only within rounds
+    seq = rk_solve(prob.A, prob.b, x0, prob.x_star, key=jax.random.key(0),
+                   num_iters=150 * 16, beta=beta)
+    gap = float(jnp.linalg.norm(res.x - seq.x) / jnp.linalg.norm(seq.x))
+    assert gap < 0.5, gap
+    print("PARALLEL_RK_OK")
+""")
+
+
+@pytest.mark.slow
+def test_parallel_rk_8_workers():
+    out = run_script_in_subprocess(SCRIPT)
+    assert out.returncode == 0, out.stderr[-2000:]
+    assert "PARALLEL_RK_OK" in out.stdout

@@ -1,11 +1,10 @@
 """Distributed asynchronous block-RGS (shard_map) — run in a subprocess with
 8 forced host devices so the main test process keeps its single real device."""
-import os
-import subprocess
-import sys
 import textwrap
 
 import pytest
+
+from conftest import run_script_in_subprocess
 
 SCRIPT = textwrap.dedent("""
     import os
@@ -48,11 +47,6 @@ SCRIPT = textwrap.dedent("""
 
 @pytest.mark.slow
 def test_parallel_rgs_8_workers():
-    env = dict(os.environ)
-    env["PYTHONPATH"] = "src"
-    env.pop("JAX_PLATFORMS", None)
-    out = subprocess.run([sys.executable, "-c", SCRIPT], env=env,
-                         capture_output=True, text=True, timeout=600,
-                         cwd=os.path.dirname(os.path.dirname(__file__)))
+    out = run_script_in_subprocess(SCRIPT)
     assert out.returncode == 0, out.stderr[-2000:]
     assert "PARALLEL_OK" in out.stdout

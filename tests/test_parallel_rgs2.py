@@ -1,12 +1,11 @@
 """Banded + halo-exchange distributed solver variants (§Perf structural
 optimizations): convergence, and bit-identity of the halo iterates with the
 all-gather version (the gathered entries outside the halo are never read)."""
-import os
-import subprocess
-import sys
 import textwrap
 
 import pytest
+
+from conftest import run_script_in_subprocess
 
 SCRIPT = textwrap.dedent("""
     import os
@@ -50,11 +49,6 @@ SCRIPT = textwrap.dedent("""
 
 @pytest.mark.slow
 def test_banded_and_halo_variants():
-    env = dict(os.environ)
-    env["PYTHONPATH"] = "src"
-    env.pop("JAX_PLATFORMS", None)
-    out = subprocess.run([sys.executable, "-c", SCRIPT], env=env,
-                         capture_output=True, text=True, timeout=600,
-                         cwd=os.path.dirname(os.path.dirname(__file__)))
+    out = run_script_in_subprocess(SCRIPT)
     assert out.returncode == 0, out.stderr[-2000:]
     assert "BANDED_OK" in out.stdout

@@ -1,0 +1,85 @@
+"""Property-based checks of the theory module's algebra (skipped cleanly on
+a bare jax+pytest environment without hypothesis):
+
+* beta~ = 1/(1 + 2 rho tau) lies in (0, 1] and satisfies the fixed-point
+  identity nu_tau(beta~) = beta~ (Sec. 5);
+* nu_tau and omega_tau are monotone non-increasing in the delay bound tau
+  (more staleness never improves the guaranteed rate);
+* rho and rho_2 are invariant under symmetric permutation of the matrix,
+  and their RK analogues are invariant under row permutation (the rate
+  cannot depend on how equations are numbered)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+pytest.importorskip("hypothesis")  # optional dev dep; see requirements-dev.txt
+from hypothesis import given, strategies as st
+
+from repro.core import random_sparse_spd, theory
+
+rhos = st.floats(1e-4, 10.0, allow_nan=False, allow_infinity=False)
+taus = st.integers(0, 256)
+betas = st.floats(1e-3, 1.0, allow_nan=False, allow_infinity=False)
+
+
+@given(rho=rhos, tau=taus)
+def test_beta_opt_in_unit_interval_and_fixed_point(rho, tau):
+    beta = theory.beta_opt(rho, tau)
+    assert 0.0 < beta <= 1.0
+    # nu_tau(beta~) = beta~: 2b - b^2(1 + 2 rho tau) = 2b - b = b
+    assert theory.nu_tau(rho, tau, beta) == pytest.approx(beta, rel=1e-10)
+    # tau = 0 recovers the synchronous step size
+    if tau == 0:
+        assert beta == 1.0
+
+
+@given(rho=rhos, tau=taus, beta=betas)
+def test_nu_tau_monotone_in_tau(rho, tau, beta):
+    assert theory.nu_tau(rho, tau + 1, beta) <= theory.nu_tau(rho, tau, beta)
+
+
+@given(rho2=rhos, tau=taus, beta=betas)
+def test_omega_tau_monotone_in_tau(rho2, tau, beta):
+    assert (theory.omega_tau(rho2, tau + 1, beta)
+            <= theory.omega_tau(rho2, tau, beta))
+
+
+@given(rho2=rhos, tau=taus)
+def test_beta_opt_inconsistent_maximizes_omega(rho2, tau):
+    beta = theory.beta_opt_inconsistent(rho2, tau)
+    assert 0.0 < beta <= 0.5
+    best = theory.omega_tau(rho2, tau, beta)
+    for eps in (-1e-3, 1e-3):
+        b = beta + eps
+        if 0.0 < b <= 1.0:
+            assert theory.omega_tau(rho2, tau, b) <= best + 1e-12
+
+
+@given(seed=st.integers(0, 31), pseed=st.integers(0, 31))
+def test_rho_invariant_under_symmetric_permutation(seed, pseed):
+    prob = random_sparse_spd(48, row_nnz=6, seed=seed)
+    perm = np.random.default_rng(pseed).permutation(48)
+    Ap = prob.A[jnp.ix_(perm, perm)]
+    assert float(theory.rho(Ap)) == pytest.approx(float(theory.rho(prob.A)),
+                                                  rel=1e-5)
+    assert float(theory.rho2(Ap)) == pytest.approx(float(theory.rho2(prob.A)),
+                                                   rel=1e-5)
+
+
+@given(seed=st.integers(0, 31), pseed=st.integers(0, 31))
+def test_rk_rho_invariant_under_row_permutation(seed, pseed):
+    rng = np.random.default_rng(seed)
+    A = jnp.asarray(rng.standard_normal((40, 12)).astype(np.float32))
+    perm = np.random.default_rng(pseed).permutation(40)
+    Ap = A[perm, :]
+    assert float(theory.rk_rho(Ap)) == pytest.approx(float(theory.rk_rho(A)),
+                                                     rel=1e-4)
+    assert float(theory.rk_rho2(Ap)) == pytest.approx(
+        float(theory.rk_rho2(A)), rel=1e-4)
+    # sampling probabilities are a distribution and rk_rho is a coherence
+    # bound: p sums to 1, and 0 < rk_rho2 <= rk_rho <= 1
+    p = theory.rk_row_probs(A)
+    assert float(jnp.sum(p)) == pytest.approx(1.0, rel=1e-5)
+    r1, r2 = float(theory.rk_rho(A)), float(theory.rk_rho2(A))
+    assert 0.0 < r2 <= r1 <= 1.0 + 1e-6

@@ -18,21 +18,20 @@ import jax.numpy as jnp
 import numpy as np
 
 from benchmarks.common import emit, timed
-from repro.core import block_banded_spd
-from repro.core.spd import ell_from_dense
+from repro.core import BlockBandedOp, EllOp, block_banded_spd
 from repro.kernels import ops, ref
-from repro.kernels.bbmv import dense_to_bands
 
 
 def run(n: int = 1024, block: int = 128, bands: int = 1, k: int = 64):
     prob = block_banded_spd(n, block=block, bands=bands, n_rhs=k, seed=0)
-    Ab = dense_to_bands(prob.A, bands=bands, block=block)
+    bop = BlockBandedOp.from_dense(prob.A, block=block, bands=bands)
     width = int((np.asarray(prob.A) != 0).sum(1).max())
     width = -(-width // 8) * 8
-    vals, cols = ell_from_dense(prob.A, width)
+    eop = EllOp.from_dense(prob.A, width=width)
 
-    y_b = ops.bbmv(Ab, prob.x_star, bands=bands, block=block)
-    y_e = ops.spmv_ell(vals, cols, prob.x_star, tile=128)
+    # operator-layer matvecs (Pallas kernels behind; interpret mode on CPU)
+    y_b = bop.matvec(prob.x_star)
+    y_e = eop.matvec(prob.x_star)
     y_d = prob.A @ prob.x_star
     emit("bench_kernels", check_bbmv=f"{float(jnp.abs(y_b-y_d).max()):.2e}",
          check_ell=f"{float(jnp.abs(y_e-y_d).max()):.2e}")
@@ -40,20 +39,19 @@ def run(n: int = 1024, block: int = 128, bands: int = 1, k: int = 64):
     # Modeled arithmetic intensity on the A-stream (FLOPs per byte of matrix
     # read): blocked tiles amortize k RHS columns per element; ELL pays the
     # same matrix bytes plus a gathered row of x per nonzero (uncoalesced).
-    nb = n // block
-    tiles = nb * (2 * bands + 1)
-    bbmv_bytes = tiles * block * block * 4
-    bbmv_flops = 2 * tiles * block * block * k
-    ell_bytes = n * width * (4 + 4) + n * width * k * 4   # vals+cols+gathered x
-    ell_flops = 2 * n * width * k
+    bbmv_bytes = bop.nnz_cost() * 4
+    bbmv_flops = 2 * bop.nnz_cost() * k
+    ell_bytes = eop.nnz_cost() * (4 + 4) + eop.nnz_cost() * k * 4
+    ell_flops = 2 * eop.nnz_cost() * k
     emit("bench_kernels", layout="block_banded",
          ai_flops_per_byte=f"{bbmv_flops/bbmv_bytes:.1f}",
-         wall_us=f"{timed(lambda: ops.bbmv(Ab, prob.x_star, bands=bands, block=block))*1e6:.0f}")
+         wall_us=f"{timed(lambda: bop.matvec(prob.x_star))*1e6:.0f}")
     emit("bench_kernels", layout="ell_gather",
          ai_flops_per_byte=f"{ell_flops/ell_bytes:.1f}",
-         wall_us=f"{timed(lambda: ops.spmv_ell(vals, cols, prob.x_star, tile=128))*1e6:.0f}")
+         wall_us=f"{timed(lambda: eop.matvec(prob.x_star))*1e6:.0f}")
 
     # fused sweep kernel vs oracle
+    nb = bop.nb
     blocks = jax.random.randint(jax.random.key(1), (nb,), 0, nb)
     x0 = jnp.zeros_like(prob.b)
     out = ops.block_gs_sweep(prob.A, prob.b, x0, blocks, block=block, beta=1.0)

@@ -24,8 +24,13 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+import time
+
 from benchmarks.common import emit, timed
-from repro.core import cg_solve, random_lsq, rk_solve, theory, to_unit_diagonal
+from repro.core import (BlockBandedOp, block_banded_spd, cg_solve, random_lsq,
+                        rk_solve, theory, to_unit_diagonal)
+from repro.core.engine import scheduled_tau, solve_distributed
+from repro.launch.mesh import make_host_mesh
 
 
 def _first_at(relresid, targets, floor):
@@ -80,5 +85,40 @@ def run(m: int = 4096, n: int = 512, rhs: int = 8, sweeps: int = 12,
     return rk_r, cg_ne
 
 
+def run_banded_rk(n: int = 2048, block: int = 64, bands: int = 2,
+                  rhs: int = 8, rounds: int = 40, local_steps: int = 32,
+                  beta: float = 0.9, seed: int = 0, workers: int = 0):
+    """Block-banded Kaczmarz through the unified distributed driver — the
+    Kaczmarz action × BlockBandedOp point of the engine's action×format
+    grid (ISSUE 2 acceptance).  Each step reads/writes only (2*bands+1)
+    MXU-shaped tiles, so the row action keeps the paper's Θ(nnz) cost on
+    the TPU-native layout; sync is the RK-style delta psum with scheduled
+    staleness local_steps - 1.
+    """
+    prob = block_banded_spd(n, block=block, bands=bands, n_rhs=rhs, seed=seed)
+    op = BlockBandedOp.from_dense(prob.A, block=block, bands=bands)
+    x0 = jnp.zeros_like(prob.x_star)
+    workers = workers or len(jax.devices())
+    mesh = make_host_mesh(workers)
+    tau = scheduled_tau(workers, local_steps, shared_stream=True)
+
+    t0 = time.perf_counter()
+    res = solve_distributed(op, prob.b, x0, prob.x_star, action="rk",
+                            key=jax.random.key(1), mesh=mesh, rounds=rounds,
+                            local_steps=local_steps, beta=beta)
+    jax.block_until_ready(res.x)
+    wall = time.perf_counter() - t0
+    r = np.linalg.norm(np.asarray(res.resid), axis=1)
+    bn = float(jnp.linalg.norm(prob.b))
+    rel = float(jnp.linalg.norm(prob.b - prob.A @ res.x)) / bn
+    emit("bench_lsq_banded_rk", n=n, block=block, bands=bands, rhs=rhs,
+         workers=workers, rounds=rounds, local_steps=local_steps, tau=tau,
+         beta=beta, nnz_frac=f"{op.nnz_cost() / (n * n):.4f}",
+         relresid_first=f"{r[0] / bn:.3e}", relresid_last=f"{r[-1] / bn:.3e}",
+         final_relresid=f"{rel:.3e}", wall_s=f"{wall:.2f}")
+    return res
+
+
 if __name__ == "__main__":
     run()
+    run_banded_rk()

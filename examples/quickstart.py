@@ -12,8 +12,7 @@ Sec. 2.3 rescaling), then solves it three ways:
 import jax
 import jax.numpy as jnp
 
-from repro.core import (async_rgs_solve, cg_solve, random_sparse_spd,
-                        rgs_solve, theory)
+from repro.core import Schedule, cg_solve, random_sparse_spd, solve, theory
 
 
 def main():
@@ -23,8 +22,9 @@ def main():
     bn = float(jnp.linalg.norm(prob.b))
     print(f"n={n}, nnz/row~32, kappa={float(prob.kappa):.1f}, 4 right-hand sides")
 
-    res = rgs_solve(prob.A, prob.b, x0, prob.x_star, key=jax.random.key(1),
-                    num_iters=sweeps * n, record_every=n)
+    # the unified front door: solve(problem, format=..., schedule=...)
+    res = solve(prob, key=jax.random.key(1),
+                schedule=Schedule(num_iters=sweeps * n, record_every=n))
     for s in (1, 5, 10):
         print(f"  sync RGS  sweep {s:2d}: relative residual "
               f"{float(jnp.linalg.norm(res.resid[s-1]))/bn:.3e}")
@@ -32,10 +32,11 @@ def main():
     tau = 32
     rho = float(theory.rho(prob.A))
     beta = theory.beta_opt(rho, tau)
-    ares = async_rgs_solve(prob.A, prob.b, x0, prob.x_star,
-                           key=jax.random.key(1), delay_key=jax.random.key(2),
-                           num_iters=sweeps * n, tau=tau, beta=beta,
-                           delay_mode="uniform", record_every=n)
+    # tau > 0 routes to the bounded-delay simulator of the paper's Sec. 4
+    ares = solve(prob, key=jax.random.key(1), delay_key=jax.random.key(2),
+                 beta=beta, delay_mode="uniform",
+                 schedule=Schedule(num_iters=sweeps * n, tau=tau,
+                                   record_every=n))
     print(f"  async RGS (tau={tau}, beta~={beta:.3f}) sweep {sweeps}: "
           f"relative residual {float(jnp.linalg.norm(ares.resid[-1]))/bn:.3e}")
 

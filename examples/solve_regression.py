@@ -16,7 +16,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core import (async_rk_solve, cg_solve, rk_solve, theory,
+from repro.core import (LSQProblem, Schedule, cg_solve, solve, theory,
                         to_unit_diagonal)
 
 
@@ -39,23 +39,26 @@ def main():
     yn = float(jnp.linalg.norm(Y))
     floor = float(jnp.linalg.norm(Y - X @ W_star)) / yn
     s = jnp.linalg.svd(X, compute_uv=False)
+    # package as an LSQProblem so the unified solve() front door applies
+    prob = LSQProblem(A=X, b=Y, x_star=W_star, x_true=W_true,
+                      sigma_min=s[-1], sigma_max=s[0])
     print(f"least squares: m={m}, n={n}, targets={k}, "
           f"kappa(X)={float(s[0]/s[-1]):.1f}, optimum relresid={floor:.3e}")
 
     sweeps = 10
     t0 = time.time()
-    res = rk_solve(X, Y, W0, W_star, key=jax.random.key(0),
-                   num_iters=sweeps * m, record_every=m)
+    res = solve(prob, key=jax.random.key(0),
+                schedule=Schedule(num_iters=sweeps * m, record_every=m))
     t_rk = time.time() - t0
 
     # Async RK with the Thm-analogous step size beta~ = 1/(1 + 2 rho_rk tau).
     rho_rk = float(theory.rk_rho(X))
     tau = 64
     beta = theory.beta_opt_rk(rho_rk, tau)
-    ares = async_rk_solve(X, Y, W0, W_star, key=jax.random.key(0),
-                          delay_key=jax.random.key(1),
-                          num_iters=sweeps * m, tau=tau, beta=beta,
-                          record_every=m)
+    ares = solve(prob, key=jax.random.key(0), delay_key=jax.random.key(1),
+                 beta=beta,
+                 schedule=Schedule(num_iters=sweeps * m, tau=tau,
+                                   record_every=m))
 
     # Baseline: CG on the Jacobi-rescaled normal equations (Sec. 2.3), as
     # the old hand-rolled path did — kappa is still squared relative to X

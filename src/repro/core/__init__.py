@@ -1,5 +1,10 @@
 """repro.core — the paper's contribution: randomized (asynchronous) linear
-solvers for SPD systems with provable rates, plus the supporting theory."""
+solvers for SPD systems with provable rates, plus the supporting theory.
+
+Layering (DESIGN.md): ``operators`` (matrix formats) → ``engine`` (the one
+action×format×schedule solver) → legacy entry points (thin wrappers kept
+bit-compatible) → ``theory`` (rate formulas the schedules consume).
+"""
 
 from repro.core.spd import (
     SPDProblem,
@@ -11,6 +16,9 @@ from repro.core.spd import (
     random_sparse_spd,
     to_unit_diagonal,
 )
+from repro.core.operators import BlockBandedOp, DenseOp, EllOp, as_operator
+from repro.core import engine
+from repro.core.engine import Schedule, scheduled_tau, solve
 from repro.core.rgs import SolveResult, block_gs_solve, rgs_general, rgs_solve
 from repro.core.async_rgs import async_rgs_solve, iteration_identity_gap
 from repro.core.parallel_rgs import (
@@ -32,11 +40,16 @@ from repro.core.kaczmarz import (
 from repro.core import theory
 
 __all__ = [
+    "BlockBandedOp",
+    "DenseOp",
+    "EllOp",
     "LSQProblem",
-    "SPDProblem",
-    "SolveResult",
     "ParallelSolveResult",
+    "SPDProblem",
+    "Schedule",
+    "SolveResult",
     "a_norm_sq",
+    "as_operator",
     "async_rgs_solve",
     "async_rk_solve",
     "block_banded_spd",
@@ -45,6 +58,7 @@ __all__ = [
     "dense_spd",
     "effective_tau",
     "ell_from_dense",
+    "engine",
     "fcg_solve",
     "iteration_identity_gap",
     "laplacian_spd",
@@ -59,6 +73,8 @@ __all__ = [
     "rgs_solve",
     "rk_effective_tau",
     "rk_solve",
+    "scheduled_tau",
+    "solve",
     "theory",
     "to_unit_diagonal",
 ]

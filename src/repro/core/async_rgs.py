@@ -10,33 +10,24 @@ Inconsistent read (eq. 16, Thm 6.1):
     gamma_j = (x* - x_{K(j)}, d_j)_A,   {0..j-tau-1} ⊆ K(j)
     x_{j+1} = x_j + beta * gamma_j d_j
 
-Mechanics: we keep a ring buffer of the last ``tau`` applied updates
-(coordinate r_t, applied amount beta*gamma_t).  The stale read is never
-materialized; instead we use
-
-    A_r x_{k(j)} = A_r x_j - sum_{t invisible} (beta*gamma_t) A[r, r_t]
-
-which is exact, O(n + tau) per iteration, and valid for both models (the
-models differ only in *which* recent updates are invisible: a suffix of
-length s_j for consistent reads, an arbitrary independent subset for
-inconsistent reads).  Delay schedules are drawn from a key independent of
-the direction key — Assumption A-4 (independent delays).
+``async_rgs_solve`` is a thin wrapper over the engine's bounded-delay
+simulator (``repro.core.engine.solve_async_sim`` with the "gs" action; the
+same simulator drives ``async_rk_solve`` with the row action — the two
+differ only in the correction weight and update direction).  See the engine
+docstring for the ring-buffer mechanics that reconstruct the stale read
+exactly in O(n + tau) per iteration.
 """
 from __future__ import annotations
-
-import functools
 
 import jax
 import jax.numpy as jnp
 
-from repro.core import spd
-from repro.core.rgs import SolveResult, _record
+from repro.core.engine import SolveResult, solve_async_sim
+from repro.core.operators import DenseOp
+
+__all__ = ["SolveResult", "async_rgs_solve", "iteration_identity_gap"]
 
 
-@functools.partial(
-    jax.jit,
-    static_argnames=("num_iters", "tau", "record_every", "read_model", "delay_mode"),
-)
 def async_rgs_solve(
     A: jax.Array,
     b: jax.Array,
@@ -62,71 +53,10 @@ def async_rgs_solve(
     read_model "inconsistent": each of the last tau updates is invisible
     independently with prob ``miss_prob`` (K(j) = arbitrary subset, eq. 6).
     """
-    n = A.shape[0]
-    k = b.shape[1]
-    rec = record_every or num_iters
-    assert num_iters % rec == 0
-    if tau == 0:
-        # Degenerates exactly to synchronous RGS; keep one code path anyway
-        # so tests can diff the two implementations.
-        pass
-
-    coords = jax.random.randint(key, (num_iters,), 0, n)
-    t_buf = max(tau, 1)
-
-    if read_model == "consistent":
-        if delay_mode == "fixed":
-            delays = jnp.full((num_iters,), tau, jnp.int32)
-        elif delay_mode == "uniform":
-            delays = jax.random.randint(delay_key, (num_iters,), 0, tau + 1)
-        elif delay_mode == "cyclic":
-            delays = (jnp.arange(num_iters) % (tau + 1)).astype(jnp.int32)
-        else:
-            raise ValueError(delay_mode)
-        aux = delays
-    elif read_model == "inconsistent":
-        aux = jax.random.bernoulli(delay_key, miss_prob, (num_iters, t_buf))
-    else:
-        raise ValueError(read_model)
-
-    ring_r0 = jnp.zeros((t_buf,), jnp.int32)
-    ring_g0 = jnp.zeros((t_buf, k), x0.dtype)
-
-    offsets = jnp.arange(t_buf)
-
-    def step(carry, inp):
-        x, ring_r, ring_g, j = carry
-        r, a = inp
-        # Slot of the update made at iteration (j - 1 - i) is (j - 1 - i) mod t_buf.
-        it_idx = j - 1 - offsets                      # iteration indices, newest first
-        valid = it_idx >= 0
-        if read_model == "consistent":
-            invisible = (offsets < a) & valid          # suffix of length s_j
-        else:
-            invisible = a & valid & (offsets < tau)    # arbitrary subset of last tau
-        slots = jnp.mod(it_idx, t_buf)
-        rs = ring_r[slots]                             # (t_buf,)
-        gs = ring_g[slots]                             # (t_buf, k) applied amounts
-        # Correction restores the stale read: A_r x_stale = A_r x - sum beta*g*A[r, r_t]
-        w = jnp.where(invisible, A[r, rs], 0.0)        # (t_buf,)
-        corr = w @ gs                                  # (k,)
-        gamma = b[r] - A[r] @ x + corr
-        applied = beta * gamma
-        x = x.at[r].add(applied)
-        ring_r = ring_r.at[jnp.mod(j, t_buf)].set(r)
-        ring_g = ring_g.at[jnp.mod(j, t_buf)].set(applied)
-        return (x, ring_r, ring_g, j + 1), None
-
-    def chunk(carry, inp):
-        carry, _ = jax.lax.scan(step, carry, inp)
-        errs = _record(A, b, carry[0], x_star)
-        return carry, errs
-
-    inps = (coords.reshape(-1, rec), aux.reshape((-1, rec) + aux.shape[1:]))
-    carry = (x0, ring_r0, ring_g0, jnp.array(0, jnp.int32))
-    carry, (errs, resids) = jax.lax.scan(chunk, carry, inps)
-    iters = (1 + jnp.arange(num_iters // rec)) * rec
-    return SolveResult(x=carry[0], err_sq=errs, resid=resids, iters=iters)
+    return solve_async_sim(
+        DenseOp(A), b, x0, x_star, action="gs", key=key, delay_key=delay_key,
+        num_iters=num_iters, tau=tau, beta=beta, read_model=read_model,
+        delay_mode=delay_mode, miss_prob=miss_prob, record_every=record_every)
 
 
 def iteration_identity_gap(A, b, x, x_star, x_stale, r, beta=1.0):

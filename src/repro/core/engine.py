@@ -1,0 +1,936 @@
+"""The single solver engine behind the RGS/RK stack (DESIGN.md §4).
+
+The paper's algorithms are one family: pick a random direction (coordinate,
+aligned block, or row), compute the residual along it from a possibly-stale
+iterate, apply a damped update, and synchronize periodically so the
+staleness stays bounded by a *scheduled* tau.  Pre-refactor, that family
+was six divergent hand-rolled loops; this module is the one implementation,
+parameterized along three orthogonal axes:
+
+* **action**  — what a local update does: ``"gs"`` (coordinate / block
+  Gauss-Seidel on an SPD system) or ``"rk"`` (Kaczmarz row action on a
+  square or rectangular system);
+* **format**  — how the matrix is stored and read, via the operator layer
+  (``repro.core.operators``: dense, block-banded, ELL);
+* **schedule** — when updates become visible: sequential (tau = 0), the
+  bounded-delay *simulator* of Secs. 4/6 (ring-buffer exact stale reads),
+  or the distributed periodic-synchronization scheme of Thm 4.1(a) over a
+  shard_map worker mesh, with the sync collective (all-gather vs neighbor
+  halo exchange vs delta psum) chosen from the operator's halo width.
+
+The legacy entry points (``rgs_solve``, ``block_gs_solve``,
+``parallel_rgs_solve``/``_banded``/``_halo``, ``rk_solve``,
+``parallel_rk_solve``, ``async_rgs_solve``, ``async_rk_solve``) are thin
+wrappers over this engine and reproduce their pre-refactor iterates
+bit-for-bit given the same PRNG keys — the update arithmetic below is
+transplanted verbatim, operation order included, and the equivalence is
+pinned by tests/test_engine_equivalence.py against frozen legacy copies.
+"""
+from __future__ import annotations
+
+import functools
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro.compat import pvary, shard_map
+from repro.core.operators import (
+    BlockBandedOp,
+    DenseOp,
+    EllOp,
+    as_operator,
+    banded_panel_residual,
+    banded_panel_residual_window,
+    banded_rows_matvec,
+    banded_window_matvec,
+)
+
+
+# ---------------------------------------------------------------------------
+# Result types (re-exported by repro.core.rgs / repro.core.parallel_rgs)
+# ---------------------------------------------------------------------------
+
+class SolveResult(NamedTuple):
+    x: jax.Array           # (n, k) final iterate
+    err_sq: jax.Array      # (records, k) squared error at each record point
+    resid: jax.Array       # (records, k) ||b - A x_m||_2 at each record point
+    iters: jax.Array       # (records,) iteration index of each record
+
+
+class ParallelSolveResult(NamedTuple):
+    x: jax.Array        # (n, k)
+    err_sq: jax.Array   # (rounds, k)
+    resid: jax.Array    # (rounds, k)
+    tau: int            # effective staleness bound of the schedule
+
+
+# ---------------------------------------------------------------------------
+# Schedule layer
+# ---------------------------------------------------------------------------
+
+def scheduled_tau(num_workers: int, local_steps: int, *,
+                  shared_stream: bool = False) -> int:
+    """Staleness bound of the periodic-synchronization schedule.
+
+    ``shared_stream=False`` (per-worker direction streams, the RGS scheme):
+    a worker's read can miss every other worker's in-round updates, so
+    tau = (P - 1) * local_steps — the paper's Thm 4.1(a) bound.
+
+    ``shared_stream=True`` (one global i.i.d. pick stream partitioned by
+    owner, the RK scheme): within a round a pick misses at most the other
+    workers' *earlier* in-round updates, so tau = local_steps - 1 (and 0 at
+    P = 1, where every pick is owned and nothing is ever stale).
+    """
+    if shared_stream:
+        return 0 if num_workers == 1 else local_steps - 1
+    return (num_workers - 1) * local_steps
+
+
+class Schedule(NamedTuple):
+    """Execution plan for ``solve``: exactly one of the three modes.
+
+    * sequential:  ``num_iters`` > 0, ``tau`` == 0, ``rounds`` == 0
+    * async sim:   ``num_iters`` > 0, ``tau``  > 0  (bounded-delay model)
+    * distributed: ``rounds`` > 0 and ``local_steps`` > 0 (needs a mesh)
+    """
+    num_iters: int = 0
+    rounds: int = 0
+    local_steps: int = 0
+    tau: int = 0
+    record_every: int = 0
+
+    @property
+    def distributed(self) -> bool:
+        return self.rounds > 0
+
+    def effective_tau(self, num_workers: int, *, shared_stream: bool = False) -> int:
+        if self.distributed:
+            return scheduled_tau(num_workers, self.local_steps,
+                                 shared_stream=shared_stream)
+        return self.tau
+
+
+# ---------------------------------------------------------------------------
+# Shared metrics/recording subsystem (replaces _record / _record_lsq /
+# the inline banded metric blocks)
+# ---------------------------------------------------------------------------
+
+def record_metrics(op, b, x, x_star, *, norm: str):
+    """(err_sq, resid) per RHS column.
+
+    ``norm="A"``: ||x - x*||_A^2 (the SPD family's Lyapunov function);
+    ``norm="euclid"``: ||x - x*||_2^2 (rectangular systems have no A-norm).
+    ``resid`` is always ||b - A x||_2.
+    """
+    mv = getattr(op, "matvec_ref", op.matvec)
+    e = x - x_star
+    if norm == "A":
+        err = jnp.einsum("nk,nk->k", e, mv(e))
+    elif norm == "euclid":
+        err = jnp.einsum("nk,nk->k", e, e)
+    else:
+        raise ValueError(norm)
+    return err, jnp.linalg.norm(b - mv(x), axis=0)
+
+
+def sample_rows(key: jax.Array, rn: jax.Array, num: int) -> jax.Array:
+    """``num`` i.i.d. row indices with P(i) ∝ rn_i (zero rows never picked)."""
+    return jax.random.categorical(key, jnp.log(rn), shape=(num,))
+
+
+# ---------------------------------------------------------------------------
+# Sequential engine
+# ---------------------------------------------------------------------------
+
+@functools.partial(
+    jax.jit, static_argnames=("action", "num_iters", "block", "record_every"))
+def solve_sequential(
+    op,
+    b: jax.Array,
+    x0: jax.Array,
+    x_star: jax.Array,
+    *,
+    action: str,
+    key: jax.Array,
+    num_iters: int,
+    beta: float = 1.0,
+    block: int = 1,
+    record_every: int = 0,
+) -> SolveResult:
+    """Sequential randomized solve: one local-update step per iteration.
+
+    action "gs":  coordinate (block=1) or aligned-block Gauss-Seidel on a
+                  unit-diagonal SPD system; directions uniform.
+    action "rk":  Kaczmarz row action; rows sampled ∝ ||A_i||^2.
+    """
+    rec = record_every or num_iters
+    assert num_iters % rec == 0
+
+    if action == "gs":
+        norm = "A"
+        if isinstance(op, BlockBandedOp):
+            # Θ(nnz) block-GS on the banded format (new capability: the
+            # sequential twin of the banded distributed path).
+            bsz = op.block
+            picks = jax.random.randint(key, (num_iters,), 0, op.nb)
+
+            def step(x, bi):
+                g = op.residual_panel(b, x, bi)
+                cur = jax.lax.dynamic_slice_in_dim(x, bi * bsz, bsz, 0)
+                return jax.lax.dynamic_update_slice_in_dim(
+                    x, cur + beta * g, bi * bsz, 0), None
+        elif block == 1:
+            picks = jax.random.randint(key, (num_iters,), 0, op.shape[0])
+
+            def step(x, r):
+                gamma = b[r] - op.row_dot(r, x)
+                return x.at[r].add(beta * gamma), None
+        else:
+            if not isinstance(op, DenseOp):
+                raise NotImplementedError(
+                    "block GS with block > 1 needs DenseOp or BlockBandedOp")
+            nb = op.shape[0] // block
+            picks = jax.random.randint(key, (num_iters,), 0, nb)
+
+            def step(x, bi):
+                rows = bi * block + jnp.arange(block)
+                Ab = op.row_panel(bi, block)
+                gamma = b[rows] - Ab @ x
+                return x.at[rows].add(beta * gamma), None
+    elif action == "rk":
+        if not isinstance(op, (DenseOp, EllOp)):
+            raise NotImplementedError(
+                "sequential RK needs per-row access (DenseOp/EllOp); the "
+                "banded Kaczmarz path runs through solve_distributed")
+        norm = "euclid"
+        rn = op.row_norms_sq()
+        picks = sample_rows(key, rn, num_iters)
+
+        def step(x, r):
+            g = (b[r] - op.row_dot(r, x)) / rn[r]
+            return op.rk_update(x, r, g, beta), None
+    else:
+        raise ValueError(f"unknown action: {action!r}")
+
+    def chunk(x, ps):
+        x, _ = jax.lax.scan(step, x, ps)
+        return x, record_metrics(op, b, x, x_star, norm=norm)
+
+    x, (errs, resids) = jax.lax.scan(chunk, x0, picks.reshape(-1, rec))
+    iters = (1 + jnp.arange(num_iters // rec)) * rec
+    return SolveResult(x=x, err_sq=errs, resid=resids, iters=iters)
+
+
+# ---------------------------------------------------------------------------
+# Bounded-delay asynchronous simulator (the paper's Secs. 4/6 read models)
+# ---------------------------------------------------------------------------
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("action", "num_iters", "tau", "record_every",
+                     "read_model", "delay_mode"),
+)
+def solve_async_sim(
+    op,
+    b: jax.Array,
+    x0: jax.Array,
+    x_star: jax.Array,
+    *,
+    action: str,
+    key: jax.Array,
+    delay_key: jax.Array,
+    num_iters: int,
+    tau: int,
+    beta: float = 1.0,
+    read_model: str = "consistent",
+    delay_mode: str = "fixed",
+    miss_prob: float = 0.5,
+    record_every: int = 0,
+) -> SolveResult:
+    """Faithful simulator of delays bounded by ``tau`` (consistent and
+    inconsistent reads), for both the coordinate ("gs") and row ("rk")
+    actions.  Mechanics: a ring buffer of the last ``tau`` applied updates
+    (direction index, applied amount); the stale read is reconstructed
+    exactly via
+
+        A_r x_stale = A_r x - sum_{t invisible} c_t * w(r, r_t)
+
+    where the correction weight ``w`` is the coupling ``A[r, r_t]`` for the
+    coordinate action and the row inner product ``<A_r, A_{r_t}>`` for the
+    row action.  Delay schedules are drawn from ``delay_key``, independent
+    of the direction key (Assumption A-4).
+    """
+    if not isinstance(op, DenseOp):
+        raise NotImplementedError("the async simulator is dense-only")
+    A = op.A
+    k = b.shape[1]
+    rec = record_every or num_iters
+    assert num_iters % rec == 0
+    t_buf = max(tau, 1)
+
+    if action == "gs":
+        norm = "A"
+        picks = jax.random.randint(key, (num_iters,), 0, A.shape[0])
+    elif action == "rk":
+        norm = "euclid"
+        rn = op.row_norms_sq()
+        picks = sample_rows(key, rn, num_iters)
+    else:
+        raise ValueError(f"unknown action: {action!r}")
+
+    if read_model == "consistent":
+        if delay_mode == "fixed":
+            aux = jnp.full((num_iters,), tau, jnp.int32)
+        elif delay_mode == "uniform":
+            aux = jax.random.randint(delay_key, (num_iters,), 0, tau + 1)
+        elif delay_mode == "cyclic":
+            aux = (jnp.arange(num_iters) % (tau + 1)).astype(jnp.int32)
+        else:
+            raise ValueError(delay_mode)
+    elif read_model == "inconsistent":
+        aux = jax.random.bernoulli(delay_key, miss_prob, (num_iters, t_buf))
+    else:
+        raise ValueError(read_model)
+
+    ring_r0 = jnp.zeros((t_buf,), jnp.int32)
+    ring_c0 = jnp.zeros((t_buf, k), x0.dtype)
+    offsets = jnp.arange(t_buf)
+
+    def step(carry, inp):
+        x, ring_r, ring_c, j = carry
+        r, a = inp
+        it_idx = j - 1 - offsets              # iteration indices, newest first
+        valid = it_idx >= 0
+        if read_model == "consistent":
+            invisible = (offsets < a) & valid  # suffix of length s_j
+        else:
+            invisible = a & valid & (offsets < tau)  # subset of last tau
+        slots = jnp.mod(it_idx, t_buf)
+        rs = ring_r[slots]                     # (t_buf,)
+        cs = ring_c[slots]                     # (t_buf, k) applied amounts
+        if action == "gs":
+            w = jnp.where(invisible, A[r, rs], 0.0)
+            corr = w @ cs
+            gamma = b[r] - A[r] @ x + corr
+            applied = beta * gamma
+            x = x.at[r].add(applied)
+        else:
+            w = jnp.where(invisible, A[rs] @ A[r], 0.0)
+            corr = w @ cs
+            gamma = (b[r] - A[r] @ x + corr) / rn[r]
+            applied = beta * gamma
+            x = x + A[r][:, None] * applied[None, :]
+        ring_r = ring_r.at[jnp.mod(j, t_buf)].set(r)
+        ring_c = ring_c.at[jnp.mod(j, t_buf)].set(applied)
+        return (x, ring_r, ring_c, j + 1), None
+
+    def chunk(carry, inp):
+        carry, _ = jax.lax.scan(step, carry, inp)
+        return carry, record_metrics(op, b, carry[0], x_star, norm=norm)
+
+    inps = (picks.reshape(-1, rec), aux.reshape((-1, rec) + aux.shape[1:]))
+    carry = (x0, ring_r0, ring_c0, jnp.array(0, jnp.int32))
+    carry, (errs, resids) = jax.lax.scan(chunk, carry, inps)
+    iters = (1 + jnp.arange(num_iters // rec)) * rec
+    return SolveResult(x=carry[0], err_sq=errs, resid=resids, iters=iters)
+
+
+# ---------------------------------------------------------------------------
+# Distributed driver (shard_map): one skeleton, five action×format×sync
+# strategies.  The update arithmetic of the four legacy strategies is
+# transplanted verbatim — bit-identity, not mere closeness, is tested.
+# ---------------------------------------------------------------------------
+
+def solve_distributed(
+    op,
+    b: jax.Array,
+    x0: jax.Array,
+    x_star: jax.Array | None = None,
+    *,
+    action: str = "gs",
+    key: jax.Array,
+    mesh: jax.sharding.Mesh,
+    axis: str = "workers",
+    rounds: int,
+    local_steps: int,
+    block: int = 1,
+    beta: float = 1.0,
+    sync: str = "auto",
+    unroll: bool = False,
+    with_metrics: bool = True,
+) -> ParallelSolveResult:
+    """P-way asynchronous solve under the periodic-synchronization schedule.
+
+    The sync collective is chosen from the operator's halo width when
+    ``sync="auto"``: a finite halo (block-banded) means neighbor halo
+    exchange suffices for the GS action; unbounded reach (dense) needs an
+    all-gather of slab deltas; the RK action accumulates updates across the
+    full coefficient vector and syncs by delta psum.
+    """
+    if sync == "auto":
+        if action == "rk":
+            sync = "psum"
+        elif op.halo_width is not None:
+            sync = "halo"
+        else:
+            sync = "allgather"
+
+    if action == "gs" and isinstance(op, DenseOp) and sync == "allgather":
+        kind = "dense_gs"
+    elif action == "gs" and isinstance(op, BlockBandedOp) and sync == "allgather":
+        kind = "banded_gs"
+    elif action == "gs" and isinstance(op, BlockBandedOp) and sync == "halo":
+        kind = "halo_gs"
+    elif action == "rk" and isinstance(op, DenseOp) and sync == "psum":
+        kind = "dense_rk"
+    elif action == "rk" and isinstance(op, BlockBandedOp) and sync == "psum":
+        kind = "banded_rk"
+    else:
+        raise NotImplementedError(
+            f"no distributed strategy for action={action!r}, "
+            f"format={type(op).__name__}, sync={sync!r}")
+
+    return _distributed_impl(
+        kind, op, b, x0, x_star, key, mesh=mesh, axis=axis, rounds=rounds,
+        local_steps=local_steps, block=block, beta=beta, unroll=unroll,
+        with_metrics=with_metrics)
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("kind", "mesh", "axis", "rounds", "local_steps", "block",
+                     "beta", "unroll", "with_metrics"),
+)
+def _distributed_impl(kind, op, b, x0, xs, key, *, mesh, axis, rounds,
+                      local_steps, block, beta, unroll, with_metrics):
+    num_workers = mesh.shape[axis]
+    k = b.shape[1]
+    zero_m = (jnp.zeros((k,), jnp.float32), jnp.zeros((k,), jnp.float32))
+
+    def local_scan(step, carry, picks):
+        return jax.lax.scan(step, carry, picks,
+                            unroll=local_steps if unroll else 1)
+
+    def round_scan(body, carry, per_round):
+        return jax.lax.scan(body, carry, per_round,
+                            unroll=rounds if unroll else 1)
+
+    shared_stream = kind.endswith("_rk")
+    tau = scheduled_tau(num_workers, local_steps, shared_stream=shared_stream)
+
+    if kind == "dense_gs":
+        x, errs, resids = _dense_gs(
+            op.A, b, x0, xs, key, mesh=mesh, axis=axis, rounds=rounds,
+            local_steps=local_steps, block=block, beta=beta,
+            with_metrics=with_metrics, num_workers=num_workers,
+            zero_m=zero_m, local_scan=local_scan, round_scan=round_scan)
+    elif kind == "banded_gs":
+        x, errs, resids = _banded_gs(
+            op, b, x0, xs, key, mesh=mesh, axis=axis, rounds=rounds,
+            local_steps=local_steps, beta=beta, with_metrics=with_metrics,
+            num_workers=num_workers, zero_m=zero_m, local_scan=local_scan,
+            round_scan=round_scan)
+    elif kind == "halo_gs":
+        x, errs, resids = _halo_gs(
+            op, b, x0, xs, key, mesh=mesh, axis=axis, rounds=rounds,
+            local_steps=local_steps, beta=beta, with_metrics=with_metrics,
+            num_workers=num_workers, zero_m=zero_m, local_scan=local_scan,
+            round_scan=round_scan)
+    elif kind == "dense_rk":
+        x, errs, resids = _dense_rk(
+            op.A, b, x0, xs, key, mesh=mesh, axis=axis, rounds=rounds,
+            local_steps=local_steps, beta=beta, with_metrics=with_metrics,
+            num_workers=num_workers, zero_m=zero_m, local_scan=local_scan,
+            round_scan=round_scan)
+    elif kind == "banded_rk":
+        x, errs, resids = _banded_rk(
+            op, b, x0, xs, key, mesh=mesh, axis=axis, rounds=rounds,
+            local_steps=local_steps, beta=beta, with_metrics=with_metrics,
+            num_workers=num_workers, zero_m=zero_m, local_scan=local_scan,
+            round_scan=round_scan)
+    else:  # pragma: no cover - guarded by solve_distributed
+        raise ValueError(kind)
+
+    return ParallelSolveResult(x=x, err_sq=errs, resid=resids, tau=tau)
+
+
+def _dense_gs(A, b, x0, xs, key, *, mesh, axis, rounds, local_steps, block,
+              beta, with_metrics, num_workers, zero_m, local_scan, round_scan):
+    """Dense slab-partitioned block GS; all-gather of slab deltas.
+
+    x* is consumed fully replicated — the pre-refactor implementation
+    sharded it and re-all-gathered it every round inside the metric path,
+    a pure-waste collective (ISSUE 2 satellite).  The metric values are
+    bitwise unchanged (the gather reconstructed exactly this replica).
+    """
+    n = A.shape[0]
+    slab = n // num_workers
+    assert slab * num_workers == n and slab % block == 0
+    round_keys = jax.random.split(key, rounds)
+
+    def worker(A_sh, b_sh, xs_full, x0_full, keys):
+        # A_sh: (slab, n), b_sh: (slab, k); xs_full/x0_full replicated.
+        w = jax.lax.axis_index(axis)
+        col0 = w * slab
+
+        def round_body(x, rkey):
+            rkey = jax.random.fold_in(rkey, w)
+            picks = jax.random.randint(rkey, (local_steps,), 0, slab // block)
+            # Mark as device-varying: each worker accumulates its own deltas.
+            delta = pvary(
+                jnp.zeros((slab, b_sh.shape[1]), x.dtype), (axis,)
+            )
+
+            def step(delta, bi):
+                rows = bi * block + jnp.arange(block)
+                Ar = A_sh[rows]                          # (block, n)
+                stale = Ar @ x                           # stale replica read
+                # own-slab columns see the *fresh* local updates:
+                own = jax.lax.dynamic_slice(Ar, (0, col0), (block, slab))
+                g = b_sh[rows] - stale - own @ delta
+                return delta.at[rows].add(beta * g), None
+
+            delta, _ = local_scan(step, delta, picks)
+            # Periodic synchronization (the paper's Thm 4.1(a) scheme).
+            x2 = x + jax.lax.all_gather(delta, axis, axis=0, tiled=True)
+            if not with_metrics:
+                return x2, zero_m
+            e_local = (jax.lax.dynamic_slice_in_dim(x2, col0, slab, 0)
+                       - jax.lax.dynamic_slice_in_dim(xs_full, col0, slab, 0))
+            err = jax.lax.psum(
+                jnp.einsum("sk,sk->k", e_local, A_sh @ (x2 - xs_full)), axis)
+            r_local = b_sh - A_sh @ x2
+            rsq = jax.lax.psum(jnp.einsum("sk,sk->k", r_local, r_local), axis)
+            return x2, (err, jnp.sqrt(rsq))
+
+        x, (errs, resids) = round_scan(round_body, pvary(x0_full, (axis,)),
+                                       keys)
+        # Every worker's x is identical after the final all-gather, but the
+        # VMA type system cannot prove it; return the owned slab (the honest
+        # sharding) and let the out_spec reassemble the global vector.
+        x_slab = jax.lax.dynamic_slice_in_dim(x, col0, slab, 0)
+        return x_slab, errs, resids
+
+    mapped = shard_map(
+        worker,
+        mesh=mesh,
+        in_specs=(P(axis, None), P(axis, None), P(None, None), P(None, None),
+                  P(None)),
+        out_specs=(P(axis, None), P(None, None), P(None, None)),
+    )
+    return mapped(A, b, xs, x0, round_keys)
+
+
+def _banded_gs(op, b, x0, xs, key, *, mesh, axis, rounds, local_steps, beta,
+               with_metrics, num_workers, zero_m, local_scan, round_scan):
+    """Block-banded slab GS; per-round all-gather of the owned slab."""
+    block, bands, nb = op.block, op.bands, op.nb
+    n = b.shape[0]
+    slab = n // num_workers
+    nb_local = slab // block
+    assert nb * block == n and nb_local * block == slab
+    round_keys = jax.random.split(key, rounds)
+
+    def worker(Ab_sh, b_sh, keys, x0_full, xs_full):
+        # Ab_sh: (nb_local, width, block, block); b_sh: (slab, k).
+        w = jax.lax.axis_index(axis)
+        row0 = w * slab
+
+        def round_body(x, rkey):
+            rkey = jax.random.fold_in(rkey, w)
+            picks = jax.random.randint(rkey, (local_steps,), 0, nb_local)
+            xw = x   # working replica: own rows fresh, remote rows stale
+
+            def step(xw, bi):
+                g = banded_panel_residual(Ab_sh, b_sh, xw, bi,
+                                          w * nb_local + bi, nb, block, bands)
+                rows0 = row0 + bi * block
+                cur = jax.lax.dynamic_slice_in_dim(xw, rows0, block, 0)
+                return jax.lax.dynamic_update_slice_in_dim(
+                    xw, cur + beta * g, rows0, 0), None
+
+            xw, _ = local_scan(step, xw, picks)
+            own = jax.lax.dynamic_slice_in_dim(xw, row0, slab, 0)
+            x2 = jax.lax.all_gather(own, axis, axis=0, tiled=True)
+            if not with_metrics:
+                return x2, zero_m
+            # metrics (slab-local residual psum)
+            r_local = b_sh - banded_rows_matvec(Ab_sh, x2, w, nb, nb_local,
+                                                block, bands)
+            rsq = jax.lax.psum(jnp.einsum("sk,sk->k", r_local, r_local), axis)
+            if xs_full is not None:
+                e_own = own - jax.lax.dynamic_slice_in_dim(xs_full, row0, slab, 0)
+                esq = jax.lax.psum(
+                    jnp.einsum("sk,sk->k", e_own,
+                               -r_local + (b_sh - banded_rows_matvec(
+                                   Ab_sh, xs_full, w, nb, nb_local, block,
+                                   bands))),
+                    axis)
+            else:
+                esq = rsq
+            return x2, (esq, jnp.sqrt(rsq))
+
+        x, (errs, resids) = round_scan(round_body, pvary(x0_full, (axis,)),
+                                       keys)
+        x_slab = jax.lax.dynamic_slice_in_dim(x, row0, slab, 0)
+        return x_slab, errs, resids
+
+    mapped = shard_map(
+        worker,
+        mesh=mesh,
+        in_specs=(P(axis, None, None, None), P(axis, None), P(None),
+                  P(None, None), P(None, None)),
+        out_specs=(P(axis, None), P(None, None), P(None, None)),
+    )
+    return mapped(op.A_bands, b, round_keys, x0, xs)
+
+
+def _halo_gs(op, b, x0, xs, key, *, mesh, axis, rounds, local_steps, beta,
+             with_metrics, num_workers, zero_m, local_scan, round_scan):
+    """Block-banded slab GS; neighbor halo exchange instead of all-gather.
+
+    Iterates are IDENTICAL to the all-gather strategy — the gathered entries
+    outside the halo were never read.  ``err_sq`` is the A-norm error when
+    ``xs`` is provided (computed slab-locally from the halo window) and NaN
+    otherwise — pre-refactor this slot silently carried the squared
+    residual (ISSUE 2 satellite).
+    """
+    block, bands, nb = op.block, op.bands, op.nb
+    n, k = b.shape
+    slab = n // num_workers
+    nb_local = slab // block
+    halo = bands * block
+    assert halo <= slab, "halo exchange needs bands*block <= slab"
+    round_keys = jax.random.split(key, rounds)
+    down = [(i, i + 1) for i in range(num_workers - 1)]
+    up = [(i + 1, i) for i in range(num_workers - 1)]
+    have_xs = xs is not None
+
+    def worker(Ab_sh, b_sh, x0_sh, keys, *maybe_xs):
+        w = jax.lax.axis_index(axis)
+
+        def exchange(xw):
+            own = jax.lax.dynamic_slice_in_dim(xw, halo, slab, 0)
+            lo_edge = own[:halo]          # my top rows -> prev worker's hi halo
+            hi_edge = own[-halo:]         # my bottom rows -> next worker's lo halo
+            from_prev = jax.lax.ppermute(hi_edge, axis, down)   # w-1's bottom
+            from_next = jax.lax.ppermute(lo_edge, axis, up)     # w+1's top
+            xw = jax.lax.dynamic_update_slice_in_dim(xw, from_prev, 0, 0)
+            return jax.lax.dynamic_update_slice_in_dim(
+                xw, from_next, halo + slab, 0)
+
+        if have_xs:
+            xs_w = exchange(jnp.pad(maybe_xs[0], ((halo, halo), (0, 0))))
+
+        def round_body(xw, rkey):
+            rkey = jax.random.fold_in(rkey, w)
+            picks = jax.random.randint(rkey, (local_steps,), 0, nb_local)
+
+            def step(xw, bi):
+                g = banded_panel_residual_window(
+                    Ab_sh, b_sh, xw, bi, w * nb_local + bi, nb, slab, block,
+                    bands)
+                r0 = halo + bi * block
+                cur = jax.lax.dynamic_slice_in_dim(xw, r0, block, 0)
+                return jax.lax.dynamic_update_slice_in_dim(
+                    xw, cur + beta * g, r0, 0), None
+
+            xw, _ = local_scan(step, xw, picks)
+            xw = exchange(xw)
+            if not with_metrics:
+                return xw, zero_m
+            resid2 = jnp.zeros((k,), jnp.float32)
+            for bi in range(nb_local):
+                r = banded_panel_residual_window(
+                    Ab_sh, b_sh, xw, bi, w * nb_local + bi, nb, slab, block,
+                    bands).astype(jnp.float32)
+                resid2 = resid2 + jnp.einsum("bk,bk->k", r, r)
+            rsq = jax.lax.psum(resid2, axis)
+            if have_xs:
+                # A-norm error from the window: e^T A e = sum over owned
+                # rows of e_own * (A e)_own, psum'd across workers.
+                ew = xw - xs_w
+                Ae_own = banded_window_matvec(Ab_sh, ew, w, nb, nb_local,
+                                              block, bands)
+                e_own = jax.lax.dynamic_slice_in_dim(ew, halo, slab, 0)
+                esq = jax.lax.psum(
+                    jnp.einsum("sk,sk->k", e_own, Ae_own), axis)
+            else:
+                esq = jnp.full((k,), jnp.nan, jnp.float32)
+            return xw, (esq, jnp.sqrt(rsq))
+
+        xw0 = jnp.pad(x0_sh, ((halo, halo), (0, 0)))
+        xw0 = exchange(xw0)
+        xw, (errs, resids) = round_scan(round_body, xw0, keys)
+        return jax.lax.dynamic_slice_in_dim(xw, halo, slab, 0), errs, resids
+
+    in_specs = [P(axis, None, None, None), P(axis, None), P(axis, None),
+                P(None)]
+    args = [op.A_bands, b, x0, round_keys]
+    if have_xs:
+        in_specs.append(P(axis, None))
+        args.append(xs)
+    mapped = shard_map(
+        worker,
+        mesh=mesh,
+        in_specs=tuple(in_specs),
+        out_specs=(P(axis, None), P(None, None), P(None, None)),
+    )
+    return mapped(*args)
+
+
+def _dense_rk(A, b, x0, xs, key, *, mesh, axis, rounds, local_steps, beta,
+              with_metrics, num_workers, zero_m, local_scan, round_scan):
+    """Row-slab Kaczmarz; one global i.i.d. pick stream, delta psum sync."""
+    m = A.shape[0]
+    slab = m // num_workers
+    assert slab * num_workers == m, (
+        f"worker count ({num_workers}) must divide the row count ({m})")
+    rn = jnp.einsum("mn,mn->m", A, A)
+    picks = sample_rows(key, rn, rounds * local_steps).reshape(
+        rounds, local_steps)
+
+    def worker(A_sh, b_sh, rn_sh, x0_full, xs_full, picks):
+        # A_sh: (slab, n); b_sh: (slab, k); rn_sh: (slab,); x0/xs replicated.
+        w = jax.lax.axis_index(axis)
+        row0 = w * slab
+
+        def round_body(xw, picks_r):
+            delta = pvary(jnp.zeros_like(xw), (axis,))
+
+            def step(carry, p):
+                xw, delta = carry
+                li = p - row0
+                mine = (li >= 0) & (li < slab)
+                lic = jnp.clip(li, 0, slab - 1)
+                Ar = A_sh[lic]                               # (n,)
+                g = (b_sh[lic] - Ar @ xw) / rn_sh[lic]       # (k,)
+                # Arithmetic mirrors the sequential step exactly
+                # (bit-identity at P=1): scalar coefficient times row outer
+                # product.
+                upd = jnp.where(mine, beta, 0.0) * Ar[:, None] * g[None, :]
+                return (xw + upd, delta + upd), None
+
+            (xw, delta), _ = local_scan(step, (xw, delta), picks_r)
+            if num_workers > 1:
+                # Periodic synchronization: pull in the other workers'
+                # updates.  Skipped entirely at P=1 — it would be a bitwise
+                # no-op in exact arithmetic, but XLA folds the single-device
+                # psum away and reassociates xw + (delta - delta), costing
+                # an ulp per round and breaking the exact-degeneracy
+                # guarantee the consistency tests rely on.
+                xw = xw + (jax.lax.psum(delta, axis) - delta)
+            if not with_metrics:
+                return xw, zero_m
+            # xw is a full replica, so the error is local; residual rows are
+            # sharded, so the squared norm needs a psum.
+            err = jnp.einsum("nk,nk->k", xw - xs_full, xw - xs_full)
+            r_local = b_sh - A_sh @ xw
+            rsq = jax.lax.psum(jnp.einsum("sk,sk->k", r_local, r_local), axis)
+            return xw, (err, jnp.sqrt(rsq))
+
+        xw, (errs, resids) = round_scan(round_body, pvary(x0_full, (axis,)),
+                                        picks)
+        return xw, errs, resids
+
+    mapped = shard_map(
+        worker,
+        mesh=mesh,
+        in_specs=(P(axis, None), P(axis, None), P(axis), P(None, None),
+                  P(None, None), P(None, None)),
+        out_specs=(P(None, None), P(None, None), P(None, None)),
+    )
+    return mapped(A, b, rn, x0, xs, picks)
+
+
+def _banded_rk(op, b, x0, xs, key, *, mesh, axis, rounds, local_steps, beta,
+               with_metrics, num_workers, zero_m, local_scan, round_scan):
+    """Block-banded Kaczmarz — the new point in the action×format grid.
+
+    The row panel of a random block-row is sampled ∝ its squared Frobenius
+    norm (the block extension of Strohmer-Vershynin sampling); the update is
+    the damped simultaneous-row (Cimmino-within-panel) action
+
+        x += beta * A_B^T diag(1/||a_i||^2) (b - A x)_B
+
+    whose writes reach only ``bands`` block columns either side of the
+    panel — the same finite reach the banded GS strategies exploit.  Like
+    the dense RK strategy, the pick stream is global (one i.i.d. sequence
+    partitioned by owner), each worker carries its own updates fresh within
+    a round, and synchronization is a delta psum with scheduled staleness
+    ``local_steps - 1``.
+    """
+    block, bands, nb = op.block, op.bands, op.nb
+    width = op.width
+    n = b.shape[0]
+    slab = n // num_workers
+    nb_local = slab // block
+    assert nb * block == n and nb_local * block == slab
+    rn = op.row_norms_sq()                                  # (nb, block)
+    panel_w = jnp.sum(rn, axis=1)                           # (nb,) — raw
+    # norms: a zero panel must keep sampling weight 0 (log 0 = -inf).
+    rn = jnp.where(rn > 0, rn, 1.0)                         # divisor guard only
+    picks = sample_rows(key, panel_w, rounds * local_steps).reshape(
+        rounds, local_steps)
+
+    def worker(Ab_sh, b_sh, rn_sh, x0_full, xs_full, picks):
+        # Ab_sh: (nb_local, width, block, block); rn_sh: (nb_local, block).
+        w = jax.lax.axis_index(axis)
+
+        def add_at(v, off, contrib):
+            cur = jax.lax.dynamic_slice_in_dim(v, off, block, 0)
+            return jax.lax.dynamic_update_slice_in_dim(v, cur + contrib, off, 0)
+
+        def apply_panel(xw, delta, tiles, gb, upd):
+            """Scatter A_B^T upd into the band columns of both carries,
+            computing each (block, block) @ (block, k) contribution once."""
+            for d in range(width):
+                cb = gb + d - bands
+                cbc = jnp.clip(cb, 0, nb - 1)
+                valid = (cb >= 0) & (cb < nb)
+                contrib = jnp.dot(tiles[d].T, upd,
+                                  preferred_element_type=jnp.float32)
+                contrib = jnp.where(valid, contrib, 0.0).astype(xw.dtype)
+                xw = add_at(xw, cbc * block, contrib)
+                delta = add_at(delta, cbc * block, contrib)
+            return xw, delta
+
+        def round_body(xw, picks_r):
+            delta = pvary(jnp.zeros_like(xw), (axis,))
+
+            def step(carry, p):
+                xw, delta = carry
+                li = p - w * nb_local
+                mine = (li >= 0) & (li < nb_local)
+                lic = jnp.clip(li, 0, nb_local - 1)
+                gb = w * nb_local + lic
+                g = banded_panel_residual(Ab_sh, b_sh, xw, lic, gb, nb,
+                                          block, bands)          # (block, k)
+                rnp = jax.lax.dynamic_slice_in_dim(rn_sh, lic, 1, 0)[0]
+                gn = (jnp.where(mine, beta, 0.0) * g
+                      / rnp[:, None]).astype(jnp.float32)
+                tiles = jax.lax.dynamic_slice_in_dim(Ab_sh, lic, 1, 0)[0]
+                return apply_panel(xw, delta, tiles, gb, gn), None
+
+            (xw, delta), _ = local_scan(step, (xw, delta), picks_r)
+            if num_workers > 1:
+                xw = xw + (jax.lax.psum(delta, axis) - delta)
+            if not with_metrics:
+                return xw, zero_m
+            r_local = b_sh - banded_rows_matvec(Ab_sh, xw, w, nb, nb_local,
+                                                block, bands)
+            rsq = jax.lax.psum(jnp.einsum("sk,sk->k", r_local, r_local), axis)
+            if xs_full is not None:
+                err = jnp.einsum("nk,nk->k", xw - xs_full, xw - xs_full)
+            else:
+                err = jnp.full((b_sh.shape[1],), jnp.nan, jnp.float32)
+            return xw, (err, jnp.sqrt(rsq))
+
+        xw, (errs, resids) = round_scan(round_body, pvary(x0_full, (axis,)),
+                                        picks)
+        return xw, errs, resids
+
+    mapped = shard_map(
+        worker,
+        mesh=mesh,
+        in_specs=(P(axis, None, None, None), P(axis, None), P(axis, None),
+                  P(None, None), P(None, None), P(None, None)),
+        out_specs=(P(None, None), P(None, None), P(None, None)),
+    )
+    return mapped(op.A_bands, b, rn, x0, xs, picks)
+
+
+# ---------------------------------------------------------------------------
+# Unified entry point: solve(problem, format=..., schedule=...)
+# ---------------------------------------------------------------------------
+
+def solve(
+    problem,
+    *,
+    key: jax.Array,
+    schedule: Schedule,
+    format: str = "dense",
+    action: str | None = None,
+    mesh: jax.sharding.Mesh | None = None,
+    axis: str = "workers",
+    beta: float = 1.0,
+    block: int = 128,
+    bands: int = 2,
+    width: int = 32,
+    gs_block: int = 1,
+    x0: jax.Array | None = None,
+    sync: str = "auto",
+    unroll: bool = False,
+    with_metrics: bool = True,
+    delay_key: jax.Array | None = None,
+    read_model: str = "consistent",
+    delay_mode: str = "fixed",
+    miss_prob: float = 0.5,
+):
+    """One front door for the whole solver family.
+
+    ``problem`` is an ``SPDProblem`` (GS action by default) or an
+    ``LSQProblem`` (Kaczmarz action by default).  ``format`` picks the
+    operator ("dense", "banded", "ell"); ``schedule`` picks sequential /
+    bounded-delay simulator / distributed execution (see ``Schedule``).
+    ``block``/``bands`` parameterize the banded format, ``width`` the ELL
+    format, and ``gs_block`` the dense block-GS action granularity.
+    """
+    if action is None:
+        action = "rk" if hasattr(problem, "sigma_min") else "gs"
+    if schedule.distributed:
+        if schedule.local_steps <= 0:
+            raise ValueError("a distributed Schedule needs local_steps > 0")
+        if schedule.num_iters or schedule.tau:
+            raise ValueError(
+                "Schedule modes are exclusive: rounds/local_steps "
+                "(distributed) cannot be combined with num_iters/tau "
+                f"(got {schedule})")
+    elif schedule.num_iters <= 0:
+        raise ValueError(f"a sequential Schedule needs num_iters > 0 "
+                         f"(got {schedule})")
+    op = as_operator(problem.A, format, block=block, bands=bands, width=width)
+    if x0 is None:
+        x0 = jnp.zeros_like(problem.x_star)
+
+    if schedule.distributed:
+        if mesh is None:
+            raise ValueError("a distributed Schedule needs a mesh")
+        return solve_distributed(
+            op, problem.b, x0, problem.x_star, action=action, key=key,
+            mesh=mesh, axis=axis, rounds=schedule.rounds,
+            local_steps=schedule.local_steps, block=gs_block, beta=beta,
+            sync=sync, unroll=unroll, with_metrics=with_metrics)
+    if schedule.tau > 0:
+        if delay_key is None:
+            raise ValueError("the bounded-delay simulator needs a delay_key")
+        return solve_async_sim(
+            op, problem.b, x0, problem.x_star, action=action, key=key,
+            delay_key=delay_key, num_iters=schedule.num_iters,
+            tau=schedule.tau, beta=beta, read_model=read_model,
+            delay_mode=delay_mode, miss_prob=miss_prob,
+            record_every=schedule.record_every)
+    return solve_sequential(
+        op, problem.b, x0, problem.x_star, action=action, key=key,
+        num_iters=schedule.num_iters, beta=beta, block=gs_block,
+        record_every=schedule.record_every)
+
+
+__all__ = [
+    "BlockBandedOp",
+    "DenseOp",
+    "EllOp",
+    "ParallelSolveResult",
+    "Schedule",
+    "SolveResult",
+    "as_operator",
+    "record_metrics",
+    "sample_rows",
+    "scheduled_tau",
+    "solve",
+    "solve_async_sim",
+    "solve_distributed",
+    "solve_sequential",
+]

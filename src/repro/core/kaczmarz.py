@@ -15,35 +15,54 @@ iterates converge to a ball around the least-squares solution whose radius
 scales with the residual at the optimum — the low-accuracy regime the
 paper's regression workload actually needs.
 
-Three solvers, mirroring the SPD family (rgs / async_rgs / parallel_rgs):
+All three solvers are thin wrappers over the unified engine — the "rk"
+(row) action of ``repro.core.engine`` — and produce bit-identical iterates
+to their pre-refactor implementations (pinned by
+tests/test_engine_equivalence.py):
 
 * ``rk_solve`` — sequential, multi-RHS, chunked error recording;
 * ``async_rk_solve`` — the bounded-delay model of Secs. 4/6 transplanted to
-  row-action updates (consistent and inconsistent reads, same ring-buffer
-  mechanics as ``async_rgs_solve``);
+  row-action updates (the engine's ring-buffer simulator with row-inner-
+  product correction weights);
 * ``parallel_rk_solve`` — shard_map over row slabs.  The row schedule is a
   single *global* i.i.d. sequence (identical in law AND realization to the
-  sequential solver); each pick is applied by the worker owning that row,
-  reading its own in-round updates fresh and other workers' updates stale
-  until the per-round synchronization (psum of accumulated deltas — the
-  paper's periodic-synchronization scheme).  Staleness is therefore
-  *scheduled*: tau = local_steps - 1 for P > 1, and P = 1 reproduces the
-  sequential iterates bit-for-bit (every pick is owned, no update is ever
-  stale).  Step sizes come from ``theory.beta_opt_rk``.
+  sequential solver); staleness is *scheduled*: tau = local_steps - 1 for
+  P > 1, and P = 1 reproduces the sequential iterates bit-for-bit.
+  Step sizes come from ``theory.beta_opt_rk``.
+
+The block-banded Kaczmarz variant (Kaczmarz action × ``BlockBandedOp``)
+lives entirely in the engine: ``engine.solve_distributed(BlockBandedOp(...),
+action="rk", ...)`` — see benchmarks/bench_lsq.py.
 """
 from __future__ import annotations
 
-import functools
 from typing import NamedTuple
 
 import jax
 import jax.numpy as jnp
 import numpy as np
-from jax.sharding import PartitionSpec as P
 
-from repro.compat import pvary, shard_map
-from repro.core.parallel_rgs import ParallelSolveResult
-from repro.core.rgs import SolveResult
+from repro.core import engine
+from repro.core.engine import (
+    ParallelSolveResult,
+    SolveResult,
+    scheduled_tau,
+    solve_async_sim,
+    solve_distributed,
+    solve_sequential,
+)
+from repro.core.operators import DenseOp
+
+__all__ = [
+    "LSQProblem",
+    "async_rk_solve",
+    "parallel_rk_solve",
+    "random_lsq",
+    "rk_effective_tau",
+    "rk_solve",
+    "row_norms_sq",
+    "sample_rows",
+]
 
 
 class LSQProblem(NamedTuple):
@@ -105,15 +124,9 @@ def row_norms_sq(A: jax.Array) -> jax.Array:
 
 def sample_rows(key: jax.Array, A: jax.Array, num: int) -> jax.Array:
     """``num`` i.i.d. row indices with P(i) ∝ ||A_i||^2 (zero rows never)."""
-    return jax.random.categorical(key, jnp.log(row_norms_sq(A)), shape=(num,))
+    return engine.sample_rows(key, row_norms_sq(A), num)
 
 
-def _record_lsq(A, b, x, x_star):
-    e = x - x_star
-    return jnp.einsum("nk,nk->k", e, e), jnp.linalg.norm(b - A @ x, axis=0)
-
-
-@functools.partial(jax.jit, static_argnames=("num_iters", "record_every"))
 def rk_solve(
     A: jax.Array,
     b: jax.Array,
@@ -132,28 +145,11 @@ def rk_solve(
     ``err_sq`` records ||x - x*||_2^2 (Euclidean — there is no A-norm for
     rectangular A); ``resid`` records ||b - A x||_2 per RHS.
     """
-    rn = row_norms_sq(A)
-    rec = record_every or num_iters
-    assert num_iters % rec == 0
-    rows = sample_rows(key, A, num_iters)
-
-    def step(x, r):
-        g = (b[r] - A[r] @ x) / rn[r]               # (k,)
-        return x + beta * A[r][:, None] * g[None, :], None
-
-    def chunk(x, rs):
-        x, _ = jax.lax.scan(step, x, rs)
-        return x, _record_lsq(A, b, x, x_star)
-
-    x, (errs, resids) = jax.lax.scan(chunk, x0, rows.reshape(-1, rec))
-    iters = (1 + jnp.arange(num_iters // rec)) * rec
-    return SolveResult(x=x, err_sq=errs, resid=resids, iters=iters)
+    return solve_sequential(
+        DenseOp(A), b, x0, x_star, action="rk", key=key, num_iters=num_iters,
+        beta=beta, record_every=record_every)
 
 
-@functools.partial(
-    jax.jit,
-    static_argnames=("num_iters", "tau", "record_every", "read_model", "delay_mode"),
-)
 def async_rk_solve(
     A: jax.Array,
     b: jax.Array,
@@ -172,14 +168,13 @@ def async_rk_solve(
 ) -> SolveResult:
     """Asynchronous RK under the paper's bounded-delay model.
 
-    Same simulator mechanics as ``async_rgs_solve``: a ring buffer of the
-    last ``tau`` applied updates (row index r_t, applied coefficient
-    c_t = beta*gamma_t), and the stale read reconstructed exactly via
+    The engine's ring-buffer simulator with the row action: the stale read
+    is reconstructed exactly via
 
         A_r x_{k(j)} = A_r x_j - sum_{t invisible} c_t <A_r, A_{r_t}>
 
-    (the update directions are rows A_{r_t}^T instead of coordinate vectors,
-    so the correction weights are row inner products).  Delay schedules are
+    (update directions are rows A_{r_t}^T instead of coordinate vectors, so
+    the correction weights are row inner products).  Delay schedules are
     drawn from ``delay_key``, independent of the row key (Assumption A-4).
 
     delay_mode (consistent reads): "fixed" (s_j = tau), "uniform"
@@ -187,76 +182,19 @@ def async_rk_solve(
     "inconsistent": each of the last tau updates is invisible independently
     with probability ``miss_prob``.
     """
-    k = b.shape[1]
-    rn = row_norms_sq(A)
-    rec = record_every or num_iters
-    assert num_iters % rec == 0
-    rows = sample_rows(key, A, num_iters)
-    t_buf = max(tau, 1)
-
-    if read_model == "consistent":
-        if delay_mode == "fixed":
-            delays = jnp.full((num_iters,), tau, jnp.int32)
-        elif delay_mode == "uniform":
-            delays = jax.random.randint(delay_key, (num_iters,), 0, tau + 1)
-        elif delay_mode == "cyclic":
-            delays = (jnp.arange(num_iters) % (tau + 1)).astype(jnp.int32)
-        else:
-            raise ValueError(delay_mode)
-        aux = delays
-    elif read_model == "inconsistent":
-        aux = jax.random.bernoulli(delay_key, miss_prob, (num_iters, t_buf))
-    else:
-        raise ValueError(read_model)
-
-    ring_r0 = jnp.zeros((t_buf,), jnp.int32)
-    ring_c0 = jnp.zeros((t_buf, k), x0.dtype)
-    offsets = jnp.arange(t_buf)
-
-    def step(carry, inp):
-        x, ring_r, ring_c, j = carry
-        r, a = inp
-        it_idx = j - 1 - offsets                      # iteration indices, newest first
-        valid = it_idx >= 0
-        if read_model == "consistent":
-            invisible = (offsets < a) & valid          # suffix of length s_j
-        else:
-            invisible = a & valid & (offsets < tau)    # arbitrary subset of last tau
-        slots = jnp.mod(it_idx, t_buf)
-        rs = ring_r[slots]                             # (t_buf,)
-        cs = ring_c[slots]                             # (t_buf, k) applied coefficients
-        # Correction restores the stale read: see docstring identity.
-        w = jnp.where(invisible, A[rs] @ A[r], 0.0)    # (t_buf,)
-        corr = w @ cs                                  # (k,)
-        gamma = (b[r] - A[r] @ x + corr) / rn[r]
-        c = beta * gamma
-        x = x + A[r][:, None] * c[None, :]
-        ring_r = ring_r.at[jnp.mod(j, t_buf)].set(r)
-        ring_c = ring_c.at[jnp.mod(j, t_buf)].set(c)
-        return (x, ring_r, ring_c, j + 1), None
-
-    def chunk(carry, inp):
-        carry, _ = jax.lax.scan(step, carry, inp)
-        errs = _record_lsq(A, b, carry[0], x_star)
-        return carry, errs
-
-    inps = (rows.reshape(-1, rec), aux.reshape((-1, rec) + aux.shape[1:]))
-    carry = (x0, ring_r0, ring_c0, jnp.array(0, jnp.int32))
-    carry, (errs, resids) = jax.lax.scan(chunk, carry, inps)
-    iters = (1 + jnp.arange(num_iters // rec)) * rec
-    return SolveResult(x=carry[0], err_sq=errs, resid=resids, iters=iters)
+    return solve_async_sim(
+        DenseOp(A), b, x0, x_star, action="rk", key=key, delay_key=delay_key,
+        num_iters=num_iters, tau=tau, beta=beta, read_model=read_model,
+        delay_mode=delay_mode, miss_prob=miss_prob, record_every=record_every)
 
 
 def rk_effective_tau(num_workers: int, local_steps: int) -> int:
-    """Scheduled staleness bound of ``parallel_rk_solve``: within a round a
-    pick misses at most the other workers' earlier in-round updates."""
-    return 0 if num_workers == 1 else local_steps - 1
+    """Scheduled staleness bound of ``parallel_rk_solve`` (compat re-export
+    of ``engine.scheduled_tau(shared_stream=True)``): within a round a pick
+    misses at most the other workers' earlier in-round updates."""
+    return scheduled_tau(num_workers, local_steps, shared_stream=True)
 
 
-@functools.partial(
-    jax.jit,
-    static_argnames=("mesh", "axis", "rounds", "local_steps", "beta", "unroll"),
-)
 def parallel_rk_solve(
     A: jax.Array,
     b: jax.Array,
@@ -276,76 +214,17 @@ def parallel_rk_solve(
     The schedule is one global i.i.d. row sequence of length
     ``rounds * local_steps`` — the same stochastic process the sequential
     solver and the paper's analysis use, partitioned by row owner.  Within a
-    round every worker applies its own picks with fresh reads (its full
-    working replica ``xw`` carries them) while other workers' in-round
-    updates stay invisible until the end-of-round psum of accumulated
-    deltas — the periodic-synchronization scheme of Thm 4.1(a), with
-    scheduled staleness ``rk_effective_tau(P, local_steps)``.
+    round every worker applies its own picks with fresh reads while other
+    workers' in-round updates stay invisible until the end-of-round psum of
+    accumulated deltas — the periodic-synchronization scheme of Thm 4.1(a),
+    with scheduled staleness ``rk_effective_tau(P, local_steps)``.
 
-    With P = 1 every pick is owned and ``psum(delta) - delta == 0`` exactly,
-    so the iterates are bit-identical to ``rk_solve`` with the same key and
+    With P = 1 every pick is owned and the sync is skipped entirely, so the
+    iterates are bit-identical to ``rk_solve`` with the same key and
     ``num_iters = rounds * local_steps`` (the consistency test relies on
     this).  ``err_sq``/``resid`` are recorded once per round.
     """
-    num_workers = mesh.shape[axis]
-    m = A.shape[0]
-    slab = m // num_workers
-    assert slab * num_workers == m, (
-        f"worker count ({num_workers}) must divide the row count ({m})")
-    rn = row_norms_sq(A)
-    picks = sample_rows(key, A, rounds * local_steps).reshape(rounds, local_steps)
-
-    def worker(A_sh, b_sh, rn_sh, x0_full, xs_full, picks):
-        # A_sh: (slab, n); b_sh: (slab, k); rn_sh: (slab,); x0/xs replicated.
-        w = jax.lax.axis_index(axis)
-        row0 = w * slab
-
-        def round_body(xw, picks_r):
-            delta = pvary(jnp.zeros_like(xw), (axis,))
-
-            def step(carry, p):
-                xw, delta = carry
-                li = p - row0
-                mine = (li >= 0) & (li < slab)
-                lic = jnp.clip(li, 0, slab - 1)
-                Ar = A_sh[lic]                               # (n,)
-                g = (b_sh[lic] - Ar @ xw) / rn_sh[lic]       # (k,)
-                # Arithmetic mirrors rk_solve's step exactly (bit-identity
-                # at P=1): scalar coefficient times row outer product.
-                upd = jnp.where(mine, beta, 0.0) * Ar[:, None] * g[None, :]
-                return (xw + upd, delta + upd), None
-
-            (xw, delta), _ = jax.lax.scan(
-                step, (xw, delta), picks_r,
-                unroll=local_steps if unroll else 1)
-            if num_workers > 1:
-                # Periodic synchronization: pull in the other workers'
-                # updates.  Skipped entirely at P=1 — it would be a bitwise
-                # no-op in exact arithmetic, but XLA folds the single-device
-                # psum away and reassociates xw + (delta - delta), costing
-                # an ulp per round and breaking the exact-degeneracy
-                # guarantee the consistency tests rely on.
-                xw = xw + (jax.lax.psum(delta, axis) - delta)
-            # xw is a full replica, so the error is local; residual rows are
-            # sharded, so the squared norm needs a psum.
-            err = jnp.einsum("nk,nk->k", xw - xs_full, xw - xs_full)
-            r_local = b_sh - A_sh @ xw
-            rsq = jax.lax.psum(jnp.einsum("sk,sk->k", r_local, r_local), axis)
-            return xw, (err, jnp.sqrt(rsq))
-
-        xw, (errs, resids) = jax.lax.scan(
-            round_body, pvary(x0_full, (axis,)), picks,
-            unroll=rounds if unroll else 1)
-        return xw, errs, resids
-
-    mapped = shard_map(
-        worker,
-        mesh=mesh,
-        in_specs=(P(axis, None), P(axis, None), P(axis), P(None, None),
-                  P(None, None), P(None, None)),
-        out_specs=(P(None, None), P(None, None), P(None, None)),
-    )
-    x, errs, resids = mapped(A, b, rn, x0, x_star, picks)
-    return ParallelSolveResult(
-        x=x, err_sq=errs, resid=resids,
-        tau=rk_effective_tau(num_workers, local_steps))
+    return solve_distributed(
+        DenseOp(A), b, x0, x_star, action="rk", key=key, mesh=mesh, axis=axis,
+        rounds=rounds, local_steps=local_steps, beta=beta, sync="psum",
+        unroll=unroll)

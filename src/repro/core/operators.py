@@ -1,0 +1,380 @@
+"""Unified matrix-format layer for the RGS/RK solver engine (DESIGN.md §3).
+
+The paper's algorithms are one family — randomized row/coordinate actions
+with bounded-staleness reads — and the matrix *format* is an orthogonal
+axis: what changes between dense, block-banded, and ELL storage is only how
+a row panel is read and which remote coordinates an update can touch.  This
+module factors that axis out as operator classes sharing one protocol:
+
+* ``matvec(x)``            — full ``A @ x`` (Pallas kernel on TPU, pure-jnp
+                             reference on CPU / interpret mode);
+* ``row_panel(bi)``        — the dense rows of aligned block ``bi``;
+* ``residual_panel(...)``  — ``(b - A x)`` restricted to a block of rows;
+* ``nnz_cost()``           — stored nonzeros (bytes/flops per matvec);
+* ``halo_width``           — how far (in rows) an update's reads/writes can
+                             reach outside an owned slab.  ``None`` means
+                             unbounded (the sync strategy must replicate the
+                             full iterate); a finite width lets the engine
+                             choose neighbor halo exchange over all-gather;
+* ``shard_spec(axis)``     — how the stored arrays shard over a worker axis.
+
+Operators are registered pytrees, so they pass straight through ``jax.jit``
+(arrays as leaves, static layout metadata as aux data).  The distributed
+engine additionally uses the module-level ``banded_*`` panel routines, which
+operate on a worker's *sharded* tile array inside ``shard_map`` — they are
+kept as free functions (and their arithmetic is kept exactly as the
+pre-refactor solvers wrote it) because the bit-identity contract of the
+legacy entry points depends on the order of operations.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+from jax.tree_util import register_pytree_node_class
+
+__all__ = [
+    "BlockBandedOp",
+    "DenseOp",
+    "EllOp",
+    "as_operator",
+    "banded_panel_residual",
+    "banded_panel_residual_window",
+    "banded_rows_matvec",
+    "banded_window_matvec",
+]
+
+
+# ---------------------------------------------------------------------------
+# Operator classes
+# ---------------------------------------------------------------------------
+
+@register_pytree_node_class
+class DenseOp:
+    """Dense row-major operator — square SPD or rectangular (m, n)."""
+
+    def __init__(self, A: jax.Array):
+        self.A = A
+
+    def tree_flatten(self):
+        return (self.A,), None
+
+    @classmethod
+    def tree_unflatten(cls, aux, children):
+        return cls(*children)
+
+    @property
+    def shape(self) -> tuple[int, int]:
+        return self.A.shape
+
+    @property
+    def halo_width(self):
+        """Dense rows read every column: no finite halo."""
+        return None
+
+    def matvec(self, x: jax.Array) -> jax.Array:
+        return self.A @ x
+
+    def row(self, r) -> jax.Array:
+        return self.A[r]
+
+    def row_dot(self, r, x: jax.Array) -> jax.Array:
+        """``A[r] @ x`` — the Θ(n) read a coordinate/row action performs."""
+        return self.A[r] @ x
+
+    def row_panel(self, bi, block: int) -> jax.Array:
+        rows = bi * block + jnp.arange(block)
+        return self.A[rows]
+
+    def residual_panel(self, b, x, bi, block: int) -> jax.Array:
+        rows = bi * block + jnp.arange(block)
+        return b[rows] - self.A[rows] @ x
+
+    def row_norms_sq(self) -> jax.Array:
+        return jnp.einsum("mn,mn->m", self.A, self.A)
+
+    def rk_update(self, x, r, g, beta):
+        """Kaczmarz row action, exact legacy operation order."""
+        return x + beta * self.A[r][:, None] * g[None, :]
+
+    def nnz_cost(self) -> int:
+        m, n = self.A.shape
+        return m * n
+
+    def shard_spec(self, axis: str) -> P:
+        return P(axis, None)
+
+    def to_dense(self) -> jax.Array:
+        return self.A
+
+
+@register_pytree_node_class
+class BlockBandedOp:
+    """Block-banded operator: tiles ``A_bands[nb, 2*bands+1, block, block]``.
+
+    The TPU-native sparse layout (kernels/bbmv.py): contiguous HBM->VMEM
+    streams, MXU-shaped tiles, and a *finite halo* — a row panel only ever
+    reads x within ``bands*block`` rows of itself, which is what lets the
+    distributed engine swap the all-gather for a neighbor halo exchange.
+    """
+
+    def __init__(self, A_bands: jax.Array, *, bands: int):
+        self.A_bands = A_bands
+        self.bands = bands
+
+    def tree_flatten(self):
+        return (self.A_bands,), self.bands
+
+    @classmethod
+    def tree_unflatten(cls, aux, children):
+        return cls(*children, bands=aux)
+
+    @classmethod
+    def from_dense(cls, A: jax.Array, *, block: int, bands: int) -> "BlockBandedOp":
+        from repro.kernels.bbmv import dense_to_bands
+        return cls(dense_to_bands(A, bands=bands, block=block), bands=bands)
+
+    @property
+    def nb(self) -> int:
+        return self.A_bands.shape[0]
+
+    @property
+    def block(self) -> int:
+        return self.A_bands.shape[2]
+
+    @property
+    def width(self) -> int:
+        return self.A_bands.shape[1]
+
+    @property
+    def n(self) -> int:
+        return self.nb * self.block
+
+    @property
+    def shape(self) -> tuple[int, int]:
+        return (self.n, self.n)
+
+    @property
+    def halo_width(self) -> int:
+        return self.bands * self.block
+
+    def matvec(self, x: jax.Array, *, interpret=None) -> jax.Array:
+        """``A @ x`` via the Pallas kernel (interpret-mode on CPU)."""
+        from repro.kernels import ops
+        return ops.bbmv(self.A_bands, x, bands=self.bands, block=self.block,
+                        interpret=interpret)
+
+    def matvec_ref(self, x: jax.Array) -> jax.Array:
+        """Pure-jnp reference matvec (no Pallas)."""
+        return banded_rows_matvec(self.A_bands, x, 0, self.nb, self.nb,
+                                  self.block, self.bands)
+
+    def row_panel(self, bi) -> jax.Array:
+        """Dense (block, n) rows of block-row ``bi`` (diagnostic use)."""
+        tiles = self.A_bands[bi]                       # (width, block, block)
+        out = jnp.zeros((self.block, self.n), tiles.dtype)
+        for d in range(self.width):
+            cb = bi + d - self.bands
+            cbc = jnp.clip(cb, 0, self.nb - 1)
+            valid = (cb >= 0) & (cb < self.nb)
+            out = jax.lax.dynamic_update_slice(
+                out, jnp.where(valid, tiles[d], 0.0), (0, cbc * self.block))
+        return out
+
+    def residual_panel(self, b, x, bi) -> jax.Array:
+        """``(b - A x)`` on block-row ``bi`` — Θ(width) tile reads."""
+        return banded_panel_residual(
+            self.A_bands, b, x, bi, bi, self.nb, self.block, self.bands)
+
+    def row_norms_sq(self) -> jax.Array:
+        """Per-row ||A_i||^2 from the tiles, shaped (nb, block)."""
+        return jnp.sum(self.A_bands * self.A_bands, axis=(1, 3))
+
+    def nnz_cost(self) -> int:
+        return self.nb * self.width * self.block * self.block
+
+    def shard_spec(self, axis: str) -> P:
+        return P(axis, None, None, None)
+
+    def to_dense(self) -> jax.Array:
+        out = jnp.zeros((self.n, self.n), self.A_bands.dtype)
+        for bi in range(self.nb):
+            for d in range(self.width):
+                cb = bi + d - self.bands
+                if 0 <= cb < self.nb:
+                    out = out.at[bi * self.block:(bi + 1) * self.block,
+                                 cb * self.block:(cb + 1) * self.block].set(
+                        self.A_bands[bi, d])
+        return out
+
+
+@register_pytree_node_class
+class EllOp:
+    """Fixed-width ELLPACK operator: ``vals``/``cols`` of shape (n, width).
+
+    The GPU-style gather format (kernels/spmv_ell.py) — kept as a first-class
+    format so the engine's sequential row actions get a true Θ(nnz) read on
+    unstructured sparsity, and as the contrast case in the kernel benchmarks.
+    """
+
+    def __init__(self, vals: jax.Array, cols: jax.Array):
+        self.vals = vals
+        self.cols = cols
+
+    def tree_flatten(self):
+        return (self.vals, self.cols), None
+
+    @classmethod
+    def tree_unflatten(cls, aux, children):
+        return cls(*children)
+
+    @classmethod
+    def from_dense(cls, A: jax.Array, *, width: int) -> "EllOp":
+        from repro.core.spd import ell_from_dense
+        vals, cols = ell_from_dense(A, width)
+        return cls(vals, cols)
+
+    @property
+    def shape(self) -> tuple[int, int]:
+        n = self.vals.shape[0]
+        return (n, n)
+
+    @property
+    def width(self) -> int:
+        return self.vals.shape[1]
+
+    @property
+    def halo_width(self):
+        """Gather columns are unstructured: no finite halo."""
+        return None
+
+    def matvec(self, x: jax.Array, *, interpret=None) -> jax.Array:
+        from repro.kernels import ops
+        return ops.spmv_ell(self.vals, self.cols, x, interpret=interpret)
+
+    def matvec_ref(self, x: jax.Array) -> jax.Array:
+        from repro.kernels import ref
+        return ref.spmv_ell_ref(self.vals, self.cols, x)
+
+    def row_dot(self, r, x: jax.Array) -> jax.Array:
+        """``A[r] @ x`` in Θ(width): gather the row's columns only."""
+        return jnp.einsum("w,wk->k", self.vals[r], x[self.cols[r]])
+
+    def row_norms_sq(self) -> jax.Array:
+        return jnp.einsum("nw,nw->n", self.vals, self.vals)
+
+    def rk_update(self, x, r, g, beta):
+        """Kaczmarz row action as a Θ(width) scatter-add (padding cols carry
+        zero values, so duplicate indices contribute nothing)."""
+        return x.at[self.cols[r]].add(beta * self.vals[r][:, None] * g[None, :])
+
+    def nnz_cost(self) -> int:
+        n, w = self.vals.shape
+        return n * w
+
+    def shard_spec(self, axis: str) -> P:
+        return P(axis, None)
+
+    def to_dense(self) -> jax.Array:
+        n = self.vals.shape[0]
+        out = jnp.zeros((n, n), self.vals.dtype)
+        return out.at[jnp.arange(n)[:, None], self.cols].add(self.vals)
+
+
+def as_operator(A: jax.Array, format: str = "dense", *, block: int = 128,
+                bands: int = 2, width: int = 32):
+    """Build an operator of the requested ``format`` from a dense matrix."""
+    if format == "dense":
+        return DenseOp(A)
+    if format == "banded":
+        return BlockBandedOp.from_dense(A, block=block, bands=bands)
+    if format == "ell":
+        return EllOp.from_dense(A, width=width)
+    raise ValueError(f"unknown operator format: {format!r}")
+
+
+# ---------------------------------------------------------------------------
+# Shard-local banded panel routines (used inside shard_map by the engine)
+# ---------------------------------------------------------------------------
+# The arithmetic below is transplanted *verbatim* from the pre-refactor
+# parallel_rgs solvers: the legacy entry points' bit-identity contract
+# depends on the exact operation order, so do not "simplify" these.
+
+def banded_panel_residual(Ab_sh, b_sh, xw, bi_local, gb, nb, block, bands):
+    """``(b - A x)`` on a worker's local block-row, reading the *global*
+    (n, k) iterate ``xw``.  ``gb`` is the global block-row index of
+    ``bi_local`` (``gb = w * nb_local + bi_local`` under sharding)."""
+    width = 2 * bands + 1
+    acc = jax.lax.dynamic_slice_in_dim(
+        b_sh, bi_local * block, block, 0).astype(jnp.float32)
+    tiles = jax.lax.dynamic_slice_in_dim(Ab_sh, bi_local, 1, 0)[0]
+    for d in range(width):
+        cb = gb + d - bands                  # global column block
+        cbc = jnp.clip(cb, 0, nb - 1)
+        xs = jax.lax.dynamic_slice_in_dim(xw, cbc * block, block, 0)
+        contrib = jnp.dot(tiles[d], xs, preferred_element_type=jnp.float32)
+        valid = (cb >= 0) & (cb < nb)
+        acc = acc - jnp.where(valid, contrib, 0.0)
+    return acc.astype(xw.dtype)
+
+
+def banded_panel_residual_window(Ab_sh, b_sh, xw, bi, gb, nb, slab, block,
+                                 bands):
+    """``(b - A x)`` on local block-row ``bi``, reading a halo-padded
+    *window* ``xw`` of shape (slab + 2*bands*block, k)."""
+    width = 2 * bands + 1
+    halo = bands * block
+    acc = jax.lax.dynamic_slice_in_dim(
+        b_sh, bi * block, block, 0).astype(jnp.float32)
+    tiles = jax.lax.dynamic_slice_in_dim(Ab_sh, bi, 1, 0)[0]
+    for d in range(width):
+        cb = gb + d - bands
+        xs = jax.lax.dynamic_slice_in_dim(
+            xw, jnp.clip((bi + d) * block, 0, slab + 2 * halo - block),
+            block, 0)
+        contrib = jnp.dot(tiles[d], xs, preferred_element_type=jnp.float32)
+        acc = acc - jnp.where((cb >= 0) & (cb < nb), contrib, 0.0)
+    return acc.astype(xw.dtype)
+
+
+def banded_rows_matvec(Ab_sh, x, w, nb, nb_local, block, bands):
+    """``(A x)`` for the ``nb_local`` block-rows owned by worker ``w``,
+    reading the global (n, k) vector ``x``."""
+    width = 2 * bands + 1
+
+    def one(bi):
+        gb = w * nb_local + bi
+        acc = jnp.zeros((block, x.shape[1]), jnp.float32)
+        for d in range(width):
+            cb = gb + d - bands
+            cbc = jnp.clip(cb, 0, nb - 1)
+            xs = jax.lax.dynamic_slice_in_dim(x, cbc * block, block, 0)
+            contrib = jnp.dot(Ab_sh[bi, d], xs, preferred_element_type=jnp.float32)
+            acc = acc + jnp.where((cb >= 0) & (cb < nb), contrib, 0.0)
+        return acc.astype(x.dtype)
+
+    out = jax.vmap(one)(jnp.arange(nb_local))          # (nb_local, block, k)
+    return out.reshape(nb_local * block, x.shape[1])
+
+
+def banded_window_matvec(Ab_sh, vw, w, nb, nb_local, block, bands):
+    """``(A v)`` for the worker's own block-rows, reading a halo-padded
+    window ``vw`` of shape (nb_local*block + 2*bands*block, k)."""
+    width = 2 * bands + 1
+    slab = nb_local * block
+    halo = bands * block
+
+    def one(bi):
+        gb = w * nb_local + bi
+        acc = jnp.zeros((block, vw.shape[1]), jnp.float32)
+        for d in range(width):
+            cb = gb + d - bands
+            xs = jax.lax.dynamic_slice_in_dim(
+                vw, jnp.clip((bi + d) * block, 0, slab + 2 * halo - block),
+                block, 0)
+            contrib = jnp.dot(Ab_sh[bi, d], xs, preferred_element_type=jnp.float32)
+            acc = acc + jnp.where((cb >= 0) & (cb < nb), contrib, 0.0)
+        return acc.astype(vw.dtype)
+
+    out = jax.vmap(one)(jnp.arange(nb_local))
+    return out.reshape(slab, vw.shape[1])

@@ -5,43 +5,45 @@ This is the pod-scale adaptation of the paper's algorithm (DESIGN.md §2):
 * coordinates are partitioned into P slabs, one per device along a mesh axis
   (owner-computes replaces the shared-memory atomic write);
 * every device holds a *stale replica* of the full iterate x and performs
-  ``local_steps`` randomized (block) updates restricted to its own slab —
-  reading remote coordinates from the stale replica and its own coordinates
-  fresh (exactly the consistent-read model: its reads correspond to the
-  global iterate at the last synchronization plus its own prefix of updates);
-* an all-gather of the slab deltas is the paper's *periodic synchronization*
-  (Thm 4.1(a) scheme).  The effective delay bound is
-  tau = (P - 1) * local_steps, which is *scheduled*, so the optimal step
-  size beta~ = 1/(1 + 2 rho tau) is computable in closed form.
+  ``local_steps`` randomized (block) updates restricted to its own slab;
+* an all-gather (or, for the banded format, a neighbor halo exchange) is
+  the paper's *periodic synchronization* (Thm 4.1(a) scheme).  The
+  effective delay bound is tau = (P - 1) * local_steps, which is
+  *scheduled*, so the optimal step size beta~ = 1/(1 + 2 rho tau) is
+  computable in closed form.
+
+All three entry points are thin wrappers over the unified distributed
+driver (``repro.core.engine.solve_distributed``) — the "gs" action over a
+``DenseOp`` or ``BlockBandedOp`` with the all-gather or halo sync
+strategy — and produce bit-identical iterates to their pre-refactor
+implementations (pinned by tests/test_engine_equivalence.py).
 """
 from __future__ import annotations
 
-import functools
-from typing import NamedTuple
-
 import jax
-import jax.numpy as jnp
-from jax.sharding import PartitionSpec as P
 
-from repro.compat import pvary, shard_map
+from repro.core.engine import (
+    ParallelSolveResult,
+    scheduled_tau,
+    solve_distributed,
+)
+from repro.core.operators import BlockBandedOp, DenseOp
 
-
-class ParallelSolveResult(NamedTuple):
-    x: jax.Array        # (n, k)
-    err_sq: jax.Array   # (rounds, k)
-    resid: jax.Array    # (rounds, k)
-    tau: int            # effective staleness bound of the schedule
+__all__ = [
+    "ParallelSolveResult",
+    "effective_tau",
+    "parallel_rgs_banded",
+    "parallel_rgs_halo",
+    "parallel_rgs_solve",
+]
 
 
 def effective_tau(num_workers: int, local_steps: int) -> int:
-    return (num_workers - 1) * local_steps
+    """Scheduled staleness of the per-worker-stream schedule (compat
+    re-export of ``engine.scheduled_tau(shared_stream=False)``)."""
+    return scheduled_tau(num_workers, local_steps, shared_stream=False)
 
 
-@functools.partial(
-    jax.jit,
-    static_argnames=("mesh", "axis", "rounds", "local_steps", "block", "beta",
-                     "unroll"),
-)
 def parallel_rgs_solve(
     A: jax.Array,
     b: jax.Array,
@@ -61,78 +63,12 @@ def parallel_rgs_solve(
 
     A: (n, n) with n divisible by P*block; b, x0, x_star: (n, k).
     """
-    num_workers = mesh.shape[axis]
-    n = A.shape[0]
-    slab = n // num_workers
-    assert slab * num_workers == n and slab % block == 0
-    round_keys = jax.random.split(key, rounds)
-
-    def worker(A_sh, b_sh, xs_sh, x0_full, keys):
-        # A_sh: (slab, n), b_sh/xs_sh: (slab, k), x0_full: (n, k) replicated.
-        w = jax.lax.axis_index(axis)
-        col0 = w * slab
-
-        def round_body(x, rkey):
-            rkey = jax.random.fold_in(rkey, w)
-            picks = jax.random.randint(rkey, (local_steps,), 0, slab // block)
-            # Mark as device-varying: each worker accumulates its own deltas.
-            delta = pvary(
-                jnp.zeros((slab, b_sh.shape[1]), x.dtype), (axis,)
-            )
-
-            def step(delta, bi):
-                rows = bi * block + jnp.arange(block)
-                Ar = A_sh[rows]                          # (block, n)
-                stale = Ar @ x                           # stale replica read
-                # own-slab columns see the *fresh* local updates:
-                own = jax.lax.dynamic_slice(Ar, (0, col0), (block, slab))
-                g = b_sh[rows] - stale - own @ delta
-                return delta.at[rows].add(beta * g), None
-
-            delta, _ = jax.lax.scan(step, delta, picks,
-                                    unroll=local_steps if unroll else 1)
-            # Periodic synchronization (the paper's Thm 4.1(a) scheme).
-            x = x + jax.lax.all_gather(delta, axis, axis=0, tiled=True)
-            # Metrics: ||x - x*||_A^2 and ||b - A x||_2 from slab-local parts.
-            e_local = jax.lax.dynamic_slice_in_dim(x, col0, slab, 0) - xs_sh
-            err = jax.lax.psum(
-                jnp.einsum("sk,sk->k", e_local, A_sh @ (x - _xstar_full(x))), axis
-            )
-            r_local = b_sh - A_sh @ x
-            rsq = jax.lax.psum(jnp.einsum("sk,sk->k", r_local, r_local), axis)
-            return x, (err, jnp.sqrt(rsq))
-
-        def _xstar_full(x):
-            # full x* reconstructed once per round via all-gather of slabs
-            return jax.lax.all_gather(xs_sh, axis, axis=0, tiled=True)
-
-        x, (errs, resids) = jax.lax.scan(
-            round_body, pvary(x0_full, (axis,)), keys,
-            unroll=rounds if unroll else 1,
-        )
-        # Every worker's x is identical after the final all-gather, but the
-        # VMA type system cannot prove it; return the owned slab (the honest
-        # sharding) and let the out_spec reassemble the global vector.
-        x_slab = jax.lax.dynamic_slice_in_dim(x, col0, slab, 0)
-        return x_slab, errs, resids
-
-    mapped = shard_map(
-        worker,
-        mesh=mesh,
-        in_specs=(P(axis, None), P(axis, None), P(axis, None), P(None, None), P(None)),
-        out_specs=(P(axis, None), P(None, None), P(None, None)),
-    )
-    x, errs, resids = mapped(A, b, x_star, x0, round_keys)
-    return ParallelSolveResult(
-        x=x, err_sq=errs, resid=resids, tau=effective_tau(num_workers, local_steps)
-    )
+    return solve_distributed(
+        DenseOp(A), b, x0, x_star, action="gs", key=key, mesh=mesh, axis=axis,
+        rounds=rounds, local_steps=local_steps, block=block, beta=beta,
+        sync="allgather", unroll=unroll)
 
 
-@functools.partial(
-    jax.jit,
-    static_argnames=("mesh", "axis", "rounds", "local_steps", "block", "bands",
-                     "beta", "unroll", "with_metrics"),
-)
 def parallel_rgs_banded(
     A_bands: jax.Array,
     b: jax.Array,
@@ -159,101 +95,16 @@ def parallel_rgs_banded(
     zeros in the reference scenario), the matrix is stored as block-band
     tiles ``A_bands[nb, 2*bands+1, block, block]`` (see kernels/bbmv.py) and
     each step reads only (2*bands+1) MXU-shaped tiles — restoring the
-    paper's Θ(nnz) per-iteration cost on TPU.  Bytes per step drop by
-    n / ((2*bands+1) * block) (~2 orders of magnitude at n=128k).
-
-    Each worker keeps a full working replica ``xw``: own rows are updated in
-    place (fresh, exactly the consistent-read model), remote rows stay stale
-    until the per-round all-gather (the paper's periodic synchronization).
+    paper's Θ(nnz) per-iteration cost on TPU.
     """
-    num_workers = mesh.shape[axis]
-    n, k = b.shape
-    nb = n // block
-    slab = n // num_workers
-    nb_local = slab // block
-    assert nb * block == n and nb_local * block == slab
-    width = A_bands.shape[1]
-    assert width == 2 * bands + 1
-    round_keys = jax.random.split(key, rounds)
-
-    def worker(Ab_sh, b_sh, keys, x0_full, xs_full):
-        # Ab_sh: (nb_local, width, block, block); b_sh: (slab, k).
-        w = jax.lax.axis_index(axis)
-        row0 = w * slab
-
-        def banded_apply(xw, bi_local):
-            """(b - A x)[rows of local block bi_local] using band tiles."""
-            gb = w * nb_local + bi_local            # global block-row index
-            acc = jax.lax.dynamic_slice_in_dim(
-                b_sh, bi_local * block, block, 0).astype(jnp.float32)
-            tiles = jax.lax.dynamic_slice_in_dim(Ab_sh, bi_local, 1, 0)[0]
-            for d in range(width):
-                cb = gb + d - bands                  # global column block
-                cbc = jnp.clip(cb, 0, nb - 1)
-                xs = jax.lax.dynamic_slice_in_dim(xw, cbc * block, block, 0)
-                contrib = jnp.dot(tiles[d], xs, preferred_element_type=jnp.float32)
-                valid = (cb >= 0) & (cb < nb)
-                acc = acc - jnp.where(valid, contrib, 0.0)
-            return acc.astype(xw.dtype)
-
-        def round_body(x, rkey):
-            rkey = jax.random.fold_in(rkey, w)
-            picks = jax.random.randint(rkey, (local_steps,), 0, nb_local)
-            xw = x   # working replica: own rows fresh, remote rows stale
-
-            def step(xw, bi):
-                g = banded_apply(xw, bi)
-                rows0 = row0 + bi * block
-                cur = jax.lax.dynamic_slice_in_dim(xw, rows0, block, 0)
-                return jax.lax.dynamic_update_slice_in_dim(
-                    xw, cur + beta * g, rows0, 0), None
-
-            xw, _ = jax.lax.scan(step, xw, picks,
-                                 unroll=local_steps if unroll else 1)
-            own = jax.lax.dynamic_slice_in_dim(xw, row0, slab, 0)
-            x = jax.lax.all_gather(own, axis, axis=0, tiled=True)
-            if not with_metrics:
-                z = jnp.zeros((b_sh.shape[1],), jnp.float32)
-                return x, (z, z)
-            # metrics (slab-local residual psum)
-            r_local = b_sh - _banded_matvec(Ab_sh, x, w, nb, nb_local, block,
-                                            bands)
-            rsq = jax.lax.psum(jnp.einsum("sk,sk->k", r_local, r_local), axis)
-            if xs_full is not None:
-                e_own = own - jax.lax.dynamic_slice_in_dim(xs_full, row0, slab, 0)
-                esq = jax.lax.psum(
-                    jnp.einsum("sk,sk->k", e_own,
-                               -r_local + (b_sh - _banded_matvec(
-                                   Ab_sh, xs_full, w, nb, nb_local, block, bands))),
-                    axis)
-            else:
-                esq = rsq
-            return x, (esq, jnp.sqrt(rsq))
-
-        x, (errs, resids) = jax.lax.scan(
-            round_body, pvary(x0_full, (axis,)), keys,
-            unroll=rounds if unroll else 1)
-        x_slab = jax.lax.dynamic_slice_in_dim(x, row0, slab, 0)
-        return x_slab, errs, resids
-
-    mapped = shard_map(
-        worker,
-        mesh=mesh,
-        in_specs=(P(axis, None, None, None), P(axis, None), P(None),
-                  P(None, None), P(None, None)),
-        out_specs=(P(axis, None), P(None, None), P(None, None)),
-    )
-    x, errs, resids = mapped(A_bands, b, round_keys, x0, x_star_or_none)
-    return ParallelSolveResult(
-        x=x, err_sq=errs, resid=resids,
-        tau=effective_tau(num_workers, local_steps))
+    op = BlockBandedOp(A_bands, bands=bands)
+    assert op.block == block, (op.block, block)
+    return solve_distributed(
+        op, b, x0, x_star_or_none, action="gs", key=key, mesh=mesh, axis=axis,
+        rounds=rounds, local_steps=local_steps, beta=beta, sync="allgather",
+        unroll=unroll, with_metrics=with_metrics)
 
 
-@functools.partial(
-    jax.jit,
-    static_argnames=("mesh", "axis", "rounds", "local_steps", "block", "bands",
-                     "beta", "unroll", "with_metrics"),
-)
 def parallel_rgs_halo(
     A_bands: jax.Array,
     b: jax.Array,
@@ -275,110 +126,19 @@ def parallel_rgs_halo(
     Band structure means a worker's rows only ever read x within
     ``bands*block`` rows of its own slab — so the per-round all-gather of
     the full (n, k) iterate is replaced by two neighbor ``ppermute`` halo
-    exchanges of (bands*block, k) rows: wire volume drops from ~n*k to
-    2*bands*block*k per round (~2 orders of magnitude at n=128k), and no
-    worker ever materializes the global vector (memory O(slab), enabling
-    n far beyond per-device HBM).  The iterates are IDENTICAL to
+    exchanges of (bands*block, k) rows, and no worker ever materializes the
+    global vector (memory O(slab)).  The iterates are IDENTICAL to
     ``parallel_rgs_banded`` — the gathered entries outside the halo were
-    never read.  General (non-banded) sparsity would use an all-to-all of
-    the sparsity-graph neighbors instead; see DESIGN.md.
+    never read.
+
+    This entry point takes no ``x_star``, so ``err_sq`` is NaN (pre-refactor
+    it silently carried the squared residual); call the engine's
+    ``solve_distributed(..., sync="halo")`` with ``x_star`` to get the
+    window-local A-norm error.
     """
-    num_workers = mesh.shape[axis]
-    n, k = b.shape
-    nb = n // block
-    slab = n // num_workers
-    nb_local = slab // block
-    halo = bands * block
-    assert halo <= slab, "halo exchange needs bands*block <= slab"
-    width = 2 * bands + 1
-    round_keys = jax.random.split(key, rounds)
-    down = [(i, i + 1) for i in range(num_workers - 1)]
-    up = [(i + 1, i) for i in range(num_workers - 1)]
-
-    def worker(Ab_sh, b_sh, x0_sh, keys):
-        w = jax.lax.axis_index(axis)
-
-        def exchange(xw):
-            own = jax.lax.dynamic_slice_in_dim(xw, halo, slab, 0)
-            lo_edge = own[:halo]          # my top rows -> prev worker's hi halo
-            hi_edge = own[-halo:]         # my bottom rows -> next worker's lo halo
-            from_prev = jax.lax.ppermute(hi_edge, axis, down)   # w-1's bottom
-            from_next = jax.lax.ppermute(lo_edge, axis, up)     # w+1's top
-            xw = jax.lax.dynamic_update_slice_in_dim(xw, from_prev, 0, 0)
-            return jax.lax.dynamic_update_slice_in_dim(
-                xw, from_next, halo + slab, 0)
-
-        def banded_apply(xw, bi):
-            gb = w * nb_local + bi
-            acc = jax.lax.dynamic_slice_in_dim(
-                b_sh, bi * block, block, 0).astype(jnp.float32)
-            tiles = jax.lax.dynamic_slice_in_dim(Ab_sh, bi, 1, 0)[0]
-            for d in range(width):
-                cb = gb + d - bands
-                xs = jax.lax.dynamic_slice_in_dim(
-                    xw, jnp.clip((bi + d) * block, 0, slab + 2 * halo - block),
-                    block, 0)
-                contrib = jnp.dot(tiles[d], xs, preferred_element_type=jnp.float32)
-                acc = acc - jnp.where((cb >= 0) & (cb < nb), contrib, 0.0)
-            return acc.astype(xw.dtype)
-
-        def round_body(xw, rkey):
-            rkey = jax.random.fold_in(rkey, w)
-            picks = jax.random.randint(rkey, (local_steps,), 0, nb_local)
-
-            def step(xw, bi):
-                g = banded_apply(xw, bi)
-                r0 = halo + bi * block
-                cur = jax.lax.dynamic_slice_in_dim(xw, r0, block, 0)
-                return jax.lax.dynamic_update_slice_in_dim(
-                    xw, cur + beta * g, r0, 0), None
-
-            xw, _ = jax.lax.scan(step, xw, picks,
-                                 unroll=local_steps if unroll else 1)
-            xw = exchange(xw)
-            if not with_metrics:
-                z = jnp.zeros((k,), jnp.float32)
-                return xw, (z, z)
-            resid2 = jnp.zeros((k,), jnp.float32)
-            for bi in range(nb_local):
-                r = banded_apply(xw, bi).astype(jnp.float32)
-                resid2 = resid2 + jnp.einsum("bk,bk->k", r, r)
-            rsq = jax.lax.psum(resid2, axis)
-            return xw, (rsq, jnp.sqrt(rsq))
-
-        xw0 = jnp.pad(x0_sh, ((halo, halo), (0, 0)))
-        xw0 = exchange(xw0)
-        xw, (errs, resids) = jax.lax.scan(round_body, xw0, keys,
-                                          unroll=rounds if unroll else 1)
-        return jax.lax.dynamic_slice_in_dim(xw, halo, slab, 0), errs, resids
-
-    mapped = shard_map(
-        worker,
-        mesh=mesh,
-        in_specs=(P(axis, None, None, None), P(axis, None), P(axis, None),
-                  P(None)),
-        out_specs=(P(axis, None), P(None, None), P(None, None)),
-    )
-    x, errs, resids = mapped(A_bands, b, x0, round_keys)
-    return ParallelSolveResult(
-        x=x, err_sq=errs, resid=resids,
-        tau=effective_tau(num_workers, local_steps))
-
-
-def _banded_matvec(Ab_sh, x, w, nb, nb_local, block, bands):
-    """(A x) for the rows owned by worker ``w`` (block-band tiles)."""
-    width = 2 * bands + 1
-
-    def one(bi):
-        gb = w * nb_local + bi
-        acc = jnp.zeros((block, x.shape[1]), jnp.float32)
-        for d in range(width):
-            cb = gb + d - bands
-            cbc = jnp.clip(cb, 0, nb - 1)
-            xs = jax.lax.dynamic_slice_in_dim(x, cbc * block, block, 0)
-            contrib = jnp.dot(Ab_sh[bi, d], xs, preferred_element_type=jnp.float32)
-            acc = acc + jnp.where((cb >= 0) & (cb < nb), contrib, 0.0)
-        return acc.astype(x.dtype)
-
-    out = jax.vmap(one)(jnp.arange(nb_local))          # (nb_local, block, k)
-    return out.reshape(nb_local * block, x.shape[1])
+    op = BlockBandedOp(A_bands, bands=bands)
+    assert op.block == block, (op.block, block)
+    return solve_distributed(
+        op, b, x0, None, action="gs", key=key, mesh=mesh, axis=axis,
+        rounds=rounds, local_steps=local_steps, beta=beta, sync="halo",
+        unroll=unroll, with_metrics=with_metrics)

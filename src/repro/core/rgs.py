@@ -6,33 +6,33 @@ Iteration (1):  pick d_j = e^{(r)} with r ~ U{1..n};
 Multi-RHS: x and b are (n, k); the same random direction is used for all k
 columns, exactly as in the paper's experiments (51 RHS solved together).
 
-Also implements the general non-unit-diagonal iteration (3) used by the
-rescaling-equivalence property test.
+``rgs_solve`` and ``block_gs_solve`` are thin wrappers over the unified
+engine (repro.core.engine) — the "gs" action on a ``DenseOp`` — and produce
+bit-identical iterates to their pre-refactor implementations (pinned by
+tests/test_engine_equivalence.py).  Also implements the general
+non-unit-diagonal iteration (3) used by the rescaling-equivalence property
+test, which takes explicit directions and stays a standalone loop.
 """
 from __future__ import annotations
 
 import functools
-from typing import NamedTuple
 
 import jax
 import jax.numpy as jnp
 
 from repro.core import spd
+from repro.core.engine import SolveResult, solve_sequential
+from repro.core.operators import DenseOp
 
-
-class SolveResult(NamedTuple):
-    x: jax.Array           # (n, k) final iterate
-    err_sq: jax.Array      # (records, k) ||x_m - x*||_A^2 at each record point
-    resid: jax.Array       # (records, k) ||b - A x_m||_2 at each record point
-    iters: jax.Array       # (records,) iteration index of each record
+__all__ = ["SolveResult", "block_gs_solve", "rgs_general", "rgs_solve"]
 
 
 def _record(A, b, x, x_star):
+    """Legacy recording helper (A-norm error + residual); kept for cg.py."""
     e = x - x_star
     return spd.a_norm_sq(A, e), jnp.linalg.norm(b - A @ x, axis=0)
 
 
-@functools.partial(jax.jit, static_argnames=("num_iters", "record_every"))
 def rgs_solve(
     A: jax.Array,
     b: jax.Array,
@@ -46,22 +46,33 @@ def rgs_solve(
 ) -> SolveResult:
     """Run ``num_iters`` randomized GS iterations; record error every
     ``record_every`` iterations (0 -> only at the end)."""
-    n = A.shape[0]
-    rec = record_every or num_iters
-    assert num_iters % rec == 0
-    coords = jax.random.randint(key, (num_iters,), 0, n)
+    return solve_sequential(
+        DenseOp(A), b, x0, x_star, action="gs", key=key, num_iters=num_iters,
+        beta=beta, block=1, record_every=record_every)
 
-    def step(x, r):
-        gamma = b[r] - A[r] @ x          # (k,)
-        return x.at[r].add(beta * gamma), None
 
-    def chunk(x, cs):
-        x, _ = jax.lax.scan(step, x, cs)
-        return x, _record(A, b, x, x_star)
+def block_gs_solve(
+    A: jax.Array,
+    b: jax.Array,
+    x0: jax.Array,
+    x_star: jax.Array,
+    *,
+    key: jax.Array,
+    num_sweeps: int,
+    block: int,
+    beta: float = 1.0,
+) -> SolveResult:
+    """Randomized *block* GS — the TPU-adapted granularity (DESIGN.md §2).
 
-    x, (errs, resids) = jax.lax.scan(chunk, x0, coords.reshape(-1, rec))
-    iters = (1 + jnp.arange(num_iters // rec)) * rec
-    return SolveResult(x=x, err_sq=errs, resid=resids, iters=iters)
+    Each step picks a random aligned block of ``block`` coordinates and
+    applies a damped block-Jacobi update x_B += beta * (b - A x)_B.  One
+    sweep = n/block steps.  This is the pure-jnp semantic twin of the Pallas
+    kernel in repro.kernels.block_gs.
+    """
+    nb = A.shape[0] // block
+    return solve_sequential(
+        DenseOp(A), b, x0, x_star, action="gs", key=key,
+        num_iters=num_sweeps * nb, beta=beta, block=block, record_every=nb)
 
 
 @functools.partial(jax.jit, static_argnames=("num_iters",))
@@ -86,42 +97,3 @@ def rgs_general(
 
     y, _ = jax.lax.scan(step, y0, coords)
     return y
-
-
-@functools.partial(jax.jit, static_argnames=("num_sweeps", "block"))
-def block_gs_solve(
-    A: jax.Array,
-    b: jax.Array,
-    x0: jax.Array,
-    x_star: jax.Array,
-    *,
-    key: jax.Array,
-    num_sweeps: int,
-    block: int,
-    beta: float = 1.0,
-) -> SolveResult:
-    """Randomized *block* GS — the TPU-adapted granularity (DESIGN.md §2).
-
-    Each step picks a random aligned block of ``block`` coordinates and
-    applies a damped block-Jacobi update x_B += beta * (b - A x)_B.  One
-    sweep = n/block steps.  This is the pure-jnp semantic twin of the Pallas
-    kernel in repro.kernels.block_gs.
-    """
-    n = A.shape[0]
-    nb = n // block
-    steps = num_sweeps * nb
-    blocks = jax.random.randint(key, (steps,), 0, nb)
-
-    def step(x, bi):
-        rows = bi * block + jnp.arange(block)
-        Ab = A[rows]                      # (block, n)
-        gamma = b[rows] - Ab @ x          # (block, k)
-        return x.at[rows].add(beta * gamma), None
-
-    def sweep(x, bs):
-        x, _ = jax.lax.scan(step, x, bs)
-        return x, _record(A, b, x, x_star)
-
-    x, (errs, resids) = jax.lax.scan(sweep, x0, blocks.reshape(num_sweeps, nb))
-    return SolveResult(x=x, err_sq=errs, resid=resids,
-                       iters=(1 + jnp.arange(num_sweeps)) * nb)

@@ -1,9 +1,12 @@
-"""Least-squares launcher — the paper's Sec. 7 algorithm as a CLI.
+"""Least-squares launcher — the paper's Sec. 7 algorithm as a CLI, on the
+unified API.
 
 ``python -m repro.launch.lsq --m 4096 --n 512 --rhs 8 --workers 8 --sweeps 6``
-builds an overdetermined regression system and solves it four ways:
+builds an overdetermined regression system and solves it four ways through
+``repro.core.solve(problem, schedule=...)``:
 (a) sequential randomized Kaczmarz on the rows of A (no normal equations),
-(b) the bounded-delay asynchronous variant with the theory step size,
+(b) the bounded-delay asynchronous variant with the theory step size
+    (``Schedule(tau=...)`` routes to the engine's ring-buffer simulator),
 (c) the distributed variant (shard_map over row slabs),
 (d) CG on the normal equations A^T A x = A^T b — the baseline that squares
 the condition number and pays two blocking all-reduces per iteration.
@@ -20,9 +23,9 @@ import time
 import jax
 import jax.numpy as jnp
 
-from repro.core import (async_rk_solve, cg_solve, parallel_rk_solve,
-                        random_lsq, rk_effective_tau, rk_solve, theory,
+from repro.core import (Schedule, cg_solve, random_lsq, solve, theory,
                         to_unit_diagonal)
+from repro.core.engine import scheduled_tau
 from repro.launch.mesh import make_host_mesh
 
 
@@ -47,7 +50,6 @@ def main(argv=None):
     prob = random_lsq(args.m, args.n, n_rhs=args.rhs, noise=args.noise,
                       col_scale=args.col_scale, seed=args.seed)
     m, n = prob.shape
-    x0 = jnp.zeros_like(prob.x_star)
     bn = float(jnp.linalg.norm(prob.b))
     # residual at the LSQ optimum: the floor every solver is chasing
     floor = float(jnp.linalg.norm(prob.b - prob.A @ prob.x_star)) / bn
@@ -56,8 +58,8 @@ def main(argv=None):
 
     iters = args.sweeps * m
     t0 = time.time()
-    res = rk_solve(prob.A, prob.b, x0, prob.x_star, key=jax.random.key(1),
-                   num_iters=iters, record_every=m)
+    res = solve(prob, key=jax.random.key(1),
+                schedule=Schedule(num_iters=iters, record_every=m))
     jax.block_until_ready(res.x)
     print(f"  seq RK     : {args.sweeps} sweeps, relresid "
           f"{float(jnp.linalg.norm(res.resid[-1]))/bn:.3e} "
@@ -66,10 +68,10 @@ def main(argv=None):
     rho_rk = float(theory.rk_rho(prob.A))
     beta = theory.beta_opt_rk(rho_rk, args.tau)
     t0 = time.time()
-    ares = async_rk_solve(prob.A, prob.b, x0, prob.x_star,
-                          key=jax.random.key(1), delay_key=jax.random.key(2),
-                          num_iters=iters, tau=args.tau, beta=beta,
-                          record_every=m)
+    ares = solve(prob, key=jax.random.key(1), delay_key=jax.random.key(2),
+                 beta=beta,
+                 schedule=Schedule(num_iters=iters, tau=args.tau,
+                                   record_every=m))
     jax.block_until_ready(ares.x)
     print(f"  async RK   : tau={args.tau} beta~={beta:.3f} relresid "
           f"{float(jnp.linalg.norm(ares.resid[-1]))/bn:.3e} "
@@ -79,12 +81,11 @@ def main(argv=None):
     mesh = make_host_mesh(workers)
     local_steps = args.local_steps or max(1, m // workers)
     rounds = max(1, iters // local_steps)
-    ptau = rk_effective_tau(workers, local_steps)
+    ptau = scheduled_tau(workers, local_steps, shared_stream=True)
     pbeta = theory.beta_opt_rk(rho_rk, ptau)
     t0 = time.time()
-    pres = parallel_rk_solve(prob.A, prob.b, x0, prob.x_star,
-                             key=jax.random.key(1), mesh=mesh, rounds=rounds,
-                             local_steps=local_steps, beta=pbeta)
+    pres = solve(prob, key=jax.random.key(1), mesh=mesh, beta=pbeta,
+                 schedule=Schedule(rounds=rounds, local_steps=local_steps))
     jax.block_until_ready(pres.x)
     print(f"  par RK     : P={workers} tau={ptau} beta~={pbeta:.3f} "
           f"{rounds} rounds, relresid "
@@ -94,6 +95,7 @@ def main(argv=None):
     # Baseline: CG on the Jacobi-rescaled normal equations (Sec. 2.3) —
     # kappa is still squared relative to A, and each iteration pays two
     # blocking all-reduces.
+    x0 = jnp.zeros_like(prob.x_star)
     An, dn = to_unit_diagonal(prob.A.T @ prob.A)
     bn_eq = dn[:, None] * (prob.A.T @ prob.b)
     t0 = time.time()

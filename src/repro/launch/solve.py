@@ -1,10 +1,13 @@
-"""Solver launcher — the paper's algorithm as a CLI.
+"""Solver launcher — the paper's algorithm as a CLI, on the unified API.
 
 ``python -m repro.launch.solve --n 4096 --rhs 8 --workers 8 --sweeps 10``
-builds a reference-scenario SPD system and solves it with (a) synchronous
-randomized Gauss-Seidel, (b) the distributed asynchronous variant
-(shard_map over a worker mesh), (c) CG — printing residual trajectories,
-the paper's theoretical rate factors, and the chosen step size beta~.
+builds a reference-scenario SPD system and solves it through
+``repro.core.solve(problem, format=..., schedule=...)``:
+(a) sequential randomized Gauss-Seidel, (b) the distributed asynchronous
+variant (shard_map over a worker mesh), (c) CG — printing residual
+trajectories, the paper's theoretical rate factors, and the chosen step
+size beta~.  ``--format ell`` runs the sequential pass through the ELL
+operator (Θ(nnz) row reads) instead of dense rows.
 """
 from __future__ import annotations
 
@@ -14,8 +17,8 @@ import time
 import jax
 import jax.numpy as jnp
 
-from repro.core import (cg_solve, parallel_rgs_solve, random_sparse_spd,
-                        rgs_solve, theory)
+from repro.core import (Schedule, cg_solve, random_sparse_spd, solve, theory)
+from repro.core.engine import scheduled_tau
 from repro.launch.mesh import make_host_mesh
 
 
@@ -26,6 +29,9 @@ def main(argv=None):
     ap.add_argument("--row-nnz", type=int, default=16)
     ap.add_argument("--offdiag", type=float, default=0.9)
     ap.add_argument("--sweeps", type=int, default=10)
+    ap.add_argument("--format", choices=("dense", "ell"), default="dense",
+                    help="operator format for the sequential solve")
+    ap.add_argument("--ell-width", type=int, default=64)
     ap.add_argument("--workers", type=int, default=0,
                     help="0 = all local devices")
     ap.add_argument("--local-steps", type=int, default=0,
@@ -37,16 +43,26 @@ def main(argv=None):
     prob = random_sparse_spd(args.n, row_nnz=args.row_nnz,
                              offdiag=args.offdiag, n_rhs=args.rhs,
                              seed=args.seed)
+    if args.format == "ell":
+        # ell_from_dense keeps only the width largest entries per row — a
+        # too-small width silently solves a truncated system.  Widen to the
+        # true max row occupancy so the ELL operator is exact.
+        max_nnz = int((jnp.abs(prob.A) > 0).sum(axis=1).max())
+        if args.ell_width < max_nnz:
+            print(f"  [warn] --ell-width {args.ell_width} < max nnz/row "
+                  f"{max_nnz}; widening to keep the operator exact")
+            args.ell_width = max_nnz
     x0 = jnp.zeros_like(prob.x_star)
     rho = float(theory.rho(prob.A))
     n = prob.n
     print(f"[solve] n={n} rhs={args.rhs} kappa={float(prob.kappa):.1f} "
-          f"rho={rho:.4f}")
+          f"rho={rho:.4f} format={args.format}")
 
     iters = args.sweeps * n
     t0 = time.time()
-    res = rgs_solve(prob.A, prob.b, x0, prob.x_star, key=jax.random.key(1),
-                    num_iters=iters, record_every=n)
+    res = solve(prob, key=jax.random.key(1), format=args.format,
+                width=args.ell_width,
+                schedule=Schedule(num_iters=iters, record_every=n))
     jax.block_until_ready(res.x)
     print(f"  sync RGS   : {args.sweeps} sweeps, resid {float(res.resid[-1,0]):.3e} "
           f"({time.time()-t0:.1f}s)")
@@ -54,14 +70,12 @@ def main(argv=None):
     workers = args.workers or len(jax.devices())
     mesh = make_host_mesh(workers)
     local_steps = args.local_steps or max(1, n // workers)
-    tau = (workers - 1) * local_steps
+    tau = scheduled_tau(workers, local_steps)
     beta = theory.beta_opt(rho, tau)
     rounds = max(1, iters // (workers * local_steps))
     t0 = time.time()
-    pres = parallel_rgs_solve(prob.A, prob.b, x0, prob.x_star,
-                              key=jax.random.key(2), mesh=mesh,
-                              rounds=rounds, local_steps=local_steps,
-                              beta=beta)
+    pres = solve(prob, key=jax.random.key(2), mesh=mesh, beta=beta,
+                 schedule=Schedule(rounds=rounds, local_steps=local_steps))
     jax.block_until_ready(pres.x)
     print(f"  async RGS  : P={workers} tau={tau} beta~={beta:.3f} "
           f"{rounds} rounds, resid {float(pres.resid[-1,0]):.3e} "

@@ -1,0 +1,700 @@
+"""Frozen pre-refactor solver implementations (PR 2 reference copies).
+
+These are the exact solver bodies that shipped before the unified
+operator/engine refactor (commit c42105b), kept verbatim — imports merged,
+module docstrings dropped, nothing else touched — so that
+tests/test_engine_equivalence.py can assert the refactored entry points
+produce BIT-IDENTICAL iterates given the same PRNG keys.  Do not edit the
+arithmetic here: this file is the contract.
+"""
+from __future__ import annotations
+
+import functools
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro.compat import pvary, shard_map
+from repro.core import spd
+
+
+class SolveResult(NamedTuple):
+    x: jax.Array
+    err_sq: jax.Array
+    resid: jax.Array
+    iters: jax.Array
+
+
+class ParallelSolveResult(NamedTuple):
+    x: jax.Array
+    err_sq: jax.Array
+    resid: jax.Array
+    tau: int
+
+
+def _record(A, b, x, x_star):
+    e = x - x_star
+    return spd.a_norm_sq(A, e), jnp.linalg.norm(b - A @ x, axis=0)
+
+
+# ---------------------------------------------------------------------------
+# core/rgs.py (pre-refactor)
+# ---------------------------------------------------------------------------
+
+@functools.partial(jax.jit, static_argnames=("num_iters", "record_every"))
+def rgs_solve(
+    A: jax.Array,
+    b: jax.Array,
+    x0: jax.Array,
+    x_star: jax.Array,
+    *,
+    key: jax.Array,
+    num_iters: int,
+    beta: float = 1.0,
+    record_every: int = 0,
+) -> SolveResult:
+    n = A.shape[0]
+    rec = record_every or num_iters
+    assert num_iters % rec == 0
+    coords = jax.random.randint(key, (num_iters,), 0, n)
+
+    def step(x, r):
+        gamma = b[r] - A[r] @ x          # (k,)
+        return x.at[r].add(beta * gamma), None
+
+    def chunk(x, cs):
+        x, _ = jax.lax.scan(step, x, cs)
+        return x, _record(A, b, x, x_star)
+
+    x, (errs, resids) = jax.lax.scan(chunk, x0, coords.reshape(-1, rec))
+    iters = (1 + jnp.arange(num_iters // rec)) * rec
+    return SolveResult(x=x, err_sq=errs, resid=resids, iters=iters)
+
+
+@functools.partial(jax.jit, static_argnames=("num_sweeps", "block"))
+def block_gs_solve(
+    A: jax.Array,
+    b: jax.Array,
+    x0: jax.Array,
+    x_star: jax.Array,
+    *,
+    key: jax.Array,
+    num_sweeps: int,
+    block: int,
+    beta: float = 1.0,
+) -> SolveResult:
+    n = A.shape[0]
+    nb = n // block
+    steps = num_sweeps * nb
+    blocks = jax.random.randint(key, (steps,), 0, nb)
+
+    def step(x, bi):
+        rows = bi * block + jnp.arange(block)
+        Ab = A[rows]                      # (block, n)
+        gamma = b[rows] - Ab @ x          # (block, k)
+        return x.at[rows].add(beta * gamma), None
+
+    def sweep(x, bs):
+        x, _ = jax.lax.scan(step, x, bs)
+        return x, _record(A, b, x, x_star)
+
+    x, (errs, resids) = jax.lax.scan(sweep, x0, blocks.reshape(num_sweeps, nb))
+    return SolveResult(x=x, err_sq=errs, resid=resids,
+                       iters=(1 + jnp.arange(num_sweeps)) * nb)
+
+
+# ---------------------------------------------------------------------------
+# core/parallel_rgs.py (pre-refactor)
+# ---------------------------------------------------------------------------
+
+def effective_tau(num_workers: int, local_steps: int) -> int:
+    return (num_workers - 1) * local_steps
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("mesh", "axis", "rounds", "local_steps", "block", "beta",
+                     "unroll"),
+)
+def parallel_rgs_solve(
+    A: jax.Array,
+    b: jax.Array,
+    x0: jax.Array,
+    x_star: jax.Array,
+    *,
+    key: jax.Array,
+    mesh: jax.sharding.Mesh,
+    axis: str = "workers",
+    rounds: int,
+    local_steps: int,
+    block: int = 1,
+    beta: float = 1.0,
+    unroll: bool = False,
+) -> ParallelSolveResult:
+    num_workers = mesh.shape[axis]
+    n = A.shape[0]
+    slab = n // num_workers
+    assert slab * num_workers == n and slab % block == 0
+    round_keys = jax.random.split(key, rounds)
+
+    def worker(A_sh, b_sh, xs_sh, x0_full, keys):
+        w = jax.lax.axis_index(axis)
+        col0 = w * slab
+
+        def round_body(x, rkey):
+            rkey = jax.random.fold_in(rkey, w)
+            picks = jax.random.randint(rkey, (local_steps,), 0, slab // block)
+            delta = pvary(
+                jnp.zeros((slab, b_sh.shape[1]), x.dtype), (axis,)
+            )
+
+            def step(delta, bi):
+                rows = bi * block + jnp.arange(block)
+                Ar = A_sh[rows]                          # (block, n)
+                stale = Ar @ x                           # stale replica read
+                own = jax.lax.dynamic_slice(Ar, (0, col0), (block, slab))
+                g = b_sh[rows] - stale - own @ delta
+                return delta.at[rows].add(beta * g), None
+
+            delta, _ = jax.lax.scan(step, delta, picks,
+                                    unroll=local_steps if unroll else 1)
+            x = x + jax.lax.all_gather(delta, axis, axis=0, tiled=True)
+            e_local = jax.lax.dynamic_slice_in_dim(x, col0, slab, 0) - xs_sh
+            err = jax.lax.psum(
+                jnp.einsum("sk,sk->k", e_local, A_sh @ (x - _xstar_full(x))), axis
+            )
+            r_local = b_sh - A_sh @ x
+            rsq = jax.lax.psum(jnp.einsum("sk,sk->k", r_local, r_local), axis)
+            return x, (err, jnp.sqrt(rsq))
+
+        def _xstar_full(x):
+            return jax.lax.all_gather(xs_sh, axis, axis=0, tiled=True)
+
+        x, (errs, resids) = jax.lax.scan(
+            round_body, pvary(x0_full, (axis,)), keys,
+            unroll=rounds if unroll else 1,
+        )
+        x_slab = jax.lax.dynamic_slice_in_dim(x, col0, slab, 0)
+        return x_slab, errs, resids
+
+    mapped = shard_map(
+        worker,
+        mesh=mesh,
+        in_specs=(P(axis, None), P(axis, None), P(axis, None), P(None, None), P(None)),
+        out_specs=(P(axis, None), P(None, None), P(None, None)),
+    )
+    x, errs, resids = mapped(A, b, x_star, x0, round_keys)
+    return ParallelSolveResult(
+        x=x, err_sq=errs, resid=resids, tau=effective_tau(num_workers, local_steps)
+    )
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("mesh", "axis", "rounds", "local_steps", "block", "bands",
+                     "beta", "unroll", "with_metrics"),
+)
+def parallel_rgs_banded(
+    A_bands: jax.Array,
+    b: jax.Array,
+    x0: jax.Array,
+    x_star_or_none,
+    *,
+    key: jax.Array,
+    mesh: jax.sharding.Mesh,
+    axis: str = "workers",
+    rounds: int,
+    local_steps: int,
+    block: int = 128,
+    bands: int = 2,
+    beta: float = 1.0,
+    unroll: bool = False,
+    with_metrics: bool = True,
+) -> ParallelSolveResult:
+    num_workers = mesh.shape[axis]
+    n, k = b.shape
+    nb = n // block
+    slab = n // num_workers
+    nb_local = slab // block
+    assert nb * block == n and nb_local * block == slab
+    width = A_bands.shape[1]
+    assert width == 2 * bands + 1
+    round_keys = jax.random.split(key, rounds)
+
+    def worker(Ab_sh, b_sh, keys, x0_full, xs_full):
+        w = jax.lax.axis_index(axis)
+        row0 = w * slab
+
+        def banded_apply(xw, bi_local):
+            gb = w * nb_local + bi_local            # global block-row index
+            acc = jax.lax.dynamic_slice_in_dim(
+                b_sh, bi_local * block, block, 0).astype(jnp.float32)
+            tiles = jax.lax.dynamic_slice_in_dim(Ab_sh, bi_local, 1, 0)[0]
+            for d in range(width):
+                cb = gb + d - bands                  # global column block
+                cbc = jnp.clip(cb, 0, nb - 1)
+                xs = jax.lax.dynamic_slice_in_dim(xw, cbc * block, block, 0)
+                contrib = jnp.dot(tiles[d], xs, preferred_element_type=jnp.float32)
+                valid = (cb >= 0) & (cb < nb)
+                acc = acc - jnp.where(valid, contrib, 0.0)
+            return acc.astype(xw.dtype)
+
+        def round_body(x, rkey):
+            rkey = jax.random.fold_in(rkey, w)
+            picks = jax.random.randint(rkey, (local_steps,), 0, nb_local)
+            xw = x
+
+            def step(xw, bi):
+                g = banded_apply(xw, bi)
+                rows0 = row0 + bi * block
+                cur = jax.lax.dynamic_slice_in_dim(xw, rows0, block, 0)
+                return jax.lax.dynamic_update_slice_in_dim(
+                    xw, cur + beta * g, rows0, 0), None
+
+            xw, _ = jax.lax.scan(step, xw, picks,
+                                 unroll=local_steps if unroll else 1)
+            own = jax.lax.dynamic_slice_in_dim(xw, row0, slab, 0)
+            x = jax.lax.all_gather(own, axis, axis=0, tiled=True)
+            if not with_metrics:
+                z = jnp.zeros((b_sh.shape[1],), jnp.float32)
+                return x, (z, z)
+            r_local = b_sh - _banded_matvec(Ab_sh, x, w, nb, nb_local, block,
+                                            bands)
+            rsq = jax.lax.psum(jnp.einsum("sk,sk->k", r_local, r_local), axis)
+            if xs_full is not None:
+                e_own = own - jax.lax.dynamic_slice_in_dim(xs_full, row0, slab, 0)
+                esq = jax.lax.psum(
+                    jnp.einsum("sk,sk->k", e_own,
+                               -r_local + (b_sh - _banded_matvec(
+                                   Ab_sh, xs_full, w, nb, nb_local, block, bands))),
+                    axis)
+            else:
+                esq = rsq
+            return x, (esq, jnp.sqrt(rsq))
+
+        x, (errs, resids) = jax.lax.scan(
+            round_body, pvary(x0_full, (axis,)), keys,
+            unroll=rounds if unroll else 1)
+        x_slab = jax.lax.dynamic_slice_in_dim(x, row0, slab, 0)
+        return x_slab, errs, resids
+
+    mapped = shard_map(
+        worker,
+        mesh=mesh,
+        in_specs=(P(axis, None, None, None), P(axis, None), P(None),
+                  P(None, None), P(None, None)),
+        out_specs=(P(axis, None), P(None, None), P(None, None)),
+    )
+    x, errs, resids = mapped(A_bands, b, round_keys, x0, x_star_or_none)
+    return ParallelSolveResult(
+        x=x, err_sq=errs, resid=resids,
+        tau=effective_tau(num_workers, local_steps))
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("mesh", "axis", "rounds", "local_steps", "block", "bands",
+                     "beta", "unroll", "with_metrics"),
+)
+def parallel_rgs_halo(
+    A_bands: jax.Array,
+    b: jax.Array,
+    x0: jax.Array,
+    *,
+    key: jax.Array,
+    mesh: jax.sharding.Mesh,
+    axis: str = "workers",
+    rounds: int,
+    local_steps: int,
+    block: int = 128,
+    bands: int = 2,
+    beta: float = 1.0,
+    unroll: bool = False,
+    with_metrics: bool = True,
+) -> ParallelSolveResult:
+    num_workers = mesh.shape[axis]
+    n, k = b.shape
+    nb = n // block
+    slab = n // num_workers
+    nb_local = slab // block
+    halo = bands * block
+    assert halo <= slab, "halo exchange needs bands*block <= slab"
+    width = 2 * bands + 1
+    round_keys = jax.random.split(key, rounds)
+    down = [(i, i + 1) for i in range(num_workers - 1)]
+    up = [(i + 1, i) for i in range(num_workers - 1)]
+
+    def worker(Ab_sh, b_sh, x0_sh, keys):
+        w = jax.lax.axis_index(axis)
+
+        def exchange(xw):
+            own = jax.lax.dynamic_slice_in_dim(xw, halo, slab, 0)
+            lo_edge = own[:halo]
+            hi_edge = own[-halo:]
+            from_prev = jax.lax.ppermute(hi_edge, axis, down)
+            from_next = jax.lax.ppermute(lo_edge, axis, up)
+            xw = jax.lax.dynamic_update_slice_in_dim(xw, from_prev, 0, 0)
+            return jax.lax.dynamic_update_slice_in_dim(
+                xw, from_next, halo + slab, 0)
+
+        def banded_apply(xw, bi):
+            gb = w * nb_local + bi
+            acc = jax.lax.dynamic_slice_in_dim(
+                b_sh, bi * block, block, 0).astype(jnp.float32)
+            tiles = jax.lax.dynamic_slice_in_dim(Ab_sh, bi, 1, 0)[0]
+            for d in range(width):
+                cb = gb + d - bands
+                xs = jax.lax.dynamic_slice_in_dim(
+                    xw, jnp.clip((bi + d) * block, 0, slab + 2 * halo - block),
+                    block, 0)
+                contrib = jnp.dot(tiles[d], xs, preferred_element_type=jnp.float32)
+                acc = acc - jnp.where((cb >= 0) & (cb < nb), contrib, 0.0)
+            return acc.astype(xw.dtype)
+
+        def round_body(xw, rkey):
+            rkey = jax.random.fold_in(rkey, w)
+            picks = jax.random.randint(rkey, (local_steps,), 0, nb_local)
+
+            def step(xw, bi):
+                g = banded_apply(xw, bi)
+                r0 = halo + bi * block
+                cur = jax.lax.dynamic_slice_in_dim(xw, r0, block, 0)
+                return jax.lax.dynamic_update_slice_in_dim(
+                    xw, cur + beta * g, r0, 0), None
+
+            xw, _ = jax.lax.scan(step, xw, picks,
+                                 unroll=local_steps if unroll else 1)
+            xw = exchange(xw)
+            if not with_metrics:
+                z = jnp.zeros((k,), jnp.float32)
+                return xw, (z, z)
+            resid2 = jnp.zeros((k,), jnp.float32)
+            for bi in range(nb_local):
+                r = banded_apply(xw, bi).astype(jnp.float32)
+                resid2 = resid2 + jnp.einsum("bk,bk->k", r, r)
+            rsq = jax.lax.psum(resid2, axis)
+            return xw, (rsq, jnp.sqrt(rsq))
+
+        xw0 = jnp.pad(x0_sh, ((halo, halo), (0, 0)))
+        xw0 = exchange(xw0)
+        xw, (errs, resids) = jax.lax.scan(round_body, xw0, keys,
+                                          unroll=rounds if unroll else 1)
+        return jax.lax.dynamic_slice_in_dim(xw, halo, slab, 0), errs, resids
+
+    mapped = shard_map(
+        worker,
+        mesh=mesh,
+        in_specs=(P(axis, None, None, None), P(axis, None), P(axis, None),
+                  P(None)),
+        out_specs=(P(axis, None), P(None, None), P(None, None)),
+    )
+    x, errs, resids = mapped(A_bands, b, x0, round_keys)
+    return ParallelSolveResult(
+        x=x, err_sq=errs, resid=resids,
+        tau=effective_tau(num_workers, local_steps))
+
+
+def _banded_matvec(Ab_sh, x, w, nb, nb_local, block, bands):
+    width = 2 * bands + 1
+
+    def one(bi):
+        gb = w * nb_local + bi
+        acc = jnp.zeros((block, x.shape[1]), jnp.float32)
+        for d in range(width):
+            cb = gb + d - bands
+            cbc = jnp.clip(cb, 0, nb - 1)
+            xs = jax.lax.dynamic_slice_in_dim(x, cbc * block, block, 0)
+            contrib = jnp.dot(Ab_sh[bi, d], xs, preferred_element_type=jnp.float32)
+            acc = acc + jnp.where((cb >= 0) & (cb < nb), contrib, 0.0)
+        return acc.astype(x.dtype)
+
+    out = jax.vmap(one)(jnp.arange(nb_local))
+    return out.reshape(nb_local * block, x.shape[1])
+
+
+# ---------------------------------------------------------------------------
+# core/kaczmarz.py (pre-refactor)
+# ---------------------------------------------------------------------------
+
+def row_norms_sq(A: jax.Array) -> jax.Array:
+    return jnp.einsum("mn,mn->m", A, A)
+
+
+def sample_rows(key: jax.Array, A: jax.Array, num: int) -> jax.Array:
+    return jax.random.categorical(key, jnp.log(row_norms_sq(A)), shape=(num,))
+
+
+def _record_lsq(A, b, x, x_star):
+    e = x - x_star
+    return jnp.einsum("nk,nk->k", e, e), jnp.linalg.norm(b - A @ x, axis=0)
+
+
+@functools.partial(jax.jit, static_argnames=("num_iters", "record_every"))
+def rk_solve(
+    A: jax.Array,
+    b: jax.Array,
+    x0: jax.Array,
+    x_star: jax.Array,
+    *,
+    key: jax.Array,
+    num_iters: int,
+    beta: float = 1.0,
+    record_every: int = 0,
+) -> SolveResult:
+    rn = row_norms_sq(A)
+    rec = record_every or num_iters
+    assert num_iters % rec == 0
+    rows = sample_rows(key, A, num_iters)
+
+    def step(x, r):
+        g = (b[r] - A[r] @ x) / rn[r]               # (k,)
+        return x + beta * A[r][:, None] * g[None, :], None
+
+    def chunk(x, rs):
+        x, _ = jax.lax.scan(step, x, rs)
+        return x, _record_lsq(A, b, x, x_star)
+
+    x, (errs, resids) = jax.lax.scan(chunk, x0, rows.reshape(-1, rec))
+    iters = (1 + jnp.arange(num_iters // rec)) * rec
+    return SolveResult(x=x, err_sq=errs, resid=resids, iters=iters)
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("num_iters", "tau", "record_every", "read_model", "delay_mode"),
+)
+def async_rk_solve(
+    A: jax.Array,
+    b: jax.Array,
+    x0: jax.Array,
+    x_star: jax.Array,
+    *,
+    key: jax.Array,
+    delay_key: jax.Array,
+    num_iters: int,
+    tau: int,
+    beta: float = 1.0,
+    read_model: str = "consistent",
+    delay_mode: str = "fixed",
+    miss_prob: float = 0.5,
+    record_every: int = 0,
+) -> SolveResult:
+    k = b.shape[1]
+    rn = row_norms_sq(A)
+    rec = record_every or num_iters
+    assert num_iters % rec == 0
+    rows = sample_rows(key, A, num_iters)
+    t_buf = max(tau, 1)
+
+    if read_model == "consistent":
+        if delay_mode == "fixed":
+            delays = jnp.full((num_iters,), tau, jnp.int32)
+        elif delay_mode == "uniform":
+            delays = jax.random.randint(delay_key, (num_iters,), 0, tau + 1)
+        elif delay_mode == "cyclic":
+            delays = (jnp.arange(num_iters) % (tau + 1)).astype(jnp.int32)
+        else:
+            raise ValueError(delay_mode)
+        aux = delays
+    elif read_model == "inconsistent":
+        aux = jax.random.bernoulli(delay_key, miss_prob, (num_iters, t_buf))
+    else:
+        raise ValueError(read_model)
+
+    ring_r0 = jnp.zeros((t_buf,), jnp.int32)
+    ring_c0 = jnp.zeros((t_buf, k), x0.dtype)
+    offsets = jnp.arange(t_buf)
+
+    def step(carry, inp):
+        x, ring_r, ring_c, j = carry
+        r, a = inp
+        it_idx = j - 1 - offsets
+        valid = it_idx >= 0
+        if read_model == "consistent":
+            invisible = (offsets < a) & valid
+        else:
+            invisible = a & valid & (offsets < tau)
+        slots = jnp.mod(it_idx, t_buf)
+        rs = ring_r[slots]
+        cs = ring_c[slots]
+        w = jnp.where(invisible, A[rs] @ A[r], 0.0)
+        corr = w @ cs
+        gamma = (b[r] - A[r] @ x + corr) / rn[r]
+        c = beta * gamma
+        x = x + A[r][:, None] * c[None, :]
+        ring_r = ring_r.at[jnp.mod(j, t_buf)].set(r)
+        ring_c = ring_c.at[jnp.mod(j, t_buf)].set(c)
+        return (x, ring_r, ring_c, j + 1), None
+
+    def chunk(carry, inp):
+        carry, _ = jax.lax.scan(step, carry, inp)
+        errs = _record_lsq(A, b, carry[0], x_star)
+        return carry, errs
+
+    inps = (rows.reshape(-1, rec), aux.reshape((-1, rec) + aux.shape[1:]))
+    carry = (x0, ring_r0, ring_c0, jnp.array(0, jnp.int32))
+    carry, (errs, resids) = jax.lax.scan(chunk, carry, inps)
+    iters = (1 + jnp.arange(num_iters // rec)) * rec
+    return SolveResult(x=carry[0], err_sq=errs, resid=resids, iters=iters)
+
+
+def rk_effective_tau(num_workers: int, local_steps: int) -> int:
+    return 0 if num_workers == 1 else local_steps - 1
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("mesh", "axis", "rounds", "local_steps", "beta", "unroll"),
+)
+def parallel_rk_solve(
+    A: jax.Array,
+    b: jax.Array,
+    x0: jax.Array,
+    x_star: jax.Array,
+    *,
+    key: jax.Array,
+    mesh: jax.sharding.Mesh,
+    axis: str = "workers",
+    rounds: int,
+    local_steps: int,
+    beta: float = 1.0,
+    unroll: bool = False,
+) -> ParallelSolveResult:
+    num_workers = mesh.shape[axis]
+    m = A.shape[0]
+    slab = m // num_workers
+    assert slab * num_workers == m, (
+        f"worker count ({num_workers}) must divide the row count ({m})")
+    rn = row_norms_sq(A)
+    picks = sample_rows(key, A, rounds * local_steps).reshape(rounds, local_steps)
+
+    def worker(A_sh, b_sh, rn_sh, x0_full, xs_full, picks):
+        w = jax.lax.axis_index(axis)
+        row0 = w * slab
+
+        def round_body(xw, picks_r):
+            delta = pvary(jnp.zeros_like(xw), (axis,))
+
+            def step(carry, p):
+                xw, delta = carry
+                li = p - row0
+                mine = (li >= 0) & (li < slab)
+                lic = jnp.clip(li, 0, slab - 1)
+                Ar = A_sh[lic]                               # (n,)
+                g = (b_sh[lic] - Ar @ xw) / rn_sh[lic]       # (k,)
+                upd = jnp.where(mine, beta, 0.0) * Ar[:, None] * g[None, :]
+                return (xw + upd, delta + upd), None
+
+            (xw, delta), _ = jax.lax.scan(
+                step, (xw, delta), picks_r,
+                unroll=local_steps if unroll else 1)
+            if num_workers > 1:
+                xw = xw + (jax.lax.psum(delta, axis) - delta)
+            err = jnp.einsum("nk,nk->k", xw - xs_full, xw - xs_full)
+            r_local = b_sh - A_sh @ xw
+            rsq = jax.lax.psum(jnp.einsum("sk,sk->k", r_local, r_local), axis)
+            return xw, (err, jnp.sqrt(rsq))
+
+        xw, (errs, resids) = jax.lax.scan(
+            round_body, pvary(x0_full, (axis,)), picks,
+            unroll=rounds if unroll else 1)
+        return xw, errs, resids
+
+    mapped = shard_map(
+        worker,
+        mesh=mesh,
+        in_specs=(P(axis, None), P(axis, None), P(axis), P(None, None),
+                  P(None, None), P(None, None)),
+        out_specs=(P(None, None), P(None, None), P(None, None)),
+    )
+    x, errs, resids = mapped(A, b, rn, x0, x_star, picks)
+    return ParallelSolveResult(
+        x=x, err_sq=errs, resid=resids,
+        tau=rk_effective_tau(num_workers, local_steps))
+
+
+# ---------------------------------------------------------------------------
+# core/async_rgs.py (pre-refactor)
+# ---------------------------------------------------------------------------
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("num_iters", "tau", "record_every", "read_model", "delay_mode"),
+)
+def async_rgs_solve(
+    A: jax.Array,
+    b: jax.Array,
+    x0: jax.Array,
+    x_star: jax.Array,
+    *,
+    key: jax.Array,
+    delay_key: jax.Array,
+    num_iters: int,
+    tau: int,
+    beta: float = 1.0,
+    read_model: str = "consistent",
+    delay_mode: str = "fixed",
+    miss_prob: float = 0.5,
+    record_every: int = 0,
+) -> SolveResult:
+    n = A.shape[0]
+    k = b.shape[1]
+    rec = record_every or num_iters
+    assert num_iters % rec == 0
+
+    coords = jax.random.randint(key, (num_iters,), 0, n)
+    t_buf = max(tau, 1)
+
+    if read_model == "consistent":
+        if delay_mode == "fixed":
+            delays = jnp.full((num_iters,), tau, jnp.int32)
+        elif delay_mode == "uniform":
+            delays = jax.random.randint(delay_key, (num_iters,), 0, tau + 1)
+        elif delay_mode == "cyclic":
+            delays = (jnp.arange(num_iters) % (tau + 1)).astype(jnp.int32)
+        else:
+            raise ValueError(delay_mode)
+        aux = delays
+    elif read_model == "inconsistent":
+        aux = jax.random.bernoulli(delay_key, miss_prob, (num_iters, t_buf))
+    else:
+        raise ValueError(read_model)
+
+    ring_r0 = jnp.zeros((t_buf,), jnp.int32)
+    ring_g0 = jnp.zeros((t_buf, k), x0.dtype)
+
+    offsets = jnp.arange(t_buf)
+
+    def step(carry, inp):
+        x, ring_r, ring_g, j = carry
+        r, a = inp
+        it_idx = j - 1 - offsets
+        valid = it_idx >= 0
+        if read_model == "consistent":
+            invisible = (offsets < a) & valid
+        else:
+            invisible = a & valid & (offsets < tau)
+        slots = jnp.mod(it_idx, t_buf)
+        rs = ring_r[slots]
+        gs = ring_g[slots]
+        w = jnp.where(invisible, A[r, rs], 0.0)
+        corr = w @ gs
+        gamma = b[r] - A[r] @ x + corr
+        applied = beta * gamma
+        x = x.at[r].add(applied)
+        ring_r = ring_r.at[jnp.mod(j, t_buf)].set(r)
+        ring_g = ring_g.at[jnp.mod(j, t_buf)].set(applied)
+        return (x, ring_r, ring_g, j + 1), None
+
+    def chunk(carry, inp):
+        carry, _ = jax.lax.scan(step, carry, inp)
+        errs = _record(A, b, carry[0], x_star)
+        return carry, errs
+
+    inps = (coords.reshape(-1, rec), aux.reshape((-1, rec) + aux.shape[1:]))
+    carry = (x0, ring_r0, ring_g0, jnp.array(0, jnp.int32))
+    carry, (errs, resids) = jax.lax.scan(chunk, carry, inps)
+    iters = (1 + jnp.arange(num_iters // rec)) * rec
+    return SolveResult(x=carry[0], err_sq=errs, resid=resids, iters=iters)

@@ -1,0 +1,131 @@
+"""Distributed engine: bit-exact equivalence of the parallel legacy entry
+points vs the frozen pre-refactor implementations, the halo-vs-allgather
+iterate identity *through the unified driver*, and the new block-banded
+Kaczmarz strategy end-to-end — all on a forced 4-device host mesh in a
+subprocess (the main test process keeps its single real device)."""
+import textwrap
+
+import pytest
+
+from conftest import run_script_in_subprocess
+
+EQUIV_SCRIPT = textwrap.dedent("""
+    import os, sys
+    os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=4"
+    sys.path.insert(0, "tests")
+    import jax, jax.numpy as jnp, numpy as np
+    import legacy_solvers as legacy
+    from repro.core import (block_banded_spd, parallel_rgs_banded,
+                            parallel_rgs_halo, parallel_rgs_solve,
+                            parallel_rk_solve, random_lsq, random_sparse_spd)
+    from repro.kernels.bbmv import dense_to_bands
+    from repro.launch.mesh import make_host_mesh
+
+    mesh = make_host_mesh(4)
+
+    def same(a, b):
+        assert bool(jnp.array_equal(a, b)), float(jnp.abs(a - b).max())
+
+    # --- dense GS, coordinate and block granularity -----------------------
+    prob = random_sparse_spd(256, row_nnz=8, n_rhs=2, seed=0)
+    x0 = jnp.zeros_like(prob.x_star)
+    for block, ls, beta in ((1, 16, 0.8), (4, 4, 0.9)):
+        kw = dict(key=jax.random.key(block), mesh=mesh, rounds=6,
+                  local_steps=ls, block=block, beta=beta)
+        n = parallel_rgs_solve(prob.A, prob.b, x0, prob.x_star, **kw)
+        o = legacy.parallel_rgs_solve(prob.A, prob.b, x0, prob.x_star, **kw)
+        same(n.x, o.x); same(n.err_sq, o.err_sq); same(n.resid, o.resid)
+        assert int(n.tau) == int(o.tau)
+
+    # --- banded GS (all-gather) and halo variant --------------------------
+    bb = block_banded_spd(512, block=16, bands=1, n_rhs=3, seed=2)
+    Ab = dense_to_bands(bb.A, bands=1, block=16)
+    xb0 = jnp.zeros_like(bb.x_star)
+    kw = dict(key=jax.random.key(5), mesh=mesh, rounds=7, local_steps=5,
+              block=16, bands=1, beta=0.7)
+    nb = parallel_rgs_banded(Ab, bb.b, xb0, bb.x_star, **kw)
+    ob = legacy.parallel_rgs_banded(Ab, bb.b, xb0, bb.x_star, **kw)
+    same(nb.x, ob.x); same(nb.err_sq, ob.err_sq); same(nb.resid, ob.resid)
+
+    nh = parallel_rgs_halo(Ab, bb.b, xb0, **kw)
+    oh = legacy.parallel_rgs_halo(Ab, bb.b, xb0, **kw)
+    same(nh.x, oh.x); same(nh.resid, oh.resid)
+    # the satellite fix: err_sq no longer silently carries the squared
+    # residual (legacy bug) — it is NaN when no x_star is supplied
+    assert bool(jnp.isnan(nh.err_sq).all())
+
+    # metrics-off invariance through the engine (legacy contract)
+    nb2 = parallel_rgs_banded(Ab, bb.b, xb0, bb.x_star, with_metrics=False,
+                              **kw)
+    nh2 = parallel_rgs_halo(Ab, bb.b, xb0, with_metrics=False, **kw)
+    same(nb2.x, nb.x); same(nh2.x, nh.x)
+    assert float(jnp.abs(nb2.err_sq).max()) == 0.0
+    assert float(jnp.abs(nh2.resid).max()) == 0.0
+
+    # --- dense RK ---------------------------------------------------------
+    lp = random_lsq(256, 32, n_rhs=2, noise=0.0, seed=0)
+    w0 = jnp.zeros_like(lp.x_star)
+    kw = dict(key=jax.random.key(0), mesh=mesh, rounds=10, local_steps=8,
+              beta=0.9)
+    nk = parallel_rk_solve(lp.A, lp.b, w0, lp.x_star, **kw)
+    ok = legacy.parallel_rk_solve(lp.A, lp.b, w0, lp.x_star, **kw)
+    same(nk.x, ok.x); same(nk.err_sq, ok.err_sq); same(nk.resid, ok.resid)
+    print("LEGACY_EQUIV_OK")
+""")
+
+
+DRIVER_SCRIPT = textwrap.dedent("""
+    import os
+    os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=4"
+    import jax, jax.numpy as jnp, numpy as np
+    from repro.core import BlockBandedOp, block_banded_spd
+    from repro.core.engine import solve_distributed
+    from repro.kernels.bbmv import dense_to_bands
+    from repro.launch.mesh import make_host_mesh
+
+    mesh = make_host_mesh(4)
+    bb = block_banded_spd(512, block=16, bands=1, n_rhs=3, seed=2)
+    op = BlockBandedOp(dense_to_bands(bb.A, bands=1, block=16), bands=1)
+    x0 = jnp.zeros_like(bb.x_star)
+    kw = dict(action="gs", key=jax.random.key(5), mesh=mesh, rounds=7,
+              local_steps=5, beta=0.7)
+
+    # halo-vs-allgather iterate identity through the unified driver, with
+    # x_star supplied so both report the A-norm error
+    rh = solve_distributed(op, bb.b, x0, bb.x_star, sync="halo", **kw)
+    rg = solve_distributed(op, bb.b, x0, bb.x_star, sync="allgather", **kw)
+    assert float(jnp.abs(rh.x - rg.x).max()) == 0.0
+    # window-local A-norm error agrees with the all-gather metric path
+    assert np.allclose(np.asarray(rh.err_sq), np.asarray(rg.err_sq),
+                       rtol=1e-3, atol=1e-5), (rh.err_sq, rg.err_sq)
+    # sync="auto" picks halo for a finite-halo operator
+    ra = solve_distributed(op, bb.b, x0, bb.x_star, **kw)
+    assert float(jnp.abs(ra.x - rh.x).max()) == 0.0
+
+    # --- block-banded Kaczmarz: the new action x format point -------------
+    rk = solve_distributed(op, bb.b, x0, bb.x_star, action="rk",
+                           key=jax.random.key(0), mesh=mesh, rounds=30,
+                           local_steps=16, beta=0.9)
+    assert int(rk.tau) == 15
+    r = np.asarray(rk.resid)[:, 0]
+    assert r[-1] < 1e-2 * r[0], r
+    rel = float(jnp.linalg.norm(bb.b - bb.A @ rk.x) / jnp.linalg.norm(bb.b))
+    assert rel < 1e-2, rel
+    e = np.asarray(rk.err_sq)
+    assert e[-1].max() < 1e-2 * e[0].max(), e[:, 0]
+    print("DRIVER_OK")
+""")
+
+
+@pytest.mark.slow
+def test_parallel_legacy_bit_identity():
+    out = run_script_in_subprocess(EQUIV_SCRIPT)
+    assert out.returncode == 0, out.stderr[-3000:]
+    assert "LEGACY_EQUIV_OK" in out.stdout
+
+
+@pytest.mark.slow
+def test_unified_driver_halo_allgather_and_banded_rk():
+    out = run_script_in_subprocess(DRIVER_SCRIPT)
+    assert out.returncode == 0, out.stderr[-3000:]
+    assert "DRIVER_OK" in out.stdout

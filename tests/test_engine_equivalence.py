@@ -1,0 +1,110 @@
+"""Bit-exact equivalence of every sequential/simulator legacy entry point
+against the frozen pre-refactor implementations (tests/legacy_solvers.py).
+
+The refactor's contract (ISSUE 2): the unified engine behind ``rgs_solve``,
+``block_gs_solve``, ``rk_solve``, ``async_rgs_solve``, ``async_rk_solve``
+must reproduce the pre-refactor iterates BIT-FOR-BIT given the same PRNG
+keys — same sampling, same operation order, same dtypes.  ``array_equal``,
+not ``allclose``.  (The distributed entry points are pinned the same way in
+test_engine_distributed.py, which needs forced multi-device subprocesses.)
+"""
+import jax
+import jax.numpy as jnp
+import pytest
+
+import legacy_solvers as legacy
+from repro.core import (async_rgs_solve, async_rk_solve, block_gs_solve,
+                        random_lsq, random_sparse_spd, rgs_solve, rk_solve)
+
+
+@pytest.fixture(scope="module")
+def spd_prob():
+    return random_sparse_spd(96, row_nnz=6, n_rhs=3, seed=3)
+
+
+@pytest.fixture(scope="module")
+def lsq_prob():
+    return random_lsq(120, 24, n_rhs=2, noise=0.01, seed=1)
+
+
+def _assert_same(new, old):
+    assert bool(jnp.array_equal(new.x, old.x)), \
+        float(jnp.abs(new.x - old.x).max())
+    assert bool(jnp.array_equal(new.err_sq, old.err_sq))
+    assert bool(jnp.array_equal(new.resid, old.resid))
+    assert bool(jnp.array_equal(new.iters, old.iters))
+
+
+def test_rgs_solve_bit_identical(spd_prob):
+    x0 = jnp.zeros_like(spd_prob.x_star)
+    kw = dict(key=jax.random.key(7), num_iters=192, record_every=96)
+    _assert_same(rgs_solve(spd_prob.A, spd_prob.b, x0, spd_prob.x_star, **kw),
+                 legacy.rgs_solve(spd_prob.A, spd_prob.b, x0, spd_prob.x_star,
+                                  **kw))
+    # damped step and end-only recording
+    kw = dict(key=jax.random.key(9), num_iters=100, beta=0.6)
+    _assert_same(rgs_solve(spd_prob.A, spd_prob.b, x0, spd_prob.x_star, **kw),
+                 legacy.rgs_solve(spd_prob.A, spd_prob.b, x0, spd_prob.x_star,
+                                  **kw))
+
+
+def test_block_gs_solve_bit_identical(spd_prob):
+    x0 = jnp.zeros_like(spd_prob.x_star)
+    for block, beta in ((16, 0.9), (32, 1.0)):
+        kw = dict(key=jax.random.key(2), num_sweeps=3, block=block, beta=beta)
+        _assert_same(
+            block_gs_solve(spd_prob.A, spd_prob.b, x0, spd_prob.x_star, **kw),
+            legacy.block_gs_solve(spd_prob.A, spd_prob.b, x0,
+                                  spd_prob.x_star, **kw))
+
+
+def test_rk_solve_bit_identical(lsq_prob):
+    x0 = jnp.zeros_like(lsq_prob.x_star)
+    kw = dict(key=jax.random.key(5), num_iters=600, record_every=200)
+    _assert_same(rk_solve(lsq_prob.A, lsq_prob.b, x0, lsq_prob.x_star, **kw),
+                 legacy.rk_solve(lsq_prob.A, lsq_prob.b, x0, lsq_prob.x_star,
+                                 **kw))
+    kw = dict(key=jax.random.key(6), num_iters=250, beta=0.75)
+    _assert_same(rk_solve(lsq_prob.A, lsq_prob.b, x0, lsq_prob.x_star, **kw),
+                 legacy.rk_solve(lsq_prob.A, lsq_prob.b, x0, lsq_prob.x_star,
+                                 **kw))
+
+
+@pytest.mark.parametrize("read_model,delay_mode", [
+    ("consistent", "fixed"),
+    ("consistent", "uniform"),
+    ("consistent", "cyclic"),
+    ("inconsistent", "fixed"),
+])
+def test_async_rgs_bit_identical(spd_prob, read_model, delay_mode):
+    x0 = jnp.zeros_like(spd_prob.x_star)
+    kw = dict(key=jax.random.key(1), delay_key=jax.random.key(2),
+              num_iters=200, tau=8, beta=0.7, read_model=read_model,
+              delay_mode=delay_mode, record_every=100)
+    _assert_same(
+        async_rgs_solve(spd_prob.A, spd_prob.b, x0, spd_prob.x_star, **kw),
+        legacy.async_rgs_solve(spd_prob.A, spd_prob.b, x0, spd_prob.x_star,
+                               **kw))
+
+
+@pytest.mark.parametrize("read_model", ["consistent", "inconsistent"])
+def test_async_rk_bit_identical(lsq_prob, read_model):
+    x0 = jnp.zeros_like(lsq_prob.x_star)
+    kw = dict(key=jax.random.key(3), delay_key=jax.random.key(4),
+              num_iters=300, tau=6, beta=0.8, read_model=read_model)
+    _assert_same(
+        async_rk_solve(lsq_prob.A, lsq_prob.b, x0, lsq_prob.x_star, **kw),
+        legacy.async_rk_solve(lsq_prob.A, lsq_prob.b, x0, lsq_prob.x_star,
+                              **kw))
+
+
+def test_schedule_helpers_deduplicated():
+    """effective_tau / rk_effective_tau are one engine helper now."""
+    from repro.core import effective_tau, rk_effective_tau, scheduled_tau
+    for p in (1, 2, 8):
+        for ls in (1, 5, 64):
+            assert effective_tau(p, ls) == scheduled_tau(p, ls) \
+                == legacy.effective_tau(p, ls)
+            assert rk_effective_tau(p, ls) \
+                == scheduled_tau(p, ls, shared_stream=True) \
+                == legacy.rk_effective_tau(p, ls)

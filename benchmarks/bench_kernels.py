@@ -17,8 +17,8 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from benchmarks.common import emit, timed
-from repro.core import BlockBandedOp, EllOp, block_banded_spd
+from benchmarks.common import emit, timed, write_json
+from repro.core import BlockBandedOp, CsrOp, EllOp, block_banded_spd
 from repro.kernels import ops, ref
 
 
@@ -28,27 +28,44 @@ def run(n: int = 1024, block: int = 128, bands: int = 1, k: int = 64):
     width = int((np.asarray(prob.A) != 0).sum(1).max())
     width = -(-width // 8) * 8
     eop = EllOp.from_dense(prob.A, width=width)
+    cop = CsrOp.from_dense(prob.A)
 
     # operator-layer matvecs (Pallas kernels behind; interpret mode on CPU)
     y_b = bop.matvec(prob.x_star)
     y_e = eop.matvec(prob.x_star)
+    y_c = cop.matvec(prob.x_star)
     y_d = prob.A @ prob.x_star
-    emit("bench_kernels", check_bbmv=f"{float(jnp.abs(y_b-y_d).max()):.2e}",
-         check_ell=f"{float(jnp.abs(y_e-y_d).max()):.2e}")
+    check_bbmv = float(jnp.abs(y_b - y_d).max())
+    check_ell = float(jnp.abs(y_e - y_d).max())
+    check_csr = float(jnp.abs(y_c - y_d).max())
+    emit("bench_kernels", check_bbmv=f"{check_bbmv:.2e}",
+         check_ell=f"{check_ell:.2e}", check_csr=f"{check_csr:.2e}")
 
     # Modeled arithmetic intensity on the A-stream (FLOPs per byte of matrix
-    # read): blocked tiles amortize k RHS columns per element; ELL pays the
-    # same matrix bytes plus a gathered row of x per nonzero (uncoalesced).
+    # read): blocked tiles amortize k RHS columns per element; ELL/CSR pay
+    # the same matrix bytes plus a gathered row of x per nonzero
+    # (uncoalesced); CSR additionally streams a row id per slot but its
+    # segment sum runs as a one-hot MXU matmul (kernels/spmv_csr.py).
     bbmv_bytes = bop.nnz_cost() * 4
     bbmv_flops = 2 * bop.nnz_cost() * k
     ell_bytes = eop.nnz_cost() * (4 + 4) + eop.nnz_cost() * k * 4
     ell_flops = 2 * eop.nnz_cost() * k
-    emit("bench_kernels", layout="block_banded",
-         ai_flops_per_byte=f"{bbmv_flops/bbmv_bytes:.1f}",
-         wall_us=f"{timed(lambda: bop.matvec(prob.x_star))*1e6:.0f}")
-    emit("bench_kernels", layout="ell_gather",
-         ai_flops_per_byte=f"{ell_flops/ell_bytes:.1f}",
-         wall_us=f"{timed(lambda: eop.matvec(prob.x_star))*1e6:.0f}")
+    csr_slots = cop.panel_width * (-(-n // cop.rows_per_panel))
+    csr_bytes = csr_slots * (4 + 4 + 4) + csr_slots * k * 4
+    csr_flops = 2 * cop.nnz_cost() * k
+    layouts = {}
+    for name, ai, fn in (
+        ("block_banded", bbmv_flops / bbmv_bytes,
+         lambda: bop.matvec(prob.x_star)),
+        ("ell_gather", ell_flops / ell_bytes,
+         lambda: eop.matvec(prob.x_star)),
+        ("csr_segsum", csr_flops / csr_bytes,
+         lambda: cop.matvec(prob.x_star)),
+    ):
+        wall = timed(fn)
+        emit("bench_kernels", layout=name, ai_flops_per_byte=f"{ai:.1f}",
+             wall_us=f"{wall*1e6:.0f}")
+        layouts[name] = {"ai_flops_per_byte": ai, "wall_us": wall * 1e6}
 
     # fused sweep kernel vs oracle
     nb = bop.nb
@@ -56,9 +73,18 @@ def run(n: int = 1024, block: int = 128, bands: int = 1, k: int = 64):
     x0 = jnp.zeros_like(prob.b)
     out = ops.block_gs_sweep(prob.A, prob.b, x0, blocks, block=block, beta=1.0)
     want = ref.block_gs_sweep_ref(prob.A, prob.b, x0, blocks, block=block, beta=1.0)
-    emit("bench_kernels", check_block_gs=f"{float(jnp.abs(out-want).max()):.2e}",
-         sweep_wall_us=f"{timed(lambda: ops.block_gs_sweep(prob.A, prob.b, x0, blocks, block=block))*1e6:.0f}")
+    check_block_gs = float(jnp.abs(out - want).max())
+    sweep_wall = timed(lambda: ops.block_gs_sweep(prob.A, prob.b, x0, blocks,
+                                                  block=block))
+    emit("bench_kernels", check_block_gs=f"{check_block_gs:.2e}",
+         sweep_wall_us=f"{sweep_wall*1e6:.0f}")
+    return {
+        "n": n, "block": block, "bands": bands, "k": k,
+        "check_bbmv": check_bbmv, "check_ell": check_ell,
+        "check_csr": check_csr, "check_block_gs": check_block_gs,
+        "layouts": layouts, "sweep_wall_us": sweep_wall * 1e6,
+    }
 
 
 if __name__ == "__main__":
-    run()
+    write_json("kernels", run())

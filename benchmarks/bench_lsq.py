@@ -16,7 +16,11 @@ has ZERO global synchronization points while every CG iteration pays 2
 blocking all-reduces, after an up-front A^T A formation the row-action
 method never needs.
 
-    PYTHONPATH=src python benchmarks/bench_lsq.py
+    PYTHONPATH=src python -m benchmarks.bench_lsq
+
+A full run persists its records (wall-clock, relresid trajectories, problem
+dims, P/tau) to BENCH_lsq.json at the repo root so later PRs can diff the
+perf trajectory.
 """
 from __future__ import annotations
 
@@ -26,9 +30,10 @@ import numpy as np
 
 import time
 
-from benchmarks.common import emit, timed
-from repro.core import (BlockBandedOp, block_banded_spd, cg_solve, random_lsq,
-                        rk_solve, theory, to_unit_diagonal)
+from benchmarks.common import emit, timed, write_json
+from repro.core import (BlockBandedOp, CsrOp, block_banded_spd, cg_solve,
+                        random_lsq, random_sparse_lsq, rk_solve, theory,
+                        to_unit_diagonal)
 from repro.core.engine import scheduled_tau, solve_distributed
 from repro.launch.mesh import make_host_mesh
 
@@ -82,7 +87,15 @@ def run(m: int = 4096, n: int = 512, rhs: int = 8, sweeps: int = 12,
          rk_s=f"{t_rk:.2f}", cg_s=f"{t_cg:.2f}", ne_form_s=f"{t_ne:.2f}",
          rk_syncs_per_sweep=0, cg_syncs_per_iter=2,
          theory_factor=f"{float(theory.rk_factor(prob.A)):.6f}")
-    return rk_r, cg_ne
+    return {
+        "m": m, "n": n, "rhs": rhs, "sweeps": sweeps,
+        "kappa": float(prob.kappa), "floor": floor,
+        "rk_relresid": rk_r, "cg_ne_resid": cg_ne,
+        "rk_final_relresid": float(rk_r[-1]), "cg_final_relresid": cg_final,
+        "rk_sweeps_to_1e1": hits[1e-1], "rk_sweeps_to_1e2": hits[1e-2],
+        "rk_wall_s": t_rk, "cg_wall_s": t_cg, "ne_form_wall_s": t_ne,
+        "theory_factor": float(theory.rk_factor(prob.A)),
+    }
 
 
 def run_banded_rk(n: int = 2048, block: int = 64, bands: int = 2,
@@ -116,9 +129,63 @@ def run_banded_rk(n: int = 2048, block: int = 64, bands: int = 2,
          beta=beta, nnz_frac=f"{op.nnz_cost() / (n * n):.4f}",
          relresid_first=f"{r[0] / bn:.3e}", relresid_last=f"{r[-1] / bn:.3e}",
          final_relresid=f"{rel:.3e}", wall_s=f"{wall:.2f}")
-    return res
+    return {
+        "n": n, "block": block, "bands": bands, "rhs": rhs,
+        "workers": workers, "rounds": rounds, "local_steps": local_steps,
+        "tau": tau, "beta": beta, "nnz_frac": op.nnz_cost() / (n * n),
+        "relresid_first": float(r[0] / bn), "relresid_last": float(r[-1] / bn),
+        "final_relresid": rel, "wall_s": wall,
+    }
+
+
+def run_csr_rk(m: int = 2048, n: int = 512, row_nnz: int = 16, rhs: int = 8,
+               rounds: int = 60, local_steps: int = 32, beta: float = 0.9,
+               seed: int = 0, workers: int = 0):
+    """General-sparse Kaczmarz through the unified distributed driver — the
+    Kaczmarz action × CsrOp point (ISSUE 3 tentpole): per-worker *local*
+    row sampling (each worker draws from its own slab ∝ its row norms, so
+    every step is a useful update — wall-clock-faithful, unlike the global
+    masked stream) with delta-psum sync; the shared-stream scheduled
+    staleness applies to the round's interleaved P*local_steps stream
+    (tau = workers*local_steps - 1).
+    """
+    prob = random_sparse_lsq(m, n, row_nnz=row_nnz, n_rhs=rhs, seed=seed)
+    op = CsrOp.from_dense(prob.A)
+    x0 = jnp.zeros_like(prob.x_star)
+    workers = workers or len(jax.devices())
+    mesh = make_host_mesh(workers)
+    # local sampling: the round's interleaved shared stream has
+    # workers*local_steps picks (every worker's step is useful work)
+    tau = scheduled_tau(workers, local_steps, shared_stream=True,
+                        local_sampling=True)
+
+    t0 = time.perf_counter()
+    res = solve_distributed(op, prob.b, x0, prob.x_star, action="rk",
+                            key=jax.random.key(1), mesh=mesh, rounds=rounds,
+                            local_steps=local_steps, beta=beta)
+    jax.block_until_ready(res.x)
+    wall = time.perf_counter() - t0
+    r = np.linalg.norm(np.asarray(res.resid), axis=1)
+    bn = float(jnp.linalg.norm(prob.b))
+    rel = float(jnp.linalg.norm(prob.b - prob.A @ res.x)) / bn
+    emit("bench_lsq_csr_rk", m=m, n=n, row_nnz=row_nnz, rhs=rhs,
+         workers=workers, rounds=rounds, local_steps=local_steps, tau=tau,
+         beta=beta, nnz_frac=f"{op.nnz_cost() / (m * n):.4f}",
+         relresid_first=f"{r[0] / bn:.3e}", relresid_last=f"{r[-1] / bn:.3e}",
+         final_relresid=f"{rel:.3e}", wall_s=f"{wall:.2f}")
+    return {
+        "m": m, "n": n, "row_nnz": row_nnz, "rhs": rhs,
+        "workers": workers, "rounds": rounds, "local_steps": local_steps,
+        "tau": tau, "beta": beta, "nnz_frac": op.nnz_cost() / (m * n),
+        "relresid_first": float(r[0] / bn), "relresid_last": float(r[-1] / bn),
+        "final_relresid": rel, "wall_s": wall,
+    }
 
 
 if __name__ == "__main__":
-    run()
-    run_banded_rk()
+    payload = {
+        "lsq": run(),
+        "banded_rk": run_banded_rk(),
+        "csr_rk": run_csr_rk(),
+    }
+    write_json("lsq", payload)

@@ -1,15 +1,42 @@
-"""Shared benchmark plumbing: CSV emission + timed execution."""
+"""Shared benchmark plumbing: CSV emission, JSON persistence, timing."""
 from __future__ import annotations
 
+import json
 import time
+from pathlib import Path
 
 import jax
+
+#: Repo root — where the persisted BENCH_*.json files land so successive
+#: PRs can diff them (printed records alone left no perf trajectory).
+REPO_ROOT = Path(__file__).resolve().parent.parent
 
 
 def emit(name: str, **fields):
     """One CSV-ish record per line: benchmark,key=value,..."""
     kv = ",".join(f"{k}={v}" for k, v in fields.items())
     print(f"{name},{kv}", flush=True)
+
+
+def _jsonable(obj):
+    if isinstance(obj, dict):
+        return {str(k): _jsonable(v) for k, v in obj.items()}
+    if isinstance(obj, (list, tuple)):
+        return [_jsonable(v) for v in obj]
+    if hasattr(obj, "item") and getattr(obj, "ndim", 1) == 0:
+        return obj.item()                     # numpy / jax scalars
+    if hasattr(obj, "tolist"):
+        return obj.tolist()                   # numpy / jax arrays
+    return obj
+
+
+def write_json(name: str, payload) -> Path:
+    """Persist a benchmark payload as ``BENCH_<name>.json`` at the repo
+    root (round-trippable: numpy/jax scalars and arrays are plain lists)."""
+    path = REPO_ROOT / f"BENCH_{name}.json"
+    path.write_text(json.dumps(_jsonable(payload), indent=2) + "\n")
+    print(f"[bench] wrote {path}", flush=True)
+    return path
 
 
 def timed(fn, *args, warmup: int = 1, iters: int = 3):

@@ -16,7 +16,8 @@ from repro.core.spd import (
     random_sparse_spd,
     to_unit_diagonal,
 )
-from repro.core.operators import BlockBandedOp, DenseOp, EllOp, as_operator
+from repro.core.operators import (BlockBandedOp, CsrOp, DenseOp, EllOp,
+                                  as_operator)
 from repro.core import engine
 from repro.core.engine import Schedule, scheduled_tau, solve
 from repro.core.rgs import SolveResult, block_gs_solve, rgs_general, rgs_solve
@@ -34,6 +35,7 @@ from repro.core.kaczmarz import (
     async_rk_solve,
     parallel_rk_solve,
     random_lsq,
+    random_sparse_lsq,
     rk_effective_tau,
     rk_solve,
 )
@@ -41,6 +43,7 @@ from repro.core import theory
 
 __all__ = [
     "BlockBandedOp",
+    "CsrOp",
     "DenseOp",
     "EllOp",
     "LSQProblem",
@@ -68,6 +71,7 @@ __all__ = [
     "parallel_rgs_solve",
     "parallel_rk_solve",
     "random_lsq",
+    "random_sparse_lsq",
     "random_sparse_spd",
     "rgs_general",
     "rgs_solve",

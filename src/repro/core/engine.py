@@ -38,6 +38,7 @@ from jax.sharding import PartitionSpec as P
 from repro.compat import pvary, shard_map
 from repro.core.operators import (
     BlockBandedOp,
+    CsrOp,
     DenseOp,
     EllOp,
     as_operator,
@@ -71,7 +72,8 @@ class ParallelSolveResult(NamedTuple):
 # ---------------------------------------------------------------------------
 
 def scheduled_tau(num_workers: int, local_steps: int, *,
-                  shared_stream: bool = False) -> int:
+                  shared_stream: bool = False,
+                  local_sampling: bool = False) -> int:
     """Staleness bound of the periodic-synchronization schedule.
 
     ``shared_stream=False`` (per-worker direction streams, the RGS scheme):
@@ -82,7 +84,17 @@ def scheduled_tau(num_workers: int, local_steps: int, *,
     owner, the RK scheme): within a round a pick misses at most the other
     workers' *earlier* in-round updates, so tau = local_steps - 1 (and 0 at
     P = 1, where every pick is owned and nothing is ever stale).
+
+    ``local_sampling=True`` (per-worker local sampling, the sparse-RK
+    scheme): every worker's ``local_steps`` picks are useful updates, so
+    the round's interleaved shared stream carries P * local_steps picks
+    and the shared-stream bound applies to that length —
+    tau = P * local_steps - 1.  This is the single source of truth for the
+    rule; the engine, CLIs, and benchmarks all route through it.
     """
+    if local_sampling:
+        shared_stream = True
+        local_steps = num_workers * local_steps
     if shared_stream:
         return 0 if num_workers == 1 else local_steps - 1
     return (num_workers - 1) * local_steps
@@ -105,10 +117,39 @@ class Schedule(NamedTuple):
     def distributed(self) -> bool:
         return self.rounds > 0
 
-    def effective_tau(self, num_workers: int, *, shared_stream: bool = False) -> int:
+    def validate(self) -> "Schedule":
+        """Reject ambiguous mode mixtures with a message naming the fields.
+
+        A Schedule carrying both ``num_iters > 0`` and ``rounds > 0`` has no
+        single meaning (would it run 'num_iters' iterations, or 'rounds'
+        synchronization rounds?), so it is an error rather than a silent
+        choice.
+        """
+        if self.distributed and (self.num_iters > 0 or self.tau > 0):
+            raise ValueError(
+                "ambiguous Schedule: rounds/local_steps (distributed) "
+                "cannot be combined with num_iters/tau (sequential / async "
+                f"simulator) — got {self}")
+        if self.distributed and self.local_steps <= 0:
+            raise ValueError(
+                f"a distributed Schedule needs local_steps > 0 (got {self})")
+        if not self.distributed:
+            if self.num_iters <= 0:
+                raise ValueError(
+                    "a sequential/async Schedule needs num_iters > 0 "
+                    f"(got {self})")
+            if self.local_steps > 0:
+                raise ValueError(
+                    "local_steps without rounds is ambiguous — set rounds > 0 "
+                    f"for distributed execution (got {self})")
+        return self
+
+    def effective_tau(self, num_workers: int, *, shared_stream: bool = False,
+                      local_sampling: bool = False) -> int:
         if self.distributed:
             return scheduled_tau(num_workers, self.local_steps,
-                                 shared_stream=shared_stream)
+                                 shared_stream=shared_stream,
+                                 local_sampling=local_sampling)
         return self.tau
 
 
@@ -136,8 +177,18 @@ def record_metrics(op, b, x, x_star, *, norm: str):
 
 
 def sample_rows(key: jax.Array, rn: jax.Array, num: int) -> jax.Array:
-    """``num`` i.i.d. row indices with P(i) ∝ rn_i (zero rows never picked)."""
-    return jax.random.categorical(key, jnp.log(rn), shape=(num,))
+    """``num`` i.i.d. row indices with P(i) ∝ rn_i (zero rows never picked).
+
+    An all-zero ``rn`` (an empty shard after slab partitioning) would turn
+    every logit into -inf and make ``categorical`` return garbage; the
+    defined behavior here is *uniform* sampling instead — the callers guard
+    the corresponding updates (zero rows make them no-ops), so distributed
+    pick scheduling stays well-defined on degenerate slabs.
+    """
+    pos = rn > 0
+    logits = jnp.where(pos, jnp.log(jnp.where(pos, rn, 1.0)), -jnp.inf)
+    logits = jnp.where(jnp.any(pos), logits, jnp.zeros_like(logits))
+    return jax.random.categorical(key, logits, shape=(num,))
 
 
 # ---------------------------------------------------------------------------
@@ -166,7 +217,10 @@ def solve_sequential(
     action "rk":  Kaczmarz row action; rows sampled ∝ ||A_i||^2.
     """
     rec = record_every or num_iters
-    assert num_iters % rec == 0
+    if num_iters % rec != 0:
+        raise ValueError(
+            f"num_iters ({num_iters}) must be divisible by record_every "
+            f"({rec})")
 
     if action == "gs":
         norm = "A"
@@ -188,9 +242,10 @@ def solve_sequential(
                 gamma = b[r] - op.row_dot(r, x)
                 return x.at[r].add(beta * gamma), None
         else:
-            if not isinstance(op, DenseOp):
+            if not isinstance(op, (DenseOp, CsrOp)):
                 raise NotImplementedError(
-                    "block GS with block > 1 needs DenseOp or BlockBandedOp")
+                    "block GS with block > 1 needs aligned row panels "
+                    "(DenseOp/CsrOp) or BlockBandedOp")
             nb = op.shape[0] // block
             picks = jax.random.randint(key, (num_iters,), 0, nb)
 
@@ -200,10 +255,10 @@ def solve_sequential(
                 gamma = b[rows] - Ab @ x
                 return x.at[rows].add(beta * gamma), None
     elif action == "rk":
-        if not isinstance(op, (DenseOp, EllOp)):
+        if not isinstance(op, (DenseOp, EllOp, CsrOp)):
             raise NotImplementedError(
-                "sequential RK needs per-row access (DenseOp/EllOp); the "
-                "banded Kaczmarz path runs through solve_distributed")
+                "sequential RK needs per-row access (DenseOp/EllOp/CsrOp); "
+                "the banded Kaczmarz path runs through solve_distributed")
         norm = "euclid"
         rn = op.row_norms_sq()
         picks = sample_rows(key, rn, num_iters)
@@ -263,11 +318,22 @@ def solve_async_sim(
     of the direction key (Assumption A-4).
     """
     if not isinstance(op, DenseOp):
-        raise NotImplementedError("the async simulator is dense-only")
+        # The ring-buffer correction needs arbitrary A[r, r_t] couplings and
+        # row inner products; for sparse formats the simulator (a research
+        # tool, not a perf path) runs on the exact densified operator —
+        # to_dense() reconstructs the stored values bit-for-bit.
+        if not hasattr(op, "to_dense"):
+            raise NotImplementedError(
+                f"the async simulator needs a densifiable operator "
+                f"(got {type(op).__name__})")
+        op = DenseOp(op.to_dense())
     A = op.A
     k = b.shape[1]
     rec = record_every or num_iters
-    assert num_iters % rec == 0
+    if num_iters % rec != 0:
+        raise ValueError(
+            f"num_iters ({num_iters}) must be divisible by record_every "
+            f"({rec})")
     t_buf = max(tau, 1)
 
     if action == "gs":
@@ -363,48 +429,114 @@ def solve_distributed(
 ) -> ParallelSolveResult:
     """P-way asynchronous solve under the periodic-synchronization schedule.
 
-    The sync collective is chosen from the operator's halo width when
+    The sync collective is chosen from the operator's layout metadata when
     ``sync="auto"``: a finite halo (block-banded) means neighbor halo
-    exchange suffices for the GS action; unbounded reach (dense) needs an
-    all-gather of slab deltas; the RK action accumulates updates across the
-    full coefficient vector and syncs by delta psum.
+    exchange suffices for the GS action; unstructured-but-sparse formats
+    that answer slab-neighbor queries (CSR, ELL) get the neighbor
+    all-to-all; unbounded reach (dense) needs an all-gather of slab deltas;
+    the RK action accumulates updates across the full coefficient vector
+    and syncs by delta psum.
+
+    ``sync="a2a"`` exchanges each worker's slab only along the row-slab
+    neighbor graph derived from the sparsity pattern (one masked ppermute
+    rotation per distinct slab offset); when the graph is dense — every
+    worker reads every slab — it falls back to the all-gather, which moves
+    the same bytes with one collective.
     """
     if sync == "auto":
         if action == "rk":
             sync = "psum"
         elif op.halo_width is not None:
             sync = "halo"
+        elif hasattr(op, "slab_neighbors"):
+            sync = "a2a"
         else:
             sync = "allgather"
 
-    if action == "gs" and isinstance(op, DenseOp) and sync == "allgather":
-        kind = "dense_gs"
-    elif action == "gs" and isinstance(op, BlockBandedOp) and sync == "allgather":
-        kind = "banded_gs"
-    elif action == "gs" and isinstance(op, BlockBandedOp) and sync == "halo":
-        kind = "halo_gs"
-    elif action == "rk" and isinstance(op, DenseOp) and sync == "psum":
-        kind = "dense_rk"
-    elif action == "rk" and isinstance(op, BlockBandedOp) and sync == "psum":
-        kind = "banded_rk"
-    else:
+    # Dispatch first, on the *requested* combination, so unsupported
+    # action x format x sync asks fail with the enumerating error rather
+    # than a wrong-layer message from the a2a precompute.
+    kind = _DISTRIBUTED_STRATEGIES.get(
+        (action, type(op).__name__, sync))
+    if kind is None:
+        supported = "\n  ".join(
+            f"action={a!r} x format={f} x sync={s!r}"
+            for (a, f, s) in sorted(_DISTRIBUTED_STRATEGIES))
         raise NotImplementedError(
             f"no distributed strategy for action={action!r}, "
-            f"format={type(op).__name__}, sync={sync!r}")
+            f"format={type(op).__name__}, sync={sync!r}; supported "
+            f"combinations:\n  {supported}")
+    if kind == "sparse_gs" and block != 1:
+        raise NotImplementedError(
+            f"distributed block GS with block={block} is not supported for "
+            f"{type(op).__name__}; the sparse slab strategies run "
+            "coordinate GS (block=1)")
+
+    a2a_schedule, a2a_masks = (), None
+    if sync == "a2a":
+        num_workers = mesh.shape[axis]
+        need = op.slab_neighbors(num_workers)
+        if num_workers > 1 and bool(need.all()):
+            # Truly dense graph — every worker reads every slab: the masked
+            # rotations would move exactly the all-gather's bytes over P-1
+            # sequential collectives, so one all-gather wins.  (A graph
+            # that merely covers all P-1 offsets with few pairs stays on
+            # a2a: its perms only carry the needed sender->reader pairs.)
+            # The strategy is unchanged — sparse_gs serves both syncs.
+            sync = "allgather"
+        else:
+            # One rotation per distinct slab offset; each rotation's perm
+            # only includes the (sender -> reader) pairs the sparsity
+            # pattern demands, and masks[w, si] says whether worker w
+            # accepts the slab arriving over rotation si.
+            shifts = sorted({(w - v) % num_workers
+                             for w in range(num_workers)
+                             for v in range(num_workers)
+                             if need[w, v] and w != v})
+            a2a_schedule = tuple(
+                (s, tuple((v, (v + s) % num_workers)
+                          for v in range(num_workers)
+                          if need[(v + s) % num_workers, v]))
+                for s in shifts)
+            a2a_masks = jnp.asarray(
+                [[bool(need[w, (w - s) % num_workers]) for s in shifts]
+                 for w in range(num_workers)]).reshape(num_workers,
+                                                       len(shifts))
 
     return _distributed_impl(
         kind, op, b, x0, x_star, key, mesh=mesh, axis=axis, rounds=rounds,
         local_steps=local_steps, block=block, beta=beta, unroll=unroll,
-        with_metrics=with_metrics)
+        with_metrics=with_metrics, sync=sync, a2a_schedule=a2a_schedule,
+        a2a_masks=a2a_masks)
+
+
+#: action x format x sync -> strategy implementation.  The sparse strategies
+#: are format-generic: any operator exposing ``padded_rows()`` (per-row
+#: value/column windows with global column ids) slots in.
+_DISTRIBUTED_STRATEGIES = {
+    ("gs", "DenseOp", "allgather"): "dense_gs",
+    ("gs", "BlockBandedOp", "allgather"): "banded_gs",
+    ("gs", "BlockBandedOp", "halo"): "halo_gs",
+    ("gs", "EllOp", "allgather"): "sparse_gs",
+    ("gs", "EllOp", "a2a"): "sparse_gs",
+    ("gs", "CsrOp", "allgather"): "sparse_gs",
+    ("gs", "CsrOp", "a2a"): "sparse_gs",
+    ("rk", "DenseOp", "psum"): "dense_rk",
+    ("rk", "BlockBandedOp", "psum"): "banded_rk",
+    ("rk", "EllOp", "psum"): "sparse_rk",
+    ("rk", "CsrOp", "psum"): "sparse_rk",
+}
 
 
 @functools.partial(
     jax.jit,
     static_argnames=("kind", "mesh", "axis", "rounds", "local_steps", "block",
-                     "beta", "unroll", "with_metrics"),
+                     "beta", "unroll", "with_metrics", "sync",
+                     "a2a_schedule"),
 )
 def _distributed_impl(kind, op, b, x0, xs, key, *, mesh, axis, rounds,
-                      local_steps, block, beta, unroll, with_metrics):
+                      local_steps, block, beta, unroll, with_metrics,
+                      sync="allgather", a2a_schedule=(), a2a_masks=None):
     num_workers = mesh.shape[axis]
     k = b.shape[1]
     zero_m = (jnp.zeros((k,), jnp.float32), jnp.zeros((k,), jnp.float32))
@@ -417,8 +549,9 @@ def _distributed_impl(kind, op, b, x0, xs, key, *, mesh, axis, rounds,
         return jax.lax.scan(body, carry, per_round,
                             unroll=rounds if unroll else 1)
 
-    shared_stream = kind.endswith("_rk")
-    tau = scheduled_tau(num_workers, local_steps, shared_stream=shared_stream)
+    tau = scheduled_tau(num_workers, local_steps,
+                        shared_stream=kind.endswith("_rk"),
+                        local_sampling=kind == "sparse_rk")
 
     if kind == "dense_gs":
         x, errs, resids = _dense_gs(
@@ -446,6 +579,19 @@ def _distributed_impl(kind, op, b, x0, xs, key, *, mesh, axis, rounds,
             round_scan=round_scan)
     elif kind == "banded_rk":
         x, errs, resids = _banded_rk(
+            op, b, x0, xs, key, mesh=mesh, axis=axis, rounds=rounds,
+            local_steps=local_steps, beta=beta, with_metrics=with_metrics,
+            num_workers=num_workers, zero_m=zero_m, local_scan=local_scan,
+            round_scan=round_scan)
+    elif kind == "sparse_gs":
+        x, errs, resids = _sparse_gs(
+            op, b, x0, xs, key, mesh=mesh, axis=axis, rounds=rounds,
+            local_steps=local_steps, beta=beta, with_metrics=with_metrics,
+            num_workers=num_workers, zero_m=zero_m, local_scan=local_scan,
+            round_scan=round_scan, sync=sync, a2a_schedule=a2a_schedule,
+            a2a_masks=a2a_masks)
+    elif kind == "sparse_rk":
+        x, errs, resids = _sparse_rk(
             op, b, x0, xs, key, mesh=mesh, axis=axis, rounds=rounds,
             local_steps=local_steps, beta=beta, with_metrics=with_metrics,
             num_workers=num_workers, zero_m=zero_m, local_scan=local_scan,
@@ -842,6 +988,162 @@ def _banded_rk(op, b, x0, xs, key, *, mesh, axis, rounds, local_steps, beta,
     return mapped(op.A_bands, b, rn, x0, xs, picks)
 
 
+def _sparse_gs(op, b, x0, xs, key, *, mesh, axis, rounds, local_steps, beta,
+               with_metrics, num_workers, zero_m, local_scan, round_scan,
+               sync, a2a_schedule, a2a_masks):
+    """Row-sparse slab GS (CsrOp / EllOp) — the format-generic strategy.
+
+    Each worker owns a slab of rows in padded-row form (fixed-width
+    value/column windows with *global* column ids — ``op.padded_rows()``),
+    keeps a full-length working replica whose own slab is fresh within a
+    round, and refreshes at round end either by all-gather or by the
+    sparsity-derived neighbor all-to-all (``sync="a2a"``): one masked
+    ppermute rotation per distinct slab offset in the neighbor graph,
+    sending a worker's slab only to the workers whose rows actually read
+    it.  Iterates are IDENTICAL to the all-gather strategy — the slabs a2a
+    leaves stale are never read.
+    """
+    n, k = b.shape
+    if n % num_workers:
+        raise ValueError(
+            f"worker count ({num_workers}) must divide the row count ({n})")
+    slab = n // num_workers
+    vals, cols = op.padded_rows()
+    round_keys = jax.random.split(key, rounds)
+    if a2a_masks is None:
+        a2a_masks = jnp.zeros((num_workers, len(a2a_schedule)), bool)
+
+    def worker(vals_sh, cols_sh, b_sh, masks_sh, keys, x0_full, xs_full):
+        # vals_sh/cols_sh: (slab, width); b_sh: (slab, k); x0/xs replicated.
+        w = jax.lax.axis_index(axis)
+        row0 = w * slab
+
+        def refresh(xw):
+            own = jax.lax.dynamic_slice_in_dim(xw, row0, slab, 0)
+            if sync == "allgather":
+                return jax.lax.all_gather(own, axis, axis=0, tiled=True)
+            for si, (shift, perm) in enumerate(a2a_schedule):
+                recv = jax.lax.ppermute(own, axis, perm)
+                src0 = ((w - shift) % num_workers) * slab
+                cur = jax.lax.dynamic_slice_in_dim(xw, src0, slab, 0)
+                upd = jnp.where(masks_sh[0, si], recv, cur)
+                xw = jax.lax.dynamic_update_slice_in_dim(xw, upd, src0, 0)
+            return xw
+
+        def round_body(xw, rkey):
+            rkey = jax.random.fold_in(rkey, w)
+            picks = jax.random.randint(rkey, (local_steps,), 0, slab)
+
+            def step(xw, li):
+                g = b_sh[li] - jnp.einsum("w,wk->k", vals_sh[li],
+                                          xw[cols_sh[li]])
+                return xw.at[row0 + li].add(beta * g), None
+
+            xw, _ = local_scan(step, xw, picks)
+            xw = refresh(xw)
+            if not with_metrics:
+                return xw, zero_m
+            # Both metric reductions only read the slabs this worker's rows
+            # reference, so they are exact under a2a as well.
+            r_local = b_sh - jnp.einsum("sw,swk->sk", vals_sh, xw[cols_sh])
+            rsq = jax.lax.psum(jnp.einsum("sk,sk->k", r_local, r_local), axis)
+            if xs_full is not None:
+                e = xw - xs_full
+                Ae_own = jnp.einsum("sw,swk->sk", vals_sh, e[cols_sh])
+                e_own = jax.lax.dynamic_slice_in_dim(e, row0, slab, 0)
+                esq = jax.lax.psum(jnp.einsum("sk,sk->k", e_own, Ae_own),
+                                   axis)
+            else:
+                esq = jnp.full((k,), jnp.nan, jnp.float32)
+            return xw, (esq, jnp.sqrt(rsq))
+
+        xw, (errs, resids) = round_scan(round_body, pvary(x0_full, (axis,)),
+                                        keys)
+        x_slab = jax.lax.dynamic_slice_in_dim(xw, row0, slab, 0)
+        return x_slab, errs, resids
+
+    mapped = shard_map(
+        worker,
+        mesh=mesh,
+        in_specs=(P(axis, None), P(axis, None), P(axis, None),
+                  P(axis, None), P(None), P(None, None), P(None, None)),
+        out_specs=(P(axis, None), P(None, None), P(None, None)),
+    )
+    return mapped(vals, cols, b, a2a_masks, round_keys, x0, xs)
+
+
+def _sparse_rk(op, b, x0, xs, key, *, mesh, axis, rounds, local_steps, beta,
+               with_metrics, num_workers, zero_m, local_scan, round_scan):
+    """Row-sparse Kaczmarz with per-worker LOCAL sampling (CsrOp / EllOp).
+
+    The wall-clock-faithful scheme: each worker samples its ``local_steps``
+    rows ∝ its *own slab's* row norms, so every step is a useful update —
+    contrast ``_dense_rk``, where each worker scans the global pick stream
+    and masks out the (P-1)/P foreign picks.  Interleaving the P local
+    streams round-robin gives a round-level shared stream of
+    ``P * local_steps`` picks partitioned by owner, so the shared-stream
+    bound applies to that stream length: ``scheduled_tau(P,
+    P * local_steps, shared_stream=True) = P * local_steps - 1`` (a
+    worker's read misses at most the other workers' (P-1)*local_steps
+    current-round updates, which this bounds).  (The stationary row law is
+    ∝ ||A_i||² *within* each slab; it matches Strohmer–Vershynin globally
+    when the slabs carry equal norm mass, the balanced case the paper's
+    partitioning assumes.)  Sync is the RK delta psum.  All-zero slabs are
+    safe: ``sample_rows`` falls back to uniform picks and the zero rows
+    make the updates no-ops.
+    """
+    m, k = b.shape
+    if m % num_workers:
+        raise ValueError(
+            f"worker count ({num_workers}) must divide the row count ({m})")
+    vals, cols = op.padded_rows()
+    rn = op.row_norms_sq()
+    round_keys = jax.random.split(key, rounds)
+
+    def worker(vals_sh, cols_sh, b_sh, rn_sh, keys, x0_full, xs_full):
+        # vals_sh/cols_sh: (slab, width); rn_sh: (slab,); x0/xs replicated.
+        w = jax.lax.axis_index(axis)
+        rn_safe = jnp.where(rn_sh > 0, rn_sh, 1.0)
+
+        def round_body(xw, rkey):
+            rkey = jax.random.fold_in(rkey, w)
+            picks = sample_rows(rkey, rn_sh, local_steps)
+            delta = pvary(jnp.zeros_like(xw), (axis,))
+
+            def step(carry, li):
+                xw, delta = carry
+                vr, cr = vals_sh[li], cols_sh[li]
+                g = (b_sh[li] - jnp.einsum("w,wk->k", vr, xw[cr])) / rn_safe[li]
+                upd = beta * vr[:, None] * g[None, :]
+                return (xw.at[cr].add(upd), delta.at[cr].add(upd)), None
+
+            (xw, delta), _ = local_scan(step, (xw, delta), picks)
+            if num_workers > 1:
+                xw = xw + (jax.lax.psum(delta, axis) - delta)
+            if not with_metrics:
+                return xw, zero_m
+            if xs_full is not None:
+                err = jnp.einsum("nk,nk->k", xw - xs_full, xw - xs_full)
+            else:
+                err = jnp.full((k,), jnp.nan, jnp.float32)
+            r_local = b_sh - jnp.einsum("sw,swk->sk", vals_sh, xw[cols_sh])
+            rsq = jax.lax.psum(jnp.einsum("sk,sk->k", r_local, r_local), axis)
+            return xw, (err, jnp.sqrt(rsq))
+
+        xw, (errs, resids) = round_scan(round_body, pvary(x0_full, (axis,)),
+                                        keys)
+        return xw, errs, resids
+
+    mapped = shard_map(
+        worker,
+        mesh=mesh,
+        in_specs=(P(axis, None), P(axis, None), P(axis, None), P(axis),
+                  P(None), P(None, None), P(None, None)),
+        out_specs=(P(None, None), P(None, None), P(None, None)),
+    )
+    return mapped(vals, cols, b, rn, round_keys, x0, xs)
+
+
 # ---------------------------------------------------------------------------
 # Unified entry point: solve(problem, format=..., schedule=...)
 # ---------------------------------------------------------------------------
@@ -859,6 +1161,7 @@ def solve(
     block: int = 128,
     bands: int = 2,
     width: int = 32,
+    rows_per_panel: int = 8,
     gs_block: int = 1,
     x0: jax.Array | None = None,
     sync: str = "auto",
@@ -873,25 +1176,17 @@ def solve(
 
     ``problem`` is an ``SPDProblem`` (GS action by default) or an
     ``LSQProblem`` (Kaczmarz action by default).  ``format`` picks the
-    operator ("dense", "banded", "ell"); ``schedule`` picks sequential /
-    bounded-delay simulator / distributed execution (see ``Schedule``).
-    ``block``/``bands`` parameterize the banded format, ``width`` the ELL
-    format, and ``gs_block`` the dense block-GS action granularity.
+    operator ("dense", "banded", "ell", "csr"); ``schedule`` picks
+    sequential / bounded-delay simulator / distributed execution (see
+    ``Schedule``).  ``block``/``bands`` parameterize the banded format,
+    ``width`` the ELL format, ``rows_per_panel`` the CSR panel layout, and
+    ``gs_block`` the dense/CSR block-GS action granularity.
     """
     if action is None:
         action = "rk" if hasattr(problem, "sigma_min") else "gs"
-    if schedule.distributed:
-        if schedule.local_steps <= 0:
-            raise ValueError("a distributed Schedule needs local_steps > 0")
-        if schedule.num_iters or schedule.tau:
-            raise ValueError(
-                "Schedule modes are exclusive: rounds/local_steps "
-                "(distributed) cannot be combined with num_iters/tau "
-                f"(got {schedule})")
-    elif schedule.num_iters <= 0:
-        raise ValueError(f"a sequential Schedule needs num_iters > 0 "
-                         f"(got {schedule})")
-    op = as_operator(problem.A, format, block=block, bands=bands, width=width)
+    schedule.validate()
+    op = as_operator(problem.A, format, block=block, bands=bands, width=width,
+                     rows_per_panel=rows_per_panel)
     if x0 is None:
         x0 = jnp.zeros_like(problem.x_star)
 
@@ -920,6 +1215,7 @@ def solve(
 
 __all__ = [
     "BlockBandedOp",
+    "CsrOp",
     "DenseOp",
     "EllOp",
     "ParallelSolveResult",

@@ -30,11 +30,13 @@ from __future__ import annotations
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 from jax.sharding import PartitionSpec as P
 from jax.tree_util import register_pytree_node_class
 
 __all__ = [
     "BlockBandedOp",
+    "CsrOp",
     "DenseOp",
     "EllOp",
     "as_operator",
@@ -42,7 +44,34 @@ __all__ = [
     "banded_panel_residual_window",
     "banded_rows_matvec",
     "banded_window_matvec",
+    "slab_neighbor_matrix",
 ]
+
+
+def slab_neighbor_matrix(rows, cols, real, m: int, n: int,
+                         num_workers: int) -> np.ndarray:
+    """Host-side neighbor graph of a row-slab partition.
+
+    ``need[w, v]`` is True when worker ``w``'s rows (slab ``[w*m/P,
+    (w+1)*m/P)``) read at least one coefficient owned by worker ``v``
+    (column slab ``[v*n/P, (v+1)*n/P)``).  The diagonal is always True.
+    This is what the engine's ``sync="a2a"`` strategy builds its masked
+    ppermute schedule from — and what lets it fall back to all-gather when
+    the graph is dense.
+    """
+    if m % num_workers or n % num_workers:
+        raise ValueError(
+            f"worker count ({num_workers}) must divide rows ({m}) and "
+            f"columns ({n}) for a slab partition")
+    rows = np.asarray(rows).reshape(-1)
+    cols = np.asarray(cols).reshape(-1)
+    real = np.asarray(real).reshape(-1)
+    need = np.zeros((num_workers, num_workers), bool)
+    w = rows[real] // (m // num_workers)
+    v = cols[real] // (n // num_workers)
+    need[w, v] = True
+    np.fill_diagonal(need, True)
+    return need
 
 
 # ---------------------------------------------------------------------------
@@ -220,6 +249,7 @@ class EllOp:
     def __init__(self, vals: jax.Array, cols: jax.Array):
         self.vals = vals
         self.cols = cols
+        self._neighbors_cache: dict[int, "np.ndarray"] = {}
 
     def tree_flatten(self):
         return (self.vals, self.cols), None
@@ -272,6 +302,21 @@ class EllOp:
         n, w = self.vals.shape
         return n * w
 
+    def padded_rows(self) -> tuple[jax.Array, jax.Array]:
+        """ELL already is the per-row padded-window form (CsrOp protocol)."""
+        return self.vals, self.cols
+
+    def slab_neighbors(self, num_workers: int) -> np.ndarray:
+        """Row-slab neighbor graph (host-side; see slab_neighbor_matrix).
+        Memoized per worker count, like CsrOp."""
+        if num_workers not in self._neighbors_cache:
+            n, w = self.vals.shape
+            rows = np.broadcast_to(np.arange(n)[:, None], (n, w))
+            self._neighbors_cache[num_workers] = slab_neighbor_matrix(
+                rows, self.cols, np.asarray(self.vals) != 0, n, n,
+                num_workers)
+        return self._neighbors_cache[num_workers]
+
     def shard_spec(self, axis: str) -> P:
         return P(axis, None)
 
@@ -281,8 +326,199 @@ class EllOp:
         return out.at[jnp.arange(n)[:, None], self.cols].add(self.vals)
 
 
+@register_pytree_node_class
+class CsrOp:
+    """General compressed-sparse-row operator, panel-aligned for the TPU.
+
+    The format of the paper's reference scenario: unstructured sparsity,
+    arbitrary (possibly rectangular) shape, exact nonzero storage.  Layout
+    (kernels/spmv_csr.py): nonzeros stay in row-major CSR order, but each
+    *panel* of ``rows_per_panel`` consecutive rows is padded to a common
+    nnz budget ``panel_width`` (a lane multiple), so the flat arrays
+    reshape to ``(num_panels, panel_width)`` and stream contiguously.
+
+    * ``data``/``indices``/``row_id`` — value, column, and row of every
+      slot (padding slots carry value 0, so they never contribute);
+    * ``row_start``/``row_nnz`` — the CSR row pointers against the padded
+      layout: row ``r`` occupies slots ``[row_start[r], row_start[r] +
+      row_nnz[r])``, always contiguous and never straddling a panel.
+      The flat arrays keep ``row_cap`` slack slots past the last panel so a
+      fixed-size ``row_cap`` window read never runs off the end.
+
+    In place of the scalar ``halo_width`` (meaningless for unstructured
+    sparsity — a single far-off coupling would inflate it to n), the format
+    answers *per-row reach* queries: ``row_reach()`` per row, and
+    ``slab_neighbors(P)`` — the row-slab neighbor graph the distributed
+    engine's ``sync="a2a"`` strategy exchanges along.
+    """
+
+    def __init__(self, data, indices, row_id, row_start, row_nnz, *,
+                 shape, nnz, row_cap, rows_per_panel, panel_width):
+        self.data = data
+        self.indices = indices
+        self.row_id = row_id
+        self.row_start = row_start
+        self.row_nnz = row_nnz
+        self._shape = tuple(shape)
+        self.nnz = nnz
+        self.row_cap = row_cap
+        self.rows_per_panel = rows_per_panel
+        self.panel_width = panel_width
+        self._neighbors_cache: dict[int, np.ndarray] = {}
+
+    def tree_flatten(self):
+        leaves = (self.data, self.indices, self.row_id, self.row_start,
+                  self.row_nnz)
+        aux = (self._shape, self.nnz, self.row_cap, self.rows_per_panel,
+               self.panel_width)
+        return leaves, aux
+
+    @classmethod
+    def tree_unflatten(cls, aux, children):
+        shape, nnz, row_cap, rows_per_panel, panel_width = aux
+        return cls(*children, shape=shape, nnz=nnz, row_cap=row_cap,
+                   rows_per_panel=rows_per_panel, panel_width=panel_width)
+
+    @classmethod
+    def from_dense(cls, A: jax.Array, *, rows_per_panel: int = 8,
+                   lane: int = 128) -> "CsrOp":
+        """Exact CSR capture of every nonzero of dense ``A`` (host-side)."""
+        An = np.asarray(A)
+        m, n = An.shape
+        nz = An != 0.0
+        counts = nz.sum(axis=1).astype(np.int64)
+        nnz = int(counts.sum())
+        row_cap = max(int(counts.max()) if m else 1, 1)
+        R = rows_per_panel
+        num_panels = -(-m // R)
+        padded_counts = np.zeros((num_panels * R,), np.int64)
+        padded_counts[:m] = counts
+        panel_nnz = padded_counts.reshape(num_panels, R).sum(axis=1)
+        W = int(-(-max(int(panel_nnz.max()), 1) // lane) * lane)
+        total = num_panels * W + row_cap        # row-window slack at the end
+        data = np.zeros((total,), An.dtype)
+        cols = np.zeros((total,), np.int32)
+        rows = np.zeros((total,), np.int32)
+        row_start = np.zeros((max(m, 1),), np.int32)
+        for p in range(num_panels):
+            cursor = p * W
+            for r in range(p * R, min((p + 1) * R, m)):
+                cj = np.nonzero(nz[r])[0]
+                c = cj.size
+                row_start[r] = cursor
+                data[cursor:cursor + c] = An[r, cj]
+                cols[cursor:cursor + c] = cj
+                rows[cursor:cursor + c] = r
+                cursor += c
+        return cls(jnp.asarray(data), jnp.asarray(cols),
+                   jnp.asarray(rows), jnp.asarray(row_start),
+                   jnp.asarray(counts.astype(np.int32)),
+                   shape=(m, n), nnz=nnz, row_cap=row_cap,
+                   rows_per_panel=R, panel_width=W)
+
+    @property
+    def shape(self) -> tuple[int, int]:
+        return self._shape
+
+    @property
+    def halo_width(self):
+        """Unstructured reach: no *scalar* halo (see ``row_reach``)."""
+        return None
+
+    def matvec(self, x: jax.Array, *, interpret=None) -> jax.Array:
+        from repro.kernels import ops
+        return ops.spmv_csr(self.data, self.indices, self.row_id, x,
+                            m=self._shape[0],
+                            rows_per_panel=self.rows_per_panel,
+                            panel_width=self.panel_width, interpret=interpret)
+
+    def matvec_ref(self, x: jax.Array) -> jax.Array:
+        from repro.kernels import ref
+        return ref.spmv_csr_ref(self.data, self.indices, self.row_id, x,
+                                m=self._shape[0])
+
+    def _row_window(self, r):
+        """Row ``r``'s values/columns as a fixed Θ(row_cap) masked window."""
+        vw = jax.lax.dynamic_slice_in_dim(self.data, self.row_start[r],
+                                          self.row_cap, 0)
+        cw = jax.lax.dynamic_slice_in_dim(self.indices, self.row_start[r],
+                                          self.row_cap, 0)
+        mask = jnp.arange(self.row_cap) < self.row_nnz[r]
+        return jnp.where(mask, vw, 0.0), jnp.where(mask, cw, 0)
+
+    def row_dot(self, r, x: jax.Array) -> jax.Array:
+        """``A[r] @ x`` in Θ(row_cap): gather the row's columns only."""
+        vw, cw = self._row_window(r)
+        return jnp.einsum("w,wk->k", vw, x[cw])
+
+    def row_panel(self, bi, block: int) -> jax.Array:
+        """Dense (block, n) rows of aligned block ``bi`` (block-GS reads)."""
+        rows = bi * block + jnp.arange(block)
+        vw, cw = jax.vmap(self._row_window)(rows)
+        out = jnp.zeros((block, self._shape[1]), self.data.dtype)
+        return out.at[jnp.arange(block)[:, None], cw].add(vw)
+
+    def residual_panel(self, b, x, bi, block: int) -> jax.Array:
+        """``(b - A x)`` on aligned row block ``bi`` — Θ(block·row_cap)."""
+        rows = bi * block + jnp.arange(block)
+        dots = jax.vmap(lambda r: self.row_dot(r, x))(rows)
+        return b[rows] - dots
+
+    def row_norms_sq(self) -> jax.Array:
+        return jax.ops.segment_sum(self.data * self.data, self.row_id,
+                                   num_segments=self._shape[0])
+
+    def rk_update(self, x, r, g, beta):
+        """Kaczmarz row action as a Θ(row_cap) scatter-add (masked padding
+        slots carry zero values, so duplicate indices contribute nothing)."""
+        vw, cw = self._row_window(r)
+        return x.at[cw].add(beta * vw[:, None] * g[None, :])
+
+    def padded_rows(self) -> tuple[jax.Array, jax.Array]:
+        """(m, row_cap) per-row value/column windows with global column ids
+        — the slab-shardable form the distributed engine partitions."""
+        idx = self.row_start[:, None] + jnp.arange(self.row_cap)[None, :]
+        idx = jnp.minimum(idx, self.data.shape[0] - 1)
+        mask = jnp.arange(self.row_cap)[None, :] < self.row_nnz[:, None]
+        vals = jnp.where(mask, self.data[idx], 0.0)
+        cols = jnp.where(mask, self.indices[idx], 0)
+        return vals, cols
+
+    def row_reach(self) -> jax.Array:
+        """Per-row reach ``max_j |col_ij - i|`` — the per-row refinement of
+        the scalar ``halo_width`` (square systems; 0 for empty rows)."""
+        d = jnp.abs(self.indices - self.row_id)
+        d = jnp.where(self.data != 0, d, 0)
+        return jnp.maximum(
+            jax.ops.segment_max(d, self.row_id,
+                                num_segments=self._shape[0]), 0)
+
+    def slab_neighbors(self, num_workers: int) -> np.ndarray:
+        """Row-slab neighbor graph (host-side; see slab_neighbor_matrix).
+        Memoized per worker count — the graph is a property of the stored
+        sparsity pattern, and solve_distributed consults it every call."""
+        if num_workers not in self._neighbors_cache:
+            m, n = self._shape
+            self._neighbors_cache[num_workers] = slab_neighbor_matrix(
+                self.row_id, self.indices, np.asarray(self.data) != 0,
+                m, n, num_workers)
+        return self._neighbors_cache[num_workers]
+
+    def nnz_cost(self) -> int:
+        return self.nnz
+
+    def shard_spec(self, axis: str) -> P:
+        """Spec of the ``padded_rows()`` slab form the engine shards (the
+        flat panel layout itself does not split evenly on a row axis)."""
+        return P(axis, None)
+
+    def to_dense(self) -> jax.Array:
+        out = jnp.zeros(self._shape, self.data.dtype)
+        return out.at[self.row_id, self.indices].add(self.data)
+
+
 def as_operator(A: jax.Array, format: str = "dense", *, block: int = 128,
-                bands: int = 2, width: int = 32):
+                bands: int = 2, width: int = 32, rows_per_panel: int = 8):
     """Build an operator of the requested ``format`` from a dense matrix."""
     if format == "dense":
         return DenseOp(A)
@@ -290,6 +526,8 @@ def as_operator(A: jax.Array, format: str = "dense", *, block: int = 128,
         return BlockBandedOp.from_dense(A, block=block, bands=bands)
     if format == "ell":
         return EllOp.from_dense(A, width=width)
+    if format == "csr":
+        return CsrOp.from_dense(A, rows_per_panel=rows_per_panel)
     raise ValueError(f"unknown operator format: {format!r}")
 
 

@@ -13,6 +13,7 @@ from repro.kernels import ref
 from repro.kernels.bbmv import bbmv as _bbmv, dense_to_bands
 from repro.kernels.block_gs import block_gs_sweep as _block_gs_sweep
 from repro.kernels.decode_attention import decode_attention as _decode_attention
+from repro.kernels.spmv_csr import spmv_csr as _spmv_csr
 from repro.kernels.spmv_ell import spmv_ell as _spmv_ell
 
 
@@ -40,6 +41,16 @@ def spmv_ell(vals, cols, x, *, tile=128, interpret=None):
     return _spmv_ell(vals, cols, x, tile=tile, interpret=_interp(interpret))
 
 
+def spmv_csr(data, indices, row_id, x, *, m, rows_per_panel, panel_width,
+             interpret=None):
+    # No tiling-fallback branch: CsrOp.from_dense always allocates
+    # num_panels * panel_width (+ row-window slack) slots, and the kernel
+    # asserts that invariant itself.
+    return _spmv_csr(data, indices, row_id, x, m=m,
+                     rows_per_panel=rows_per_panel, panel_width=panel_width,
+                     interpret=_interp(interpret))
+
+
 def decode_attention(q, k_cache, v_cache, lengths, *, chunk=512, interpret=None):
     if k_cache.shape[1] % chunk != 0:
         return ref.decode_attention_ref(q, k_cache, v_cache, lengths)
@@ -53,5 +64,6 @@ __all__ = [
     "block_gs_sweep",
     "decode_attention",
     "dense_to_bands",
+    "spmv_csr",
     "spmv_ell",
 ]

@@ -26,6 +26,16 @@ def spmv_ell_ref(vals, cols, x):
     return jnp.einsum("nw,nwk->nk", vals, x[cols])
 
 
+def spmv_csr_ref(data, indices, row_id, x, *, m):
+    """y = A @ x from flat CSR triples via a true segment sum.
+
+    Padding slots carry data == 0 (and point at column 0 / row 0), so they
+    contribute nothing regardless of where they scatter.
+    """
+    contrib = data[:, None] * x[indices]
+    return jax.ops.segment_sum(contrib, row_id, num_segments=m)
+
+
 def decode_attention_ref(q, k_cache, v_cache, lengths):
     """Single-token GQA attention, full-precision softmax."""
     B, H, D = q.shape

@@ -1,0 +1,88 @@
+"""Pallas kernel: CSR SpMV via per-panel segment sums.
+
+General compressed-sparse-row is the format the paper's reference scenario
+(unstructured sparsity, C1..C2 nonzeros per row) actually ships in.  The
+TPU-shaped layout here is *panel-aligned* CSR (see core.operators.CsrOp):
+nonzeros stay in row-major CSR order but each panel of ``rows_per_panel``
+consecutive rows is padded to a fixed nnz budget ``panel_width``, so the
+flat ``data``/``indices``/``row_id`` arrays reshape to
+``(num_panels, panel_width)`` and stream HBM->VMEM contiguously.
+
+Within a kernel invocation the segment sum over a panel's rows is expressed
+as a one-hot matmul — ``onehot[(local_row, slot)] @ (data * x[cols])`` —
+which runs on the MXU instead of a scatter unit the TPU does not have.
+Padding slots carry ``data == 0`` so they contribute nothing wherever their
+``row_id`` points.  Gathers of ``x`` rows are the unavoidable CSR cost (the
+same cost spmv_ell pays); the contrast with the fully gather-free
+block-banded layout is quantified in benchmarks/bench_kernels.py.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _kernel(vals_ref, cols_ref, rows_ref, x_ref, o_ref, *,
+            rows_per_panel: int, panel_width: int):
+    i = pl.program_id(0)
+    x = x_ref[...]                                   # (n, k) resident in VMEM
+    vals = vals_ref[0]                               # (panel_width,)
+    cols = cols_ref[0]
+    rows = rows_ref[0]
+    xr = jnp.take(x, cols, axis=0)                   # (panel_width, k) gather
+    contrib = vals[:, None].astype(jnp.float32) * xr.astype(jnp.float32)
+    # Segment-sum over the panel's rows as a one-hot MXU matmul.  Padding
+    # slots carry vals == 0, so wherever their row_id lands they add 0.0.
+    lrow = rows - i * rows_per_panel                 # local row of each slot
+    sel = jax.lax.broadcasted_iota(jnp.int32, (rows_per_panel, panel_width), 0)
+    onehot = (sel == lrow[None, :]).astype(jnp.float32)
+    o_ref[...] = jnp.dot(onehot, contrib,
+                         preferred_element_type=jnp.float32).astype(o_ref.dtype)
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("m", "rows_per_panel", "panel_width", "interpret"))
+def spmv_csr(
+    data: jax.Array,
+    indices: jax.Array,
+    row_id: jax.Array,
+    x: jax.Array,
+    *,
+    m: int,
+    rows_per_panel: int,
+    panel_width: int,
+    interpret: bool = False,
+) -> jax.Array:
+    """y = A @ x with A in panel-aligned CSR form (core.operators.CsrOp).
+
+    data/indices/row_id: flat (>= num_panels * panel_width,) arrays — the
+    trailing row-window slack beyond the last panel is ignored; x: (n, k).
+    """
+    n, k = x.shape
+    num_panels = -(-m // rows_per_panel)
+    body = num_panels * panel_width
+    assert data.shape[0] >= body, (data.shape, num_panels, panel_width)
+    vals2 = data[:body].reshape(num_panels, panel_width)
+    cols2 = indices[:body].reshape(num_panels, panel_width)
+    rows2 = row_id[:body].reshape(num_panels, panel_width)
+
+    y = pl.pallas_call(
+        functools.partial(_kernel, rows_per_panel=rows_per_panel,
+                          panel_width=panel_width),
+        grid=(num_panels,),
+        in_specs=[
+            pl.BlockSpec((1, panel_width), lambda i: (i, 0)),
+            pl.BlockSpec((1, panel_width), lambda i: (i, 0)),
+            pl.BlockSpec((1, panel_width), lambda i: (i, 0)),
+            pl.BlockSpec((n, k), lambda i: (0, 0)),
+        ],
+        out_specs=pl.BlockSpec((rows_per_panel, k), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((num_panels * rows_per_panel, k),
+                                       x.dtype),
+        interpret=interpret,
+    )(vals2, cols2, rows2, x)
+    return y[:m]

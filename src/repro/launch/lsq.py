@@ -23,8 +23,8 @@ import time
 import jax
 import jax.numpy as jnp
 
-from repro.core import (Schedule, cg_solve, random_lsq, solve, theory,
-                        to_unit_diagonal)
+from repro.core import (Schedule, cg_solve, random_lsq, random_sparse_lsq,
+                        solve, theory, to_unit_diagonal)
 from repro.core.engine import scheduled_tau
 from repro.launch.mesh import make_host_mesh
 
@@ -37,6 +37,13 @@ def main(argv=None):
     ap.add_argument("--noise", type=float, default=0.01)
     ap.add_argument("--col-scale", type=float, default=0.5,
                     help="exponential column-scale skew (0 = isotropic)")
+    ap.add_argument("--format", choices=("dense", "csr"), default="dense",
+                    help="operator format; csr additionally switches the "
+                         "design to the sparse reference scenario and the "
+                         "distributed pass to per-worker local sampling")
+    ap.add_argument("--row-nnz", type=int, default=16,
+                    help="nonzeros per row of the sparse design "
+                         "(--format csr)")
     ap.add_argument("--sweeps", type=int, default=6)
     ap.add_argument("--tau", type=int, default=32,
                     help="delay bound for the async simulator")
@@ -47,8 +54,13 @@ def main(argv=None):
     ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args(argv)
 
-    prob = random_lsq(args.m, args.n, n_rhs=args.rhs, noise=args.noise,
-                      col_scale=args.col_scale, seed=args.seed)
+    if args.format == "csr":
+        prob = random_sparse_lsq(args.m, args.n, row_nnz=args.row_nnz,
+                                 n_rhs=args.rhs, noise=args.noise,
+                                 seed=args.seed)
+    else:
+        prob = random_lsq(args.m, args.n, n_rhs=args.rhs, noise=args.noise,
+                          col_scale=args.col_scale, seed=args.seed)
     m, n = prob.shape
     bn = float(jnp.linalg.norm(prob.b))
     # residual at the LSQ optimum: the floor every solver is chasing
@@ -58,7 +70,7 @@ def main(argv=None):
 
     iters = args.sweeps * m
     t0 = time.time()
-    res = solve(prob, key=jax.random.key(1),
+    res = solve(prob, key=jax.random.key(1), format=args.format,
                 schedule=Schedule(num_iters=iters, record_every=m))
     jax.block_until_ready(res.x)
     print(f"  seq RK     : {args.sweeps} sweeps, relresid "
@@ -69,7 +81,7 @@ def main(argv=None):
     beta = theory.beta_opt_rk(rho_rk, args.tau)
     t0 = time.time()
     ares = solve(prob, key=jax.random.key(1), delay_key=jax.random.key(2),
-                 beta=beta,
+                 beta=beta, format=args.format,
                  schedule=Schedule(num_iters=iters, tau=args.tau,
                                    record_every=m))
     jax.block_until_ready(ares.x)
@@ -80,15 +92,23 @@ def main(argv=None):
     workers = args.workers or len(jax.devices())
     mesh = make_host_mesh(workers)
     local_steps = args.local_steps or max(1, m // workers)
-    rounds = max(1, iters // local_steps)
-    ptau = scheduled_tau(workers, local_steps, shared_stream=True)
+    # csr runs per-worker local sampling: every worker's step is a useful
+    # update, so a round applies workers*local_steps row actions (the
+    # equal-work accounting) and the staleness bound follows suit.
+    local_sampling = args.format == "csr"
+    upd_per_round = local_steps * (workers if local_sampling else 1)
+    rounds = max(1, iters // upd_per_round)
+    ptau = scheduled_tau(workers, local_steps, shared_stream=True,
+                         local_sampling=local_sampling)
     pbeta = theory.beta_opt_rk(rho_rk, ptau)
     t0 = time.time()
     pres = solve(prob, key=jax.random.key(1), mesh=mesh, beta=pbeta,
+                 format=args.format,
                  schedule=Schedule(rounds=rounds, local_steps=local_steps))
     jax.block_until_ready(pres.x)
+    sampling = "local" if args.format == "csr" else "global-stream"
     print(f"  par RK     : P={workers} tau={ptau} beta~={pbeta:.3f} "
-          f"{rounds} rounds, relresid "
+          f"sampling={sampling} {rounds} rounds, relresid "
           f"{float(jnp.linalg.norm(pres.resid[-1]))/bn:.3e} "
           f"({time.time()-t0:.1f}s)")
 

@@ -29,9 +29,16 @@ def main(argv=None):
     ap.add_argument("--row-nnz", type=int, default=16)
     ap.add_argument("--offdiag", type=float, default=0.9)
     ap.add_argument("--sweeps", type=int, default=10)
-    ap.add_argument("--format", choices=("dense", "ell"), default="dense",
-                    help="operator format for the sequential solve")
+    ap.add_argument("--format", choices=("dense", "ell", "csr"),
+                    default="dense",
+                    help="operator format (sequential AND distributed)")
     ap.add_argument("--ell-width", type=int, default=64)
+    ap.add_argument("--sync", choices=("auto", "allgather", "a2a"),
+                    default="auto",
+                    help="distributed sync strategy (a2a = sparsity-derived "
+                         "neighbor all-to-all, CSR/ELL formats; the halo "
+                         "strategy belongs to the banded format, which this "
+                         "CLI does not build)")
     ap.add_argument("--workers", type=int, default=0,
                     help="0 = all local devices")
     ap.add_argument("--local-steps", type=int, default=0,
@@ -39,6 +46,8 @@ def main(argv=None):
                          "(0 -> one sweep split evenly)")
     ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args(argv)
+    if args.sync == "a2a" and args.format == "dense":
+        ap.error("--sync a2a needs a sparse format (--format csr or ell)")
 
     prob = random_sparse_spd(args.n, row_nnz=args.row_nnz,
                              offdiag=args.offdiag, n_rhs=args.rhs,
@@ -75,9 +84,11 @@ def main(argv=None):
     rounds = max(1, iters // (workers * local_steps))
     t0 = time.time()
     pres = solve(prob, key=jax.random.key(2), mesh=mesh, beta=beta,
+                 format=args.format, width=args.ell_width, sync=args.sync,
                  schedule=Schedule(rounds=rounds, local_steps=local_steps))
     jax.block_until_ready(pres.x)
     print(f"  async RGS  : P={workers} tau={tau} beta~={beta:.3f} "
+          f"format={args.format} sync={args.sync} "
           f"{rounds} rounds, resid {float(pres.resid[-1,0]):.3e} "
           f"({time.time()-t0:.1f}s)")
 

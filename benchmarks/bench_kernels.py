@@ -53,6 +53,30 @@ def run(n: int = 1024, block: int = 128, bands: int = 1, k: int = 64):
     csr_slots = cop.panel_width * (-(-n // cop.rows_per_panel))
     csr_bytes = csr_slots * (4 + 4 + 4) + csr_slots * k * 4
     csr_flops = 2 * cop.nnz_cost() * k
+
+    # Empty-panel-skip variant (scalar-prefetched per-panel nnz counts):
+    # on a "patchy" matrix — half the row panels zeroed, the shape a
+    # norm-balanced partition of a banded-structure matrix produces — the
+    # predicated grid skips the gather + one-hot matmul of every empty
+    # panel, so its modeled A-stream bytes shrink by the empty fraction.
+    A_patchy = np.array(prob.A)
+    R = cop.rows_per_panel
+    for p in range(0, n // R, 2):
+        A_patchy[p * R:(p + 1) * R] = 0.0
+    pop = CsrOp.from_dense(jnp.asarray(A_patchy))
+    pn = np.asarray(pop.panel_nnz())
+    empty_frac = float((pn == 0).mean())
+    x_p = prob.x_star
+    check_skip = float(jnp.abs(pop.matvec(x_p, skip_empty=True)
+                               - jnp.asarray(A_patchy) @ x_p).max())
+    patchy_slots = pop.panel_width * pn.size
+    patchy_bytes = patchy_slots * (4 + 4 + 4) + patchy_slots * k * 4
+    patchy_flops = 2 * pop.nnz_cost() * k
+    skip_slots = pop.panel_width * int((pn > 0).sum())
+    skip_bytes = (skip_slots * (4 + 4 + 4) + skip_slots * k * 4
+                  + pn.size * 4)
+    skip_flops = 2 * pop.nnz_cost() * k
+
     layouts = {}
     for name, ai, fn in (
         ("block_banded", bbmv_flops / bbmv_bytes,
@@ -61,11 +85,19 @@ def run(n: int = 1024, block: int = 128, bands: int = 1, k: int = 64):
          lambda: eop.matvec(prob.x_star)),
         ("csr_segsum", csr_flops / csr_bytes,
          lambda: cop.matvec(prob.x_star)),
+        ("csr_segsum_patchy", patchy_flops / patchy_bytes,
+         lambda: pop.matvec(x_p)),
+        ("csr_skip_empty", skip_flops / skip_bytes,
+         lambda: pop.matvec(x_p, skip_empty=True)),
     ):
         wall = timed(fn)
         emit("bench_kernels", layout=name, ai_flops_per_byte=f"{ai:.1f}",
              wall_us=f"{wall*1e6:.0f}")
         layouts[name] = {"ai_flops_per_byte": ai, "wall_us": wall * 1e6}
+    layouts["csr_skip_empty"].update(empty_panel_frac=empty_frac,
+                                     check=check_skip)
+    emit("bench_kernels", empty_panel_frac=f"{empty_frac:.2f}",
+         check_skip=f"{check_skip:.2e}")
 
     # fused sweep kernel vs oracle
     nb = bop.nb

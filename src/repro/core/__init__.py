@@ -19,7 +19,9 @@ from repro.core.spd import (
 from repro.core.operators import (BlockBandedOp, CsrOp, DenseOp, EllOp,
                                   as_operator)
 from repro.core import engine
+from repro.core import partition
 from repro.core.engine import Schedule, scheduled_tau, solve
+from repro.core.partition import RowPermutation, balanced_row_permutation
 from repro.core.rgs import SolveResult, block_gs_solve, rgs_general, rgs_solve
 from repro.core.async_rgs import async_rgs_solve, iteration_identity_gap
 from repro.core.parallel_rgs import (
@@ -48,11 +50,13 @@ __all__ = [
     "EllOp",
     "LSQProblem",
     "ParallelSolveResult",
+    "RowPermutation",
     "SPDProblem",
     "Schedule",
     "SolveResult",
     "a_norm_sq",
     "as_operator",
+    "balanced_row_permutation",
     "async_rgs_solve",
     "async_rk_solve",
     "block_banded_spd",
@@ -70,6 +74,7 @@ __all__ = [
     "parallel_rgs_halo",
     "parallel_rgs_solve",
     "parallel_rk_solve",
+    "partition",
     "random_lsq",
     "random_sparse_lsq",
     "random_sparse_spd",

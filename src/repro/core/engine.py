@@ -29,6 +29,7 @@ pinned by tests/test_engine_equivalence.py against frozen legacy copies.
 from __future__ import annotations
 
 import functools
+import warnings
 from typing import NamedTuple
 
 import jax
@@ -106,12 +107,19 @@ class Schedule(NamedTuple):
     * sequential:  ``num_iters`` > 0, ``tau`` == 0, ``rounds`` == 0
     * async sim:   ``num_iters`` > 0, ``tau``  > 0  (bounded-delay model)
     * distributed: ``rounds`` > 0 and ``local_steps`` > 0 (needs a mesh)
+
+    ``partition`` picks the distributed slab assignment: ``"contiguous"``
+    (rows in index order — the default, and the only choice for the
+    dense/banded layouts) or ``"balanced"`` (norm/nnz-balanced
+    non-contiguous assignment via a row permutation, ``core.partition``;
+    CsrOp/EllOp only).
     """
     num_iters: int = 0
     rounds: int = 0
     local_steps: int = 0
     tau: int = 0
     record_every: int = 0
+    partition: str = "contiguous"
 
     @property
     def distributed(self) -> bool:
@@ -133,6 +141,10 @@ class Schedule(NamedTuple):
         if self.distributed and self.local_steps <= 0:
             raise ValueError(
                 f"a distributed Schedule needs local_steps > 0 (got {self})")
+        if self.partition not in ("contiguous", "balanced"):
+            raise ValueError(
+                f"unknown partition: {self.partition!r} (expected "
+                "'contiguous' or 'balanced')")
         if not self.distributed:
             if self.num_iters <= 0:
                 raise ValueError(
@@ -142,6 +154,10 @@ class Schedule(NamedTuple):
                 raise ValueError(
                     "local_steps without rounds is ambiguous — set rounds > 0 "
                     f"for distributed execution (got {self})")
+            if self.partition != "contiguous":
+                raise ValueError(
+                    "partition='balanced' is a distributed-schedule option "
+                    f"(slab assignment needs rounds/local_steps) — got {self}")
         return self
 
     def effective_tau(self, num_workers: int, *, shared_stream: bool = False,
@@ -282,11 +298,6 @@ def solve_sequential(
 # Bounded-delay asynchronous simulator (the paper's Secs. 4/6 read models)
 # ---------------------------------------------------------------------------
 
-@functools.partial(
-    jax.jit,
-    static_argnames=("action", "num_iters", "tau", "record_every",
-                     "read_model", "delay_mode"),
-)
 def solve_async_sim(
     op,
     b: jax.Array,
@@ -316,17 +327,58 @@ def solve_async_sim(
     coordinate action and the row inner product ``<A_r, A_{r_t}>`` for the
     row action.  Delay schedules are drawn from ``delay_key``, independent
     of the direction key (Assumption A-4).
+
+    Sparse operators are **densified exactly** (and a ``UserWarning`` is
+    emitted): the ring-buffer correction needs arbitrary ``A[r, r_t]``
+    couplings and row inner products, so the simulator — a research tool
+    for delay models, not a performance path — runs Θ(n) reads per step
+    regardless of the format's ``nnz_cost()``.  Use ``solve_distributed``
+    for the sparse-aware execution of the same schedules.
     """
     if not isinstance(op, DenseOp):
-        # The ring-buffer correction needs arbitrary A[r, r_t] couplings and
-        # row inner products; for sparse formats the simulator (a research
-        # tool, not a perf path) runs on the exact densified operator —
-        # to_dense() reconstructs the stored values bit-for-bit.
         if not hasattr(op, "to_dense"):
             raise NotImplementedError(
                 f"the async simulator needs a densifiable operator "
                 f"(got {type(op).__name__})")
+        # to_dense() reconstructs the stored values bit-for-bit, so the
+        # simulated iterates are exact — only the cost model changes.
+        warnings.warn(
+            f"solve_async_sim densifies {type(op).__name__} exactly: the "
+            "bounded-delay simulator ignores the format's nnz_cost() and "
+            "pays dense Θ(n) row reads per step (it is a research tool for "
+            "delay models, not a sparse performance path — use "
+            "solve_distributed for sparse-aware execution)",
+            UserWarning, stacklevel=2)
         op = DenseOp(op.to_dense())
+    return _async_sim_impl(
+        op, b, x0, x_star, action=action, key=key, delay_key=delay_key,
+        num_iters=num_iters, tau=tau, beta=beta, read_model=read_model,
+        delay_mode=delay_mode, miss_prob=miss_prob,
+        record_every=record_every)
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("action", "num_iters", "tau", "record_every",
+                     "read_model", "delay_mode"),
+)
+def _async_sim_impl(
+    op,
+    b: jax.Array,
+    x0: jax.Array,
+    x_star: jax.Array,
+    *,
+    action: str,
+    key: jax.Array,
+    delay_key: jax.Array,
+    num_iters: int,
+    tau: int,
+    beta: float = 1.0,
+    read_model: str = "consistent",
+    delay_mode: str = "fixed",
+    miss_prob: float = 0.5,
+    record_every: int = 0,
+) -> SolveResult:
     A = op.A
     k = b.shape[1]
     rec = record_every or num_iters
@@ -424,6 +476,7 @@ def solve_distributed(
     block: int = 1,
     beta: float = 1.0,
     sync: str = "auto",
+    partition: str = "contiguous",
     unroll: bool = False,
     with_metrics: bool = True,
 ) -> ParallelSolveResult:
@@ -433,19 +486,40 @@ def solve_distributed(
     ``sync="auto"``: a finite halo (block-banded) means neighbor halo
     exchange suffices for the GS action; unstructured-but-sparse formats
     that answer slab-neighbor queries (CSR, ELL) get the neighbor
-    all-to-all; unbounded reach (dense) needs an all-gather of slab deltas;
-    the RK action accumulates updates across the full coefficient vector
-    and syncs by delta psum.
+    all-to-all for both actions; unbounded reach (dense) needs an
+    all-gather of slab deltas for GS and a delta psum for RK.
 
-    ``sync="a2a"`` exchanges each worker's slab only along the row-slab
-    neighbor graph derived from the sparsity pattern (one masked ppermute
-    rotation per distinct slab offset); when the graph is dense — every
-    worker reads every slab — it falls back to the all-gather, which moves
-    the same bytes with one collective.
+    ``sync="a2a"`` with the GS action exchanges each worker's slab only
+    along the row-slab neighbor graph derived from the sparsity pattern
+    (one masked ppermute rotation per distinct slab offset); when the graph
+    is dense — every worker reads every slab — it falls back to the
+    all-gather, which moves the same bytes with one collective.  With the
+    RK action it replaces the dense delta psum with a two-phase exchange
+    over the *column-slab* neighbor graph (reduce each column slab's deltas
+    to its owner, then broadcast the sum back to the slab's readers),
+    bitwise-identical to the psum; it falls back to the psum when the
+    column graph is dense or the column count does not divide by P.
+
+    ``partition="balanced"`` replaces the contiguous slab assignment with
+    the norm/nnz-balanced row permutation of ``core.partition`` (CsrOp /
+    EllOp): the operator, b (and, for the coordinate action, the iterate
+    vectors) are permuted up front, every downstream slab is contiguous
+    again, and the returned iterate is un-permuted.
     """
+    num_workers = mesh.shape[axis]
+    row_perm = None
+    if partition == "balanced":
+        from repro.core import partition as partition_lib
+        op, b, x0, x_star, row_perm = partition_lib.apply_partition(
+            op, b, x0, x_star, action=action, num_slabs=num_workers)
+    elif partition != "contiguous":
+        raise ValueError(
+            f"unknown partition: {partition!r} (expected 'contiguous' or "
+            "'balanced')")
+
     if sync == "auto":
         if action == "rk":
-            sync = "psum"
+            sync = "a2a" if hasattr(op, "slab_neighbors") else "psum"
         elif op.halo_width is not None:
             sync = "halo"
         elif hasattr(op, "slab_neighbors"):
@@ -473,8 +547,7 @@ def solve_distributed(
             "coordinate GS (block=1)")
 
     a2a_schedule, a2a_masks = (), None
-    if sync == "a2a":
-        num_workers = mesh.shape[axis]
+    if sync == "a2a" and kind == "sparse_gs":
         need = op.slab_neighbors(num_workers)
         if num_workers > 1 and bool(need.all()):
             # Truly dense graph — every worker reads every slab: the masked
@@ -502,12 +575,58 @@ def solve_distributed(
                 [[bool(need[w, (w - s) % num_workers]) for s in shifts]
                  for w in range(num_workers)]).reshape(num_workers,
                                                        len(shifts))
+    elif sync == "a2a" and kind == "sparse_rk":
+        # The RK delta sync runs over the COLUMN-slab neighbor graph:
+        # need[w, c] says worker w's rows reference (read *and* write)
+        # columns in slab c — the same matrix slab_neighbors() answers,
+        # read column-wise.  Phase 1 reduces each column slab's deltas to
+        # its owner (worker c owns column slab c) over one masked ppermute
+        # rotation per shift; phase 2 broadcasts each owner's summed slab
+        # back to its readers.  The owner accumulates contributions in
+        # device order, which reproduces the psum's left-to-right
+        # reduction bit-for-bit (pinned by test on the forced-4-device
+        # host mesh).
+        n_cols = op.shape[1]
+        need = op.slab_neighbors(num_workers)
+        if num_workers > 1 and (bool(need.all())
+                                or n_cols % num_workers != 0):
+            # Dense column graph: every rotation would carry every slab —
+            # the single fused psum moves the same bytes with one
+            # collective.  Indivisible column count: there is no equal
+            # column-slab ownership to reduce onto.  Both fall back to the
+            # delta psum, which is bitwise what a2a would have computed.
+            sync = "psum"
+        else:
+            reduce_scheds = tuple(
+                tuple((v, (v + s) % num_workers)
+                      for v in range(num_workers)
+                      if need[v, (v + s) % num_workers])
+                for s in range(1, num_workers))
+            bcast_scheds = tuple(
+                tuple((c, (c + s) % num_workers)
+                      for c in range(num_workers)
+                      if need[(c + s) % num_workers, c] and
+                      (c + s) % num_workers != c)
+                for s in range(1, num_workers))
+            a2a_schedule = (reduce_scheds, bcast_scheds)
+            # accept masks for phase 2: masks[w, s-1] <=> worker w reads
+            # column slab (w - s) mod P.
+            a2a_masks = jnp.asarray(
+                [[bool(need[w, (w - s) % num_workers])
+                  for s in range(1, num_workers)]
+                 for w in range(num_workers)]).reshape(
+                     num_workers, max(num_workers - 1, 0))
 
-    return _distributed_impl(
+    res = _distributed_impl(
         kind, op, b, x0, x_star, key, mesh=mesh, axis=axis, rounds=rounds,
         local_steps=local_steps, block=block, beta=beta, unroll=unroll,
         with_metrics=with_metrics, sync=sync, a2a_schedule=a2a_schedule,
         a2a_masks=a2a_masks)
+    if row_perm is not None and action == "gs":
+        # Undo the symmetric permutation on the returned iterate (the "rk"
+        # iterate lives in column space and was never permuted).
+        res = res._replace(x=res.x[row_perm.inv])
+    return res
 
 
 #: action x format x sync -> strategy implementation.  The sparse strategies
@@ -524,7 +643,9 @@ _DISTRIBUTED_STRATEGIES = {
     ("rk", "DenseOp", "psum"): "dense_rk",
     ("rk", "BlockBandedOp", "psum"): "banded_rk",
     ("rk", "EllOp", "psum"): "sparse_rk",
+    ("rk", "EllOp", "a2a"): "sparse_rk",
     ("rk", "CsrOp", "psum"): "sparse_rk",
+    ("rk", "CsrOp", "a2a"): "sparse_rk",
 }
 
 
@@ -595,7 +716,8 @@ def _distributed_impl(kind, op, b, x0, xs, key, *, mesh, axis, rounds,
             op, b, x0, xs, key, mesh=mesh, axis=axis, rounds=rounds,
             local_steps=local_steps, beta=beta, with_metrics=with_metrics,
             num_workers=num_workers, zero_m=zero_m, local_scan=local_scan,
-            round_scan=round_scan)
+            round_scan=round_scan, sync=sync, a2a_schedule=a2a_schedule,
+            a2a_masks=a2a_masks)
     else:  # pragma: no cover - guarded by solve_distributed
         raise ValueError(kind)
 
@@ -1073,7 +1195,8 @@ def _sparse_gs(op, b, x0, xs, key, *, mesh, axis, rounds, local_steps, beta,
 
 
 def _sparse_rk(op, b, x0, xs, key, *, mesh, axis, rounds, local_steps, beta,
-               with_metrics, num_workers, zero_m, local_scan, round_scan):
+               with_metrics, num_workers, zero_m, local_scan, round_scan,
+               sync="psum", a2a_schedule=(), a2a_masks=None):
     """Row-sparse Kaczmarz with per-worker LOCAL sampling (CsrOp / EllOp).
 
     The wall-clock-faithful scheme: each worker samples its ``local_steps``
@@ -1087,23 +1210,83 @@ def _sparse_rk(op, b, x0, xs, key, *, mesh, axis, rounds, local_steps, beta,
     worker's read misses at most the other workers' (P-1)*local_steps
     current-round updates, which this bounds).  (The stationary row law is
     ∝ ||A_i||² *within* each slab; it matches Strohmer–Vershynin globally
-    when the slabs carry equal norm mass, the balanced case the paper's
-    partitioning assumes.)  Sync is the RK delta psum.  All-zero slabs are
-    safe: ``sample_rows`` falls back to uniform picks and the zero rows
-    make the updates no-ops.
+    when the slabs carry equal norm mass — ``partition="balanced"`` makes
+    that hold by construction.)  All-zero slabs are safe: ``sample_rows``
+    falls back to uniform picks and the zero rows make the updates no-ops.
+
+    Sync is the RK delta psum, or — ``sync="a2a"`` — the two-phase
+    exchange over the column-slab neighbor graph: phase 1 reduces every
+    column slab's per-worker deltas onto the slab's *owner* (worker c owns
+    column slab c) with one (cs, k) ppermute rotation per shift, the owner
+    accumulating in device order so the sum carries exactly the bits of the
+    psum's left-to-right reduction; phase 2 broadcasts each owner's summed
+    slab back to the workers whose rows reference it.  Slabs a worker never
+    references stay stale — they are never read, and the returned iterate
+    is assembled from the owners' slabs, so iterates and metrics are
+    bitwise identical to the psum sync at a fraction of its wire volume.
     """
     m, k = b.shape
+    n = x0.shape[0]
     if m % num_workers:
         raise ValueError(
             f"worker count ({num_workers}) must divide the row count ({m})")
     vals, cols = op.padded_rows()
     rn = op.row_norms_sq()
     round_keys = jax.random.split(key, rounds)
+    use_a2a = sync == "a2a"
+    if use_a2a:
+        assert n % num_workers == 0, (n, num_workers)  # caller fell back
+        reduce_scheds, bcast_scheds = a2a_schedule
+    cs = n // num_workers if n % num_workers == 0 else None
+    if a2a_masks is None:
+        a2a_masks = jnp.zeros((num_workers, max(num_workers - 1, 0)), bool)
 
-    def worker(vals_sh, cols_sh, b_sh, rn_sh, keys, x0_full, xs_full):
+    def worker(vals_sh, cols_sh, b_sh, rn_sh, masks_sh, keys, x0_full,
+               xs_full):
         # vals_sh/cols_sh: (slab, width); rn_sh: (slab,); x0/xs replicated.
         w = jax.lax.axis_index(axis)
         rn_safe = jnp.where(rn_sh > 0, rn_sh, 1.0)
+
+        def col_slab(v, c0):
+            return jax.lax.dynamic_slice_in_dim(v, c0 * cs, cs, 0)
+
+        def refresh(xw, delta):
+            if num_workers == 1:
+                return xw
+            if not use_a2a:
+                return xw + (jax.lax.psum(delta, axis) - delta)
+            # Phase 1 — reduce-to-owner.  terms[s] is the slab-w delta of
+            # worker (w - s) mod P (zeros when that worker never references
+            # slab w: skipped pairs receive ppermute's zero fill, exactly
+            # the all-zero delta the psum would have added).
+            own = col_slab(delta, w)
+            terms = [own]
+            for si, perm in enumerate(reduce_scheds):
+                sent = col_slab(delta, (w + si + 1) % num_workers)
+                terms.append(jax.lax.ppermute(sent, axis, perm) if perm
+                             else jnp.zeros_like(own))
+            stack = jnp.stack(terms)               # indexed by shift s
+            # Accumulate in DEVICE order v = 0..P-1 (term index (w - v) mod
+            # P) — the order the psum reduces in, so S carries its bits.
+            total = jnp.take(stack, jnp.mod(w, num_workers), axis=0)
+            for v in range(1, num_workers):
+                total = total + jnp.take(stack, jnp.mod(w - v, num_workers),
+                                         axis=0)
+            # Owner applies its summed slab locally...
+            xw = jax.lax.dynamic_update_slice_in_dim(
+                xw, col_slab(xw, w) + (total - own), w * cs, 0)
+            # ...phase 2 — broadcast to the slab's readers, who apply the
+            # same (S - own contribution) correction where accepted.
+            for si, perm in enumerate(bcast_scheds):
+                if not perm:
+                    continue
+                recv = jax.lax.ppermute(total, axis, perm)
+                src = jnp.mod(w - si - 1, num_workers)
+                cur = col_slab(xw, src)
+                upd = cur + (recv - col_slab(delta, src))
+                xw = jax.lax.dynamic_update_slice_in_dim(
+                    xw, jnp.where(masks_sh[0, si], upd, cur), src * cs, 0)
+            return xw
 
         def round_body(xw, rkey):
             rkey = jax.random.fold_in(rkey, w)
@@ -1118,30 +1301,41 @@ def _sparse_rk(op, b, x0, xs, key, *, mesh, axis, rounds, local_steps, beta,
                 return (xw.at[cr].add(upd), delta.at[cr].add(upd)), None
 
             (xw, delta), _ = local_scan(step, (xw, delta), picks)
-            if num_workers > 1:
-                xw = xw + (jax.lax.psum(delta, axis) - delta)
+            xw = refresh(xw, delta)
             if not with_metrics:
                 return xw, zero_m
-            if xs_full is not None:
-                err = jnp.einsum("nk,nk->k", xw - xs_full, xw - xs_full)
-            else:
+            if xs_full is None:
                 err = jnp.full((k,), jnp.nan, jnp.float32)
+            elif cs is not None:
+                # Column-slab-local error, psum'd: reads only the worker's
+                # own (always fresh) slab, so it is exact — and bitwise
+                # identical — under both syncs.
+                e_own = col_slab(xw, w) - col_slab(xs_full, w)
+                err = jax.lax.psum(jnp.einsum("sk,sk->k", e_own, e_own),
+                                   axis)
+            else:
+                err = jnp.einsum("nk,nk->k", xw - xs_full, xw - xs_full)
             r_local = b_sh - jnp.einsum("sw,swk->sk", vals_sh, xw[cols_sh])
             rsq = jax.lax.psum(jnp.einsum("sk,sk->k", r_local, r_local), axis)
             return xw, (err, jnp.sqrt(rsq))
 
         xw, (errs, resids) = round_scan(round_body, pvary(x0_full, (axis,)),
                                         keys)
+        if use_a2a:
+            # Only the owners' slabs are globally consistent; reassemble
+            # the full iterate from them (out_spec P(axis)).
+            return col_slab(xw, w), errs, resids
         return xw, errs, resids
 
     mapped = shard_map(
         worker,
         mesh=mesh,
         in_specs=(P(axis, None), P(axis, None), P(axis, None), P(axis),
-                  P(None), P(None, None), P(None, None)),
-        out_specs=(P(None, None), P(None, None), P(None, None)),
+                  P(axis, None), P(None), P(None, None), P(None, None)),
+        out_specs=(P(axis, None) if use_a2a else P(None, None),
+                   P(None, None), P(None, None)),
     )
-    return mapped(vals, cols, b, rn, round_keys, x0, xs)
+    return mapped(vals, cols, b, rn, a2a_masks, round_keys, x0, xs)
 
 
 # ---------------------------------------------------------------------------
@@ -1197,7 +1391,8 @@ def solve(
             op, problem.b, x0, problem.x_star, action=action, key=key,
             mesh=mesh, axis=axis, rounds=schedule.rounds,
             local_steps=schedule.local_steps, block=gs_block, beta=beta,
-            sync=sync, unroll=unroll, with_metrics=with_metrics)
+            sync=sync, partition=schedule.partition, unroll=unroll,
+            with_metrics=with_metrics)
     if schedule.tau > 0:
         if delay_key is None:
             raise ValueError("the bounded-delay simulator needs a delay_key")

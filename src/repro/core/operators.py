@@ -365,6 +365,7 @@ class CsrOp:
         self.rows_per_panel = rows_per_panel
         self.panel_width = panel_width
         self._neighbors_cache: dict[int, np.ndarray] = {}
+        self._panel_nnz_cache: jax.Array | None = None
 
     def tree_flatten(self):
         leaves = (self.data, self.indices, self.row_id, self.row_start,
@@ -387,6 +388,30 @@ class CsrOp:
         m, n = An.shape
         nz = An != 0.0
         counts = nz.sum(axis=1).astype(np.int64)
+        cap = max(int(counts.max()) if m else 1, 1)
+        row_vals = np.zeros((max(m, 1), cap), An.dtype)
+        row_cols = np.zeros((max(m, 1), cap), np.int32)
+        for r in range(m):
+            cj = np.nonzero(nz[r])[0]
+            row_vals[r, :cj.size] = An[r, cj]
+            row_cols[r, :cj.size] = cj
+        return cls._assemble(row_vals, row_cols, counts, shape=(m, n),
+                             rows_per_panel=rows_per_panel, lane=lane)
+
+    @classmethod
+    def _assemble(cls, row_vals, row_cols, counts, *, shape,
+                  rows_per_panel: int = 8, lane: int = 128) -> "CsrOp":
+        """Pack per-row nonzero windows into the panel-aligned flat layout.
+
+        ``row_vals``/``row_cols`` are host arrays of shape (m, >= max nnz/row)
+        whose first ``counts[r]`` slots hold row ``r``'s values and *global*
+        column ids (slots past the count are ignored); this is the shared
+        assembly path of ``from_dense`` and the row-permutation constructor
+        in ``core.partition`` (a permuted operator re-panelizes here so the
+        panel machinery never sees non-contiguity).
+        """
+        m, n = shape
+        counts = np.asarray(counts, np.int64).reshape(-1)
         nnz = int(counts.sum())
         row_cap = max(int(counts.max()) if m else 1, 1)
         R = rows_per_panel
@@ -394,20 +419,20 @@ class CsrOp:
         padded_counts = np.zeros((num_panels * R,), np.int64)
         padded_counts[:m] = counts
         panel_nnz = padded_counts.reshape(num_panels, R).sum(axis=1)
-        W = int(-(-max(int(panel_nnz.max()), 1) // lane) * lane)
+        W = int(-(-max(int(panel_nnz.max()) if num_panels else 1, 1) // lane)
+                * lane)
         total = num_panels * W + row_cap        # row-window slack at the end
-        data = np.zeros((total,), An.dtype)
+        data = np.zeros((total,), np.asarray(row_vals).dtype)
         cols = np.zeros((total,), np.int32)
         rows = np.zeros((total,), np.int32)
         row_start = np.zeros((max(m, 1),), np.int32)
         for p in range(num_panels):
             cursor = p * W
             for r in range(p * R, min((p + 1) * R, m)):
-                cj = np.nonzero(nz[r])[0]
-                c = cj.size
+                c = int(counts[r])
                 row_start[r] = cursor
-                data[cursor:cursor + c] = An[r, cj]
-                cols[cursor:cursor + c] = cj
+                data[cursor:cursor + c] = row_vals[r, :c]
+                cols[cursor:cursor + c] = row_cols[r, :c]
                 rows[cursor:cursor + c] = r
                 cursor += c
         return cls(jnp.asarray(data), jnp.asarray(cols),
@@ -425,12 +450,41 @@ class CsrOp:
         """Unstructured reach: no *scalar* halo (see ``row_reach``)."""
         return None
 
-    def matvec(self, x: jax.Array, *, interpret=None) -> jax.Array:
+    def matvec(self, x: jax.Array, *, interpret=None,
+               skip_empty: bool = False) -> jax.Array:
+        """``A @ x``.  ``skip_empty=True`` routes to the scalar-prefetch
+        kernel variant that predicates each grid step on the panel's nnz
+        count — empty panels (common after norm-balanced partitioning of
+        banded-structure matrices, or on very uneven row occupancy) write
+        zeros without gathering ``x`` or touching the MXU, and their input
+        DMA is remapped to the already-resident panel 0."""
         from repro.kernels import ops
+        if skip_empty:
+            return ops.spmv_csr_prefetch(
+                self.data, self.indices, self.row_id, self.panel_nnz(), x,
+                m=self._shape[0], rows_per_panel=self.rows_per_panel,
+                panel_width=self.panel_width, interpret=interpret)
         return ops.spmv_csr(self.data, self.indices, self.row_id, x,
                             m=self._shape[0],
                             rows_per_panel=self.rows_per_panel,
                             panel_width=self.panel_width, interpret=interpret)
+
+    def panel_nnz(self) -> jax.Array:
+        """Per-panel stored-nonzero counts, shape (num_panels,) — the
+        predicate stream the empty-panel-skipping matvec prefetches.
+        Memoized: it is static metadata of the stored pattern, and the
+        skip variant consults it on every matvec."""
+        if self._panel_nnz_cache is None:
+            R = self.rows_per_panel
+            m = self._shape[0]
+            num_panels = -(-m // R)
+            # Host-side, like slab_neighbors: never caches a tracer (an
+            # attempt to trace through raises a concretization error).
+            padded = np.zeros((num_panels * R,), np.int64)
+            padded[:m] = np.asarray(self.row_nnz)
+            self._panel_nnz_cache = jnp.asarray(
+                padded.reshape(num_panels, R).sum(axis=1).astype(np.int32))
+        return self._panel_nnz_cache
 
     def matvec_ref(self, x: jax.Array) -> jax.Array:
         from repro.kernels import ref

@@ -1,0 +1,175 @@
+"""Graph/norm-balanced slab assignment for the distributed engine.
+
+The periodic-synchronization schedule partitions rows into P *contiguous*
+slabs.  That is the wrong partition for two of the paper's assumptions:
+
+* **Sampling** — sparse RK samples per worker ∝ its slab's row norms
+  (DESIGN.md §4); the interleaved stream only matches the global
+  Strohmer–Vershynin law `P(i) ∝ ||A_i||²` when every slab carries the same
+  norm mass.  Contiguous slabs of real matrices concentrate mass (scaled
+  sensors, degree-skewed graphs), biasing the stationary row law.
+* **Work balance** — Thm 4.1's rate is per *round*; a round lasts as long
+  as its slowest worker, so nnz-skewed slabs stretch wall-clock tau.
+
+This module computes a **non-contiguous** assignment and realizes it as a
+row *permutation*: rows are bin-packed by ``row_norms_sq`` (primary) and
+nonzero count (tie-break) into P equal-size bins, and the permutation
+placing bin w at positions ``[w*m/P, (w+1)*m/P)`` is applied to the
+operator *once, up front* — downstream, every slab is contiguous again and
+all existing panel/sync machinery works unchanged.  For the row action
+("rk", rectangular) the permutation touches rows only; for the coordinate
+action ("gs", square SPD) it must be *symmetric* (``P A Pᵀ``) because the
+row slab is also the coordinate slab — SPD-ness and the unit diagonal are
+preserved, and the engine un-permutes the returned iterate.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.operators import CsrOp, EllOp
+
+__all__ = [
+    "RowPermutation",
+    "apply_partition",
+    "balanced_row_permutation",
+    "norm_balanced_assignment",
+    "partition_permutation",
+    "permute_rows",
+    "slab_norm_mass",
+]
+
+
+class RowPermutation(NamedTuple):
+    """A slab assignment realized as a row permutation (a pytree of arrays,
+    so it travels through jit untouched).
+
+    ``perm[i]`` is the original row placed at permuted position ``i`` —
+    slab ``w`` owns permuted positions ``[w*m/P, (w+1)*m/P)``; ``inv`` is
+    the inverse (``inv[perm[i]] == i``), used to un-permute iterates and to
+    relabel columns under a symmetric permutation.
+    """
+    perm: jax.Array   # (m,) int32
+    inv: jax.Array    # (m,) int32
+
+
+def norm_balanced_assignment(row_norms_sq, row_nnz,
+                             num_slabs: int) -> np.ndarray:
+    """Greedy LPT bin-packing of rows into ``num_slabs`` equal-size bins.
+
+    Rows are processed in decreasing ``row_norms_sq`` order; each goes to
+    the non-full bin with the least accumulated norm mass, tie-broken by
+    least accumulated nonzero count (so equal-mass choices still balance
+    per-round work), then lowest bin index (determinism).  Equal bin
+    *sizes* (m/P rows each) are a hard constraint — the engine shards slabs
+    of identical length.  Returns per-row bin labels, shape (m,).
+    """
+    rn = np.asarray(row_norms_sq, np.float64).reshape(-1)
+    nz = np.asarray(row_nnz, np.float64).reshape(-1)
+    m = rn.size
+    if m % num_slabs:
+        raise ValueError(
+            f"slab count ({num_slabs}) must divide the row count ({m})")
+    cap = m // num_slabs
+    order = np.argsort(-rn, kind="stable")
+    labels = np.empty((m,), np.int32)
+    mass = np.zeros((num_slabs,), np.float64)
+    work = np.zeros((num_slabs,), np.float64)
+    fill = np.zeros((num_slabs,), np.int64)
+    for r in order:
+        cand = np.flatnonzero(fill < cap)
+        best = cand[np.lexsort((cand, work[cand], mass[cand]))[0]]
+        labels[r] = best
+        mass[best] += rn[r]
+        work[best] += nz[r]
+        fill[best] += 1
+    return labels
+
+
+def partition_permutation(labels, num_slabs: int) -> RowPermutation:
+    """Permutation placing each bin's rows (in ascending original order,
+    preserving locality within a slab) at its contiguous slab positions."""
+    labels = np.asarray(labels).reshape(-1)
+    perm = np.concatenate(
+        [np.flatnonzero(labels == w) for w in range(num_slabs)])
+    inv = np.empty_like(perm)
+    inv[perm] = np.arange(perm.size)
+    return RowPermutation(perm=jnp.asarray(perm, jnp.int32),
+                          inv=jnp.asarray(inv, jnp.int32))
+
+
+def balanced_row_permutation(op, num_slabs: int) -> RowPermutation:
+    """Norm/nnz-balanced ``RowPermutation`` for a padded-row operator."""
+    if not hasattr(op, "padded_rows"):
+        raise NotImplementedError(
+            "balanced partitioning needs a padded-row format (CsrOp/EllOp); "
+            f"got {type(op).__name__} — contiguous slabs are the only "
+            "assignment the dense/banded layouts support")
+    rn = np.asarray(op.row_norms_sq()).reshape(-1)
+    vals, _ = op.padded_rows()
+    nnz = (np.asarray(vals) != 0).sum(axis=1)
+    return partition_permutation(
+        norm_balanced_assignment(rn, nnz, num_slabs), num_slabs)
+
+
+def slab_norm_mass(row_norms_sq, perm, num_slabs: int) -> np.ndarray:
+    """Per-slab Σ ||A_i||² under ``perm`` — the balance diagnostic the
+    partition tests assert on (uniform = total/P for every slab)."""
+    rn = np.asarray(row_norms_sq, np.float64).reshape(-1)[np.asarray(perm)]
+    return rn.reshape(num_slabs, -1).sum(axis=1)
+
+
+def permute_rows(op, rp: RowPermutation, *, symmetric: bool = False):
+    """Apply ``rp`` to an operator, returning the *same* format.
+
+    ``symmetric=False`` permutes rows only (``P A`` — the rectangular row
+    action); ``symmetric=True`` applies ``P A Pᵀ`` (square coordinate
+    action: columns are relabeled through ``inv`` so the coordinate slab
+    moves with the row slab).  CsrOp re-panelizes through ``_assemble`` so
+    the permuted instance keeps the contiguous panel layout; EllOp permutes
+    its fixed-width windows directly.  Padding slots carry value 0, so
+    relabeling their column ids contributes nothing.
+    """
+    if symmetric and op.shape[0] != op.shape[1]:
+        raise ValueError(
+            f"symmetric permutation needs a square operator; got {op.shape}")
+    if isinstance(op, EllOp):
+        vals = op.vals[rp.perm]
+        cols = op.cols[rp.perm]
+        if symmetric:
+            cols = rp.inv[cols]
+        return EllOp(vals, cols)
+    if isinstance(op, CsrOp):
+        vals, cols = map(np.asarray, op.padded_rows())
+        perm = np.asarray(rp.perm)
+        counts = np.asarray(op.row_nnz)[perm]
+        vals, cols = vals[perm], cols[perm].astype(np.int64)
+        if symmetric:
+            cols = np.asarray(rp.inv)[cols]
+        return CsrOp._assemble(vals, cols.astype(np.int32), counts,
+                               shape=op.shape,
+                               rows_per_panel=op.rows_per_panel)
+    raise NotImplementedError(
+        "balanced partitioning needs a padded-row format (CsrOp/EllOp); "
+        f"got {type(op).__name__}")
+
+
+def apply_partition(op, b, x0, x_star, *, action: str, num_slabs: int):
+    """Permute an (op, b, x0, x_star) problem onto balanced slabs.
+
+    Returns ``(op', b', x0', x_star', rp)``.  For "rk" the iterate lives in
+    column space and is untouched; for "gs" the symmetric permutation moves
+    the coordinate vectors too, and the caller un-permutes the result with
+    ``rp.inv``.  Metric values (norms) are permutation-invariant.
+    """
+    rp = balanced_row_permutation(op, num_slabs)
+    symmetric = action == "gs"
+    op2 = permute_rows(op, rp, symmetric=symmetric)
+    b2 = b[rp.perm]
+    if symmetric:
+        x0 = x0[rp.perm]
+        x_star = None if x_star is None else x_star[rp.perm]
+    return op2, b2, x0, x_star, rp

@@ -13,7 +13,8 @@ from repro.kernels import ref
 from repro.kernels.bbmv import bbmv as _bbmv, dense_to_bands
 from repro.kernels.block_gs import block_gs_sweep as _block_gs_sweep
 from repro.kernels.decode_attention import decode_attention as _decode_attention
-from repro.kernels.spmv_csr import spmv_csr as _spmv_csr
+from repro.kernels.spmv_csr import (spmv_csr as _spmv_csr,
+                                    spmv_csr_prefetch as _spmv_csr_prefetch)
 from repro.kernels.spmv_ell import spmv_ell as _spmv_ell
 
 
@@ -51,6 +52,15 @@ def spmv_csr(data, indices, row_id, x, *, m, rows_per_panel, panel_width,
                      interpret=_interp(interpret))
 
 
+def spmv_csr_prefetch(data, indices, row_id, panel_nnz, x, *, m,
+                      rows_per_panel, panel_width, interpret=None):
+    """Empty-panel-skipping spmv_csr (scalar-prefetched per-panel nnz)."""
+    return _spmv_csr_prefetch(data, indices, row_id, panel_nnz, x, m=m,
+                              rows_per_panel=rows_per_panel,
+                              panel_width=panel_width,
+                              interpret=_interp(interpret))
+
+
 def decode_attention(q, k_cache, v_cache, lengths, *, chunk=512, interpret=None):
     if k_cache.shape[1] % chunk != 0:
         return ref.decode_attention_ref(q, k_cache, v_cache, lengths)
@@ -65,5 +75,6 @@ __all__ = [
     "decode_attention",
     "dense_to_bands",
     "spmv_csr",
+    "spmv_csr_prefetch",
     "spmv_ell",
 ]

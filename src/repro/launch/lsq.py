@@ -47,12 +47,30 @@ def main(argv=None):
     ap.add_argument("--sweeps", type=int, default=6)
     ap.add_argument("--tau", type=int, default=32,
                     help="delay bound for the async simulator")
+    ap.add_argument("--rk-sync", choices=("auto", "psum", "a2a"),
+                    default="auto",
+                    help="distributed RK delta sync: a2a = two-phase "
+                         "exchange over the column-slab neighbor graph "
+                         "(csr format; bitwise-identical to psum, falls "
+                         "back when the graph is dense)")
+    ap.add_argument("--partition", choices=("contiguous", "balanced"),
+                    default="contiguous",
+                    help="distributed slab assignment: 'balanced' bin-packs "
+                         "rows by norm mass and nnz into the P slabs via a "
+                         "row permutation (csr format), restoring the "
+                         "global Strohmer-Vershynin row law under "
+                         "per-worker local sampling")
     ap.add_argument("--workers", type=int, default=0,
                     help="0 = all local devices")
     ap.add_argument("--local-steps", type=int, default=0,
                     help="updates between synchronizations (0 -> m/workers)")
     ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args(argv)
+    if args.format != "csr":
+        if args.rk_sync == "a2a":
+            ap.error("--rk-sync a2a needs --format csr")
+        if args.partition == "balanced":
+            ap.error("--partition balanced needs --format csr")
 
     if args.format == "csr":
         prob = random_sparse_lsq(args.m, args.n, row_nnz=args.row_nnz,
@@ -103,12 +121,14 @@ def main(argv=None):
     pbeta = theory.beta_opt_rk(rho_rk, ptau)
     t0 = time.time()
     pres = solve(prob, key=jax.random.key(1), mesh=mesh, beta=pbeta,
-                 format=args.format,
-                 schedule=Schedule(rounds=rounds, local_steps=local_steps))
+                 format=args.format, sync=args.rk_sync,
+                 schedule=Schedule(rounds=rounds, local_steps=local_steps,
+                                   partition=args.partition))
     jax.block_until_ready(pres.x)
     sampling = "local" if args.format == "csr" else "global-stream"
     print(f"  par RK     : P={workers} tau={ptau} beta~={pbeta:.3f} "
-          f"sampling={sampling} {rounds} rounds, relresid "
+          f"sampling={sampling} sync={args.rk_sync} "
+          f"partition={args.partition} {rounds} rounds, relresid "
           f"{float(jnp.linalg.norm(pres.resid[-1]))/bn:.3e} "
           f"({time.time()-t0:.1f}s)")
 

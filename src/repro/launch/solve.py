@@ -39,6 +39,11 @@ def main(argv=None):
                          "neighbor all-to-all, CSR/ELL formats; the halo "
                          "strategy belongs to the banded format, which this "
                          "CLI does not build)")
+    ap.add_argument("--partition", choices=("contiguous", "balanced"),
+                    default="contiguous",
+                    help="distributed slab assignment: 'balanced' bin-packs "
+                         "rows by norm mass and nnz into the P slabs via a "
+                         "symmetric row permutation (CSR/ELL formats)")
     ap.add_argument("--workers", type=int, default=0,
                     help="0 = all local devices")
     ap.add_argument("--local-steps", type=int, default=0,
@@ -48,6 +53,9 @@ def main(argv=None):
     args = ap.parse_args(argv)
     if args.sync == "a2a" and args.format == "dense":
         ap.error("--sync a2a needs a sparse format (--format csr or ell)")
+    if args.partition == "balanced" and args.format == "dense":
+        ap.error("--partition balanced needs a sparse format "
+                 "(--format csr or ell)")
 
     prob = random_sparse_spd(args.n, row_nnz=args.row_nnz,
                              offdiag=args.offdiag, n_rhs=args.rhs,
@@ -85,10 +93,12 @@ def main(argv=None):
     t0 = time.time()
     pres = solve(prob, key=jax.random.key(2), mesh=mesh, beta=beta,
                  format=args.format, width=args.ell_width, sync=args.sync,
-                 schedule=Schedule(rounds=rounds, local_steps=local_steps))
+                 schedule=Schedule(rounds=rounds, local_steps=local_steps,
+                                   partition=args.partition))
     jax.block_until_ready(pres.x)
     print(f"  async RGS  : P={workers} tau={tau} beta~={beta:.3f} "
           f"format={args.format} sync={args.sync} "
+          f"partition={args.partition} "
           f"{rounds} rounds, resid {float(pres.resid[-1,0]):.3e} "
           f"({time.time()-t0:.1f}s)")
 

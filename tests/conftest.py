@@ -1,6 +1,7 @@
 import os
 import subprocess
 import sys
+import textwrap
 
 # Tests run against the single real CPU device (the dry-run, and ONLY the
 # dry-run, forces 512 placeholder devices — in its own process).
@@ -47,6 +48,31 @@ def run_in_subprocess(argv, *, timeout=600):
 def run_script_in_subprocess(script, *, timeout=600):
     """``run_in_subprocess`` for an inline ``python -c`` test script."""
     return run_in_subprocess([sys.executable, "-c", script], timeout=timeout)
+
+
+def run_forced_device_script(script, *, num_devices=4, marker=None,
+                             timeout=600):
+    """Run a test script on a forced ``num_devices``-device host platform.
+
+    The shared fixture of every multi-worker engine test: XLA_FLAGS must be
+    set before jax imports, so the script runs in a fresh interpreter with
+    the forced-device preamble prepended (the main test process keeps its
+    single real device).  Asserts success; when ``marker`` is given, also
+    asserts the script printed it (the proof it ran to its last line rather
+    than silently exiting early).  Returns the completed process for any
+    extra stdout checks.
+    """
+    preamble = (
+        "import os\n"
+        f'os.environ["XLA_FLAGS"] = '
+        f'"--xla_force_host_platform_device_count={num_devices}"\n'
+    )
+    out = run_script_in_subprocess(preamble + textwrap.dedent(script),
+                                   timeout=timeout)
+    assert out.returncode == 0, (out.stderr[-3000:], out.stdout[-500:])
+    if marker is not None:
+        assert marker in out.stdout, out.stdout
+    return out
 
 
 @pytest.fixture(scope="session")

@@ -4,15 +4,11 @@ mirroring test_engine_distributed.py: the neighbor all-to-all sync strategy
 dense reference; the dense-graph fallback is exact; per-worker local-
 sampling CSR Kaczmarz converges on the sparse reference scenario and
 reports the shared-stream scheduled staleness."""
-import textwrap
-
 import pytest
 
-from conftest import run_script_in_subprocess
+from conftest import run_forced_device_script
 
-A2A_SCRIPT = textwrap.dedent("""
-    import os
-    os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=4"
+A2A_SCRIPT = """
     import jax, jax.numpy as jnp, numpy as np
     from repro.core import (CsrOp, DenseOp, EllOp, Schedule,
                             block_banded_spd, random_sparse_lsq,
@@ -77,12 +73,10 @@ A2A_SCRIPT = textwrap.dedent("""
                     schedule=Schedule(rounds=7, local_steps=20))
     assert bool(jnp.array_equal(r_front.x, ra.x))
     print("A2A_OK")
-""")
+"""
 
 
-CSR_RK_SCRIPT = textwrap.dedent("""
-    import os
-    os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=4"
+CSR_RK_SCRIPT = """
     import jax, jax.numpy as jnp, numpy as np
     from repro.core import CsrOp, DenseOp, random_sparse_lsq
     from repro.core.engine import scheduled_tau, solve_distributed
@@ -124,18 +118,14 @@ CSR_RK_SCRIPT = textwrap.dedent("""
     rel_d = float(jnp.linalg.norm(lp.b - lp.A @ rd.x) / jnp.linalg.norm(lp.b))
     assert rel <= rel_d * 1.5, (rel, rel_d)
     print("CSR_RK_OK")
-""")
+"""
 
 
 @pytest.mark.slow
 def test_csr_a2a_matches_allgather_and_dense():
-    out = run_script_in_subprocess(A2A_SCRIPT)
-    assert out.returncode == 0, out.stderr[-3000:]
-    assert "A2A_OK" in out.stdout
+    run_forced_device_script(A2A_SCRIPT, marker="A2A_OK")
 
 
 @pytest.mark.slow
 def test_csr_rk_local_sampling():
-    out = run_script_in_subprocess(CSR_RK_SCRIPT)
-    assert out.returncode == 0, out.stderr[-3000:]
-    assert "CSR_RK_OK" in out.stdout
+    run_forced_device_script(CSR_RK_SCRIPT, marker="CSR_RK_OK")

@@ -3,15 +3,12 @@ points vs the frozen pre-refactor implementations, the halo-vs-allgather
 iterate identity *through the unified driver*, and the new block-banded
 Kaczmarz strategy end-to-end — all on a forced 4-device host mesh in a
 subprocess (the main test process keeps its single real device)."""
-import textwrap
-
 import pytest
 
-from conftest import run_script_in_subprocess
+from conftest import run_forced_device_script
 
-EQUIV_SCRIPT = textwrap.dedent("""
-    import os, sys
-    os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=4"
+EQUIV_SCRIPT = """
+    import sys
     sys.path.insert(0, "tests")
     import jax, jax.numpy as jnp, numpy as np
     import legacy_solvers as legacy
@@ -71,12 +68,10 @@ EQUIV_SCRIPT = textwrap.dedent("""
     ok = legacy.parallel_rk_solve(lp.A, lp.b, w0, lp.x_star, **kw)
     same(nk.x, ok.x); same(nk.err_sq, ok.err_sq); same(nk.resid, ok.resid)
     print("LEGACY_EQUIV_OK")
-""")
+"""
 
 
-DRIVER_SCRIPT = textwrap.dedent("""
-    import os
-    os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=4"
+DRIVER_SCRIPT = """
     import jax, jax.numpy as jnp, numpy as np
     from repro.core import BlockBandedOp, block_banded_spd
     from repro.core.engine import solve_distributed
@@ -114,18 +109,14 @@ DRIVER_SCRIPT = textwrap.dedent("""
     e = np.asarray(rk.err_sq)
     assert e[-1].max() < 1e-2 * e[0].max(), e[:, 0]
     print("DRIVER_OK")
-""")
+"""
 
 
 @pytest.mark.slow
 def test_parallel_legacy_bit_identity():
-    out = run_script_in_subprocess(EQUIV_SCRIPT)
-    assert out.returncode == 0, out.stderr[-3000:]
-    assert "LEGACY_EQUIV_OK" in out.stdout
+    run_forced_device_script(EQUIV_SCRIPT, marker="LEGACY_EQUIV_OK")
 
 
 @pytest.mark.slow
 def test_unified_driver_halo_allgather_and_banded_rk():
-    out = run_script_in_subprocess(DRIVER_SCRIPT)
-    assert out.returncode == 0, out.stderr[-3000:]
-    assert "DRIVER_OK" in out.stdout
+    run_forced_device_script(DRIVER_SCRIPT, marker="DRIVER_OK")

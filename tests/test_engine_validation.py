@@ -1,8 +1,12 @@
-"""Engine validation sweep (ISSUE 3 satellites): record_every divisibility
-raises ValueError naming both values, ambiguous Schedules are rejected,
-sample_rows has defined behavior on all-zero row-norm slabs, the distributed
-dispatch error enumerates the supported combinations, and the EllOp GS
-dispatch hole is closed (format-generic slab path, runs even at P=1)."""
+"""Engine validation sweep (ISSUE 3 + 4 satellites): record_every
+divisibility raises ValueError naming both values, ambiguous Schedules are
+rejected, sample_rows has defined behavior on all-zero row-norm slabs, the
+distributed dispatch error enumerates the supported combinations, the EllOp
+GS dispatch hole is closed (format-generic slab path, runs even at P=1),
+and solve_async_sim warns — every call, not just at trace time — when it
+densifies a sparse operator (the simulator ignores nnz_cost)."""
+import warnings
+
 import jax
 import jax.numpy as jnp
 import numpy as np
@@ -69,6 +73,32 @@ def test_sample_rows_all_zero_slab_defined():
     rn = jnp.asarray([0.0, 1.0, 0.0, 3.0])
     p2 = np.asarray(sample_rows(jax.random.key(1), rn, 512))
     assert set(np.unique(p2)) <= {1, 3}
+
+
+def test_async_sim_densify_warns(prob):
+    """The bounded-delay simulator silently ran sparse operators on their
+    densified form; it now says so (and still produces the exact densified
+    iterates — to_dense reconstructs stored values bit-for-bit)."""
+    x0 = jnp.zeros_like(prob.x_star)
+    kw = dict(action="gs", key=jax.random.key(0),
+              delay_key=jax.random.key(1), num_iters=64, tau=4)
+    with pytest.warns(UserWarning, match="densifies CsrOp.*nnz_cost"):
+        rc = solve_async_sim(CsrOp.from_dense(prob.A), prob.b, x0,
+                             prob.x_star, **kw)
+    # the warning fires on EVERY call (it lives outside the jitted impl,
+    # so jit caching cannot swallow it)
+    with pytest.warns(UserWarning, match="densifies CsrOp"):
+        solve_async_sim(CsrOp.from_dense(prob.A), prob.b, x0, prob.x_star,
+                        **kw)
+    with pytest.warns(UserWarning, match="densifies EllOp"):
+        re = solve_async_sim(EllOp.from_dense(prob.A, width=32), prob.b, x0,
+                             prob.x_star, **kw)
+    # densification is exact: sparse-format runs equal the dense run
+    with warnings.catch_warnings():
+        warnings.simplefilter("error")        # DenseOp must NOT warn
+        rd = solve_async_sim(DenseOp(prob.A), prob.b, x0, prob.x_star, **kw)
+    assert bool(jnp.array_equal(rc.x, rd.x))
+    assert bool(jnp.array_equal(re.x, rd.x))
 
 
 def test_dispatch_error_enumerates_supported(prob):

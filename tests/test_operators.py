@@ -1,7 +1,18 @@
-"""Operator layer (repro.core.operators): matvec correctness of every
-format against the dense oracle (Pallas kernels in interpret mode on CPU),
-layout metadata the engine's sync selection relies on, and the sequential
-engine's format-genericity (ELL / banded paths track the dense path)."""
+"""Operator layer (repro.core.operators): one property-based conformance
+grid over all four formats (ISSUE 4 satellite).
+
+``check_conformance`` asserts the full operator protocol against the dense
+oracle — matvec (Pallas kernel in interpret mode AND pure-jnp reference),
+``row_norms_sq`` non-negative and consistent with ``row_panel`` reads,
+``row_dot``/``rk_update`` row actions, ``padded_rows`` round-tripping the
+matrix, ``slab_neighbors`` exactly the slab graph of the dense sparsity
+pattern (symmetric whenever the pattern is, always True on the diagonal,
+shape (P, P)), and ``to_dense`` reconstruction.  A deterministic
+format x shape x sparsity grid always runs (tier-1 works on bare
+jax+pytest); when hypothesis is installed the same checker fuzzes over
+random shapes/sparsity/seeds.  The engine-facing tests (dispatch, pytree
+flattening, sequential format-genericity) ride below unchanged.
+"""
 import jax
 import jax.numpy as jnp
 import numpy as np
@@ -12,6 +23,228 @@ from repro.core import (BlockBandedOp, CsrOp, DenseOp, EllOp, as_operator,
                         random_sparse_spd)
 from repro.core.engine import solve_sequential
 
+try:
+    from hypothesis import given, settings, strategies as st
+    HAVE_HYPOTHESIS = True
+except ImportError:  # bare jax+pytest environment: deterministic grid only
+    HAVE_HYPOTHESIS = False
+
+
+# ---------------------------------------------------------------------------
+# The conformance checker
+# ---------------------------------------------------------------------------
+
+def _dense_slab_graph(An, num_workers):
+    """Oracle for slab_neighbors: need[w, v] <=> row slab w stores a
+    nonzero in column slab v (diagonal always True)."""
+    m, n = An.shape
+    rs, cs = m // num_workers, n // num_workers
+    need = np.zeros((num_workers, num_workers), bool)
+    for w in range(num_workers):
+        for v in range(num_workers):
+            need[w, v] = bool(
+                (An[w * rs:(w + 1) * rs, v * cs:(v + 1) * cs] != 0).any())
+    np.fill_diagonal(need, True)
+    return need
+
+
+def check_conformance(op, A, *, rtol=1e-4, atol=1e-4):
+    """Assert the full operator protocol against the dense oracle ``A``."""
+    An = np.asarray(A)
+    m, n = An.shape
+    assert op.shape == (m, n)
+    key = jax.random.key(hash((m, n)) % (2 ** 31))
+    x = jax.random.normal(key, (n, 3), A.dtype)
+
+    # matvec: Pallas kernel (interpret mode on CPU) and pure-jnp reference
+    want = An @ np.asarray(x)
+    kwargs = {"interpret": True} if not isinstance(op, DenseOp) else {}
+    np.testing.assert_allclose(np.asarray(op.matvec(x, **kwargs)), want,
+                               rtol=rtol, atol=atol)
+    if hasattr(op, "matvec_ref"):
+        np.testing.assert_allclose(np.asarray(op.matvec_ref(x)), want,
+                                   rtol=rtol, atol=atol)
+
+    # row_norms_sq: non-negative, matches the dense rows
+    rn = np.asarray(op.row_norms_sq()).reshape(-1)
+    assert rn.shape == (m,) and (rn >= 0).all()
+    np.testing.assert_allclose(rn, (An * An).sum(axis=1), rtol=1e-4,
+                               atol=1e-5)
+
+    # ...and consistent with row_panel reads where the format has them
+    if isinstance(op, BlockBandedOp):
+        panel = np.asarray(op.row_panel(0))            # (block, n) dense rows
+        np.testing.assert_allclose((panel * panel).sum(axis=1),
+                                   rn[:op.block], rtol=1e-4, atol=1e-5)
+    elif hasattr(op, "row_panel"):
+        block = max(m // 8, 1)
+        if m % block == 0:
+            panel = np.asarray(op.row_panel(1, block))
+            np.testing.assert_allclose((panel * panel).sum(axis=1),
+                                       rn[block:2 * block], rtol=1e-4,
+                                       atol=1e-5)
+
+    # row actions (Θ(nnz/row) reads the sequential engine performs)
+    b = jnp.asarray(An) @ x + 0.5
+    if hasattr(op, "row_dot"):
+        dop = DenseOp(jnp.asarray(An))
+        for r in (0, m // 2, m - 1):
+            np.testing.assert_allclose(np.asarray(op.row_dot(r, x)),
+                                       np.asarray(dop.row_dot(r, x)),
+                                       rtol=1e-4, atol=1e-5)
+        g = jnp.ones((x.shape[1],))
+        np.testing.assert_allclose(
+            np.asarray(op.rk_update(x, m // 2, g, 0.9)),
+            np.asarray(dop.rk_update(x, m // 2, g, 0.9)), atol=1e-5)
+
+    # residual_panel: the block-GS read, vs the dense expression
+    if isinstance(op, BlockBandedOp):
+        bi = op.nb - 1
+        rows = slice(bi * op.block, (bi + 1) * op.block)
+        np.testing.assert_allclose(
+            np.asarray(op.residual_panel(b, x, bi)),
+            np.asarray(b[rows]) - An[rows] @ np.asarray(x),
+            rtol=1e-4, atol=1e-4)
+    elif hasattr(op, "residual_panel"):
+        block = max(m // 8, 1)
+        if m % block == 0:
+            rows = slice(block, 2 * block)
+            np.testing.assert_allclose(
+                np.asarray(op.residual_panel(b, x, 1, block)),
+                np.asarray(b[rows]) - An[rows] @ np.asarray(x),
+                rtol=1e-4, atol=1e-4)
+
+    # padded_rows round-trips the matrix (global column ids, zero padding)
+    if hasattr(op, "padded_rows"):
+        vals, cols = op.padded_rows()
+        assert vals.shape == cols.shape and vals.shape[0] == m
+        recon = jnp.zeros((m, n), vals.dtype).at[
+            jnp.arange(m)[:, None], cols].add(vals)
+        np.testing.assert_allclose(np.asarray(recon), An, atol=1e-6)
+
+    # slab_neighbors IS the slab graph of the dense pattern — this
+    # subsumes in-bounds shape/dtype and symmetry-when-the-pattern-is
+    if hasattr(op, "slab_neighbors"):
+        for P in (2, 4):
+            if m % P or n % P:
+                continue
+            need = op.slab_neighbors(P)
+            assert need.shape == (P, P) and need.dtype == bool
+            assert need.diagonal().all()
+            np.testing.assert_array_equal(need, _dense_slab_graph(An, P))
+            if m == n and np.array_equal((An != 0), (An != 0).T):
+                np.testing.assert_array_equal(need, need.T)
+
+    # nnz_cost: stored slots cover the true nonzeros.  The banded layout
+    # stores zero-padded border tiles, which can exceed dense storage when
+    # the band width approaches the block count — every other format is
+    # bounded by the dense count.
+    nnz_true = int((An != 0).sum())
+    assert nnz_true <= op.nnz_cost()
+    if not isinstance(op, BlockBandedOp):
+        assert op.nnz_cost() <= max(m * n, 1)
+
+    # halo_width: finite iff the format bounds an update's reach
+    if isinstance(op, BlockBandedOp):
+        assert op.halo_width == op.bands * op.block
+    else:
+        assert op.halo_width is None
+
+    # to_dense reconstructs the stored values
+    np.testing.assert_allclose(np.asarray(op.to_dense()), An, atol=1e-6)
+
+
+# ---------------------------------------------------------------------------
+# Deterministic grid (always runs; tier-1 must not need hypothesis)
+# ---------------------------------------------------------------------------
+
+def _case(fmt, spec):
+    if spec["kind"] == "spd":
+        A = random_sparse_spd(spec["n"], row_nnz=spec["row_nnz"],
+                              seed=spec["seed"]).A
+    elif spec["kind"] == "lsq":
+        A = random_sparse_lsq(spec["m"], spec["n"], row_nnz=spec["row_nnz"],
+                              seed=spec["seed"]).A
+    else:
+        A = block_banded_spd(spec["n"], block=spec["block"],
+                             bands=spec["bands"], seed=spec["seed"]).A
+    if spec.get("zero_rows"):
+        A = jnp.asarray(np.array(A) * (np.arange(A.shape[0]) % 3 != 0
+                                       )[:, None].astype(np.float32))
+    kw = {}
+    if fmt == "banded":
+        kw = dict(block=spec["block"], bands=spec["bands"])
+    elif fmt == "ell":
+        kw = dict(width=spec["width"])
+    return as_operator(A, fmt, **kw), A
+
+
+GRID = [
+    ("dense", dict(kind="spd", n=64, row_nnz=6, seed=0)),
+    ("dense", dict(kind="lsq", m=96, n=32, row_nnz=5, seed=1)),
+    ("banded", dict(kind="banded", n=128, block=16, bands=1, seed=2)),
+    ("banded", dict(kind="banded", n=256, block=32, bands=2, seed=3)),
+    ("ell", dict(kind="spd", n=64, row_nnz=6, width=32, seed=4)),
+    ("ell", dict(kind="spd", n=96, row_nnz=8, width=48, seed=5,
+                 zero_rows=True)),
+    ("csr", dict(kind="spd", n=64, row_nnz=6, seed=6)),
+    ("csr", dict(kind="lsq", m=96, n=32, row_nnz=5, seed=7)),
+    ("csr", dict(kind="lsq", m=64, n=16, row_nnz=3, seed=8,
+                 zero_rows=True)),
+]
+
+
+@pytest.mark.parametrize("fmt,spec", GRID,
+                         ids=[f"{f}-{i}" for i, (f, _) in enumerate(GRID)])
+def test_operator_conformance_grid(fmt, spec):
+    op, A = _case(fmt, spec)
+    check_conformance(op, A)
+
+
+# ---------------------------------------------------------------------------
+# Hypothesis layer: the same checker over random shapes/sparsity
+# ---------------------------------------------------------------------------
+
+if HAVE_HYPOTHESIS:
+
+    @settings(deadline=None, max_examples=10)
+    @given(st.sampled_from([32, 48, 64, 96]),
+           st.integers(2, 10), st.integers(0, 2 ** 16), st.booleans())
+    def test_conformance_fuzz_square(n, row_nnz, seed, zero_rows):
+        A = random_sparse_spd(n, row_nnz=min(row_nnz, n // 2),
+                              seed=seed % 997).A
+        if zero_rows:
+            A = jnp.asarray(np.array(A) * (np.arange(n) % 4 != 1
+                                           )[:, None].astype(np.float32))
+        for fmt, kw in (("dense", {}), ("ell", dict(width=n)),
+                        ("csr", {})):
+            check_conformance(as_operator(A, fmt, **kw), A)
+
+    @settings(deadline=None, max_examples=10)
+    @given(st.sampled_from([(64, 16), (96, 32), (128, 32)]),
+           st.integers(1, 8), st.integers(0, 2 ** 16))
+    def test_conformance_fuzz_rectangular(shape, row_nnz, seed):
+        m, n = shape
+        A = random_sparse_lsq(m, n, row_nnz=min(row_nnz, n),
+                              seed=seed % 997).A
+        for fmt in ("dense", "csr"):
+            check_conformance(as_operator(A, fmt), A)
+
+    @settings(deadline=None, max_examples=6)
+    @given(st.sampled_from([(128, 16, 1), (128, 32, 2), (256, 32, 1)]),
+           st.integers(0, 2 ** 16))
+    def test_conformance_fuzz_banded(cfg, seed):
+        n, block, bands = cfg
+        A = block_banded_spd(n, block=block, bands=bands,
+                             seed=seed % 997).A
+        check_conformance(
+            as_operator(A, "banded", block=block, bands=bands), A)
+        check_conformance(as_operator(A, "csr"), A)
+
+
+# ---------------------------------------------------------------------------
+# Engine-facing tests (dispatch, pytrees, sequential format-genericity)
+# ---------------------------------------------------------------------------
 
 @pytest.fixture(scope="module")
 def banded_prob():
@@ -21,60 +254,6 @@ def banded_prob():
 @pytest.fixture(scope="module")
 def sparse_prob():
     return random_sparse_spd(256, row_nnz=8, n_rhs=3, seed=1)
-
-
-@pytest.mark.parametrize("n,block,bands,k", [(256, 32, 1, 2), (512, 64, 2, 4)])
-def test_block_banded_matvec_vs_dense(n, block, bands, k):
-    prob = block_banded_spd(n, block=block, bands=bands, n_rhs=k, seed=2)
-    op = BlockBandedOp.from_dense(prob.A, block=block, bands=bands)
-    want = np.asarray(prob.A @ prob.x_star)
-    # Pallas kernel backend, interpret mode (CPU)
-    np.testing.assert_allclose(
-        np.asarray(op.matvec(prob.x_star, interpret=True)), want,
-        atol=1e-4, rtol=1e-4)
-    # pure-jnp reference backend
-    np.testing.assert_allclose(np.asarray(op.matvec_ref(prob.x_star)), want,
-                               atol=1e-4, rtol=1e-4)
-
-
-@pytest.mark.parametrize("width", [32, 48])  # >= max nnz/row: exact capture
-def test_ell_matvec_vs_dense(sparse_prob, width):
-    op = EllOp.from_dense(sparse_prob.A, width=width)
-    want = np.asarray(sparse_prob.A @ sparse_prob.x_star)
-    np.testing.assert_allclose(
-        np.asarray(op.matvec(sparse_prob.x_star, interpret=True)), want,
-        atol=1e-4, rtol=1e-4)
-    np.testing.assert_allclose(
-        np.asarray(op.matvec_ref(sparse_prob.x_star)), want,
-        atol=1e-4, rtol=1e-4)
-
-
-def test_to_dense_roundtrips(banded_prob, sparse_prob):
-    bop = BlockBandedOp.from_dense(banded_prob.A, block=32, bands=2)
-    np.testing.assert_allclose(np.asarray(bop.to_dense()),
-                               np.asarray(banded_prob.A), atol=1e-6)
-    eop = EllOp.from_dense(sparse_prob.A, width=32)
-    np.testing.assert_allclose(np.asarray(eop.to_dense()),
-                               np.asarray(sparse_prob.A), atol=1e-6)
-
-
-def test_layout_metadata(banded_prob, sparse_prob):
-    """halo width / shard specs / nnz cost — what the engine dispatches on."""
-    dop = DenseOp(sparse_prob.A)
-    bop = BlockBandedOp.from_dense(banded_prob.A, block=32, bands=2)
-    eop = EllOp.from_dense(sparse_prob.A, width=16)
-    assert dop.halo_width is None and eop.halo_width is None
-    assert bop.halo_width == 2 * 32
-    assert bop.nb == 16 and bop.block == 32 and bop.width == 5
-    assert dop.nnz_cost() == 256 * 256
-    assert bop.nnz_cost() == 16 * 5 * 32 * 32 < 512 * 512  # < dense storage
-    assert eop.nnz_cost() == 256 * 16
-    assert dop.shard_spec("w") == jax.sharding.PartitionSpec("w", None)
-    # row norms agree across formats
-    np.testing.assert_allclose(
-        np.asarray(bop.row_norms_sq().reshape(-1)),
-        np.asarray(DenseOp(banded_prob.A).row_norms_sq()), atol=1e-5,
-        rtol=1e-4)
 
 
 def test_as_operator_dispatch(sparse_prob):
@@ -88,6 +267,31 @@ def test_as_operator_dispatch(sparse_prob):
         as_operator(sparse_prob.A, "coo")
 
 
+def test_shard_specs_and_structure(banded_prob, sparse_prob):
+    """Metadata the conformance grid does not pin: shard specs and the
+    banded tile geometry."""
+    bop = BlockBandedOp.from_dense(banded_prob.A, block=32, bands=2)
+    assert bop.nb == 16 and bop.block == 32 and bop.width == 5
+    assert DenseOp(sparse_prob.A).shard_spec("w") == \
+        jax.sharding.PartitionSpec("w", None)
+    assert bop.shard_spec("w") == \
+        jax.sharding.PartitionSpec("w", None, None, None)
+    assert CsrOp.from_dense(sparse_prob.A).shard_spec("w") == \
+        jax.sharding.PartitionSpec("w", None)
+
+
+def test_csr_row_reach(banded_prob, sparse_prob):
+    """Per-row reach refines the scalar halo: bounded by the band on a
+    banded-structure matrix, and the slab graph of unstructured sparsity is
+    dense (what the a2a fallback keys on)."""
+    bop = CsrOp.from_dense(banded_prob.A)   # block=32, bands=2 -> reach<160
+    reach = np.asarray(bop.row_reach())
+    assert reach.shape == (512,) and reach.max() < 5 * 32
+    need = bop.slab_neighbors(4)
+    assert not need[0, 2] and not need[0, 3]      # far slabs never read
+    assert CsrOp.from_dense(sparse_prob.A).slab_neighbors(4).all()
+
+
 def test_operators_are_pytrees(sparse_prob):
     """Operators pass through jit/tree transforms (the engine requires it)."""
     op = EllOp.from_dense(sparse_prob.A, width=16)
@@ -96,13 +300,20 @@ def test_operators_are_pytrees(sparse_prob):
     op2 = jax.tree_util.tree_unflatten(treedef, leaves)
     assert isinstance(op2, EllOp) and op2.width == 16
 
+    cop = CsrOp.from_dense(sparse_prob.A)
+    cleaves, ctreedef = jax.tree_util.tree_flatten(cop)
+    assert len(cleaves) == 5
+    cop2 = jax.tree_util.tree_unflatten(ctreedef, cleaves)
+    assert isinstance(cop2, CsrOp) and cop2.shape == cop.shape
+
     @jax.jit
     def through(o, x):
         return o.matvec_ref(x)
 
-    np.testing.assert_allclose(
-        np.asarray(through(op, sparse_prob.x_star)),
-        np.asarray(op.matvec_ref(sparse_prob.x_star)), atol=1e-6)
+    for o in (op, cop):
+        np.testing.assert_allclose(
+            np.asarray(through(o, sparse_prob.x_star)),
+            np.asarray(o.matvec_ref(sparse_prob.x_star)), atol=1e-6)
 
 
 def test_sequential_engine_ell_tracks_dense(sparse_prob):
@@ -123,104 +334,6 @@ def test_sequential_engine_ell_tracks_dense(sparse_prob):
     rd = solve_sequential(dop, sparse_prob.b, x0, sparse_prob.x_star,
                           action="rk", key=jax.random.key(5), num_iters=1024)
     assert float(jnp.abs(re.x - rd.x).max()) < 1e-4
-
-
-# ---------------------------------------------------------------------------
-# CsrOp: full protocol conformance against the dense oracle (ISSUE 3)
-# ---------------------------------------------------------------------------
-
-def test_csr_matvec_vs_dense(sparse_prob):
-    op = CsrOp.from_dense(sparse_prob.A)
-    want = np.asarray(sparse_prob.A @ sparse_prob.x_star)
-    # Pallas segment-sum kernel, interpret mode (CPU)
-    np.testing.assert_allclose(
-        np.asarray(op.matvec(sparse_prob.x_star, interpret=True)), want,
-        atol=1e-4, rtol=1e-4)
-    # pure-jnp segment-sum reference
-    np.testing.assert_allclose(np.asarray(op.matvec_ref(sparse_prob.x_star)),
-                               want, atol=1e-4, rtol=1e-4)
-
-
-def test_csr_matvec_rectangular():
-    lp = random_sparse_lsq(96, 32, row_nnz=6, n_rhs=2, seed=3)
-    op = CsrOp.from_dense(lp.A)
-    want = np.asarray(lp.A @ lp.x_star)
-    np.testing.assert_allclose(np.asarray(op.matvec(lp.x_star,
-                                                    interpret=True)),
-                               want, atol=1e-4, rtol=1e-4)
-    np.testing.assert_allclose(np.asarray(op.matvec_ref(lp.x_star)), want,
-                               atol=1e-4, rtol=1e-4)
-    np.testing.assert_allclose(np.asarray(op.to_dense()), np.asarray(lp.A),
-                               atol=1e-6)
-
-
-def test_csr_row_access_vs_dense(sparse_prob):
-    op = CsrOp.from_dense(sparse_prob.A)
-    dop = DenseOp(sparse_prob.A)
-    x = sparse_prob.x_star
-    for r in (0, 7, 255):
-        np.testing.assert_allclose(np.asarray(op.row_dot(r, x)),
-                                   np.asarray(dop.row_dot(r, x)),
-                                   atol=1e-5, rtol=1e-5)
-    g = jnp.ones((x.shape[1],))
-    np.testing.assert_allclose(np.asarray(op.rk_update(x, 7, g, 0.9)),
-                               np.asarray(dop.rk_update(x, 7, g, 0.9)),
-                               atol=1e-6)
-    np.testing.assert_allclose(np.asarray(op.row_panel(3, 16)),
-                               np.asarray(dop.row_panel(3, 16)), atol=1e-6)
-    np.testing.assert_allclose(
-        np.asarray(op.residual_panel(sparse_prob.b, x, 3, 16)),
-        np.asarray(dop.residual_panel(sparse_prob.b, x, 3, 16)),
-        atol=1e-4, rtol=1e-4)
-    np.testing.assert_allclose(np.asarray(op.row_norms_sq()),
-                               np.asarray(dop.row_norms_sq()),
-                               atol=1e-5, rtol=1e-5)
-
-
-def test_csr_layout_metadata(sparse_prob, banded_prob):
-    op = CsrOp.from_dense(sparse_prob.A)
-    assert op.halo_width is None           # unstructured: no scalar halo
-    assert op.shape == (256, 256)
-    assert op.nnz_cost() == int((np.asarray(sparse_prob.A) != 0).sum())
-    assert op.nnz_cost() < 256 * 256       # < dense storage
-    assert op.shard_spec("w") == jax.sharding.PartitionSpec("w", None)
-    # per-row reach refines the scalar halo: on a banded-structure matrix
-    # it is bounded by the band, and slab neighbors are only the adjacent
-    # slabs (what sync="a2a" exchanges along)
-    bop = CsrOp.from_dense(banded_prob.A)  # block=32, bands=2 -> reach<160
-    reach = np.asarray(bop.row_reach())
-    assert reach.shape == (512,) and reach.max() < 5 * 32
-    need = bop.slab_neighbors(4)
-    assert need.shape == (4, 4) and need.diagonal().all()
-    assert not need[0, 2] and not need[0, 3]     # far slabs never read
-    # unstructured sparsity reads everywhere -> dense neighbor graph
-    assert CsrOp.from_dense(sparse_prob.A).slab_neighbors(4).all()
-
-
-def test_csr_padded_rows_reconstruct(sparse_prob):
-    op = CsrOp.from_dense(sparse_prob.A)
-    vals, cols = op.padded_rows()
-    assert vals.shape == (256, op.row_cap) == cols.shape
-    recon = jnp.zeros_like(sparse_prob.A).at[
-        jnp.arange(256)[:, None], cols].add(vals)
-    np.testing.assert_allclose(np.asarray(recon), np.asarray(sparse_prob.A),
-                               atol=1e-6)
-
-
-def test_csr_is_pytree(sparse_prob):
-    op = CsrOp.from_dense(sparse_prob.A)
-    leaves, treedef = jax.tree_util.tree_flatten(op)
-    assert len(leaves) == 5
-    op2 = jax.tree_util.tree_unflatten(treedef, leaves)
-    assert isinstance(op2, CsrOp) and op2.shape == op.shape
-
-    @jax.jit
-    def through(o, x):
-        return o.matvec_ref(x)
-
-    np.testing.assert_allclose(
-        np.asarray(through(op, sparse_prob.x_star)),
-        np.asarray(op.matvec_ref(sparse_prob.x_star)), atol=1e-6)
 
 
 def test_sequential_engine_csr_tracks_dense(sparse_prob):

@@ -8,44 +8,55 @@ dry-run roofline (§Roofline).  What this benchmark DOES establish on CPU:
   FLOPs-per-HBM-byte for bbmv (contiguous block-banded) vs spmv_ell
   (gather-based ELL) at equal nnz — the hardware-adaptation argument of
   DESIGN.md quantified structurally;
-* correctness-at-scale spot checks for both layouts and the fused
-  block-GS sweep.
+* the CSR matvec overhaul (PR 5): the sliced-ELL gather-accumulate kernel
+  (``csr_sliced``, the ``CsrOp.matvec`` default) vs the retired one-hot
+  segment-sum layout (``csr_segsum``), plus both on a half-empty matrix
+  where the prefetch-predicated variant skips empty panels
+  (``csr_skip_empty``);
+* fused sweep kernels vs the per-step scan engine (the ``sweeps``
+  section): whole GS/RK inner loops in one Pallas launch for the
+  banded/CSR/ELL formats, parity-checked against the scan iterates;
+* correctness spot checks: every layout row carries a ``check`` value
+  (max abs deviation from the dense oracle) so a wrong kernel cannot hide
+  behind a fast wall time.
+
+Timing is min-of-``--repeats`` (one-sided noise), so BENCH_kernels.json
+deltas between PRs are trustworthy.
+
+    PYTHONPATH=src python -m benchmarks.bench_kernels [--n 1024] [--repeats 3]
 """
 from __future__ import annotations
+
+import argparse
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
 from benchmarks.common import emit, timed, write_json
-from repro.core import BlockBandedOp, CsrOp, EllOp, block_banded_spd
+from repro.core import (BlockBandedOp, CsrOp, EllOp, block_banded_spd,
+                        random_sparse_spd)
+from repro.core.engine import solve_sequential
 from repro.kernels import ops, ref
 
 
-def run(n: int = 1024, block: int = 128, bands: int = 1, k: int = 64):
+def run(n: int = 1024, block: int = 128, bands: int = 1, k: int = 64,
+        repeats: int = 3):
     prob = block_banded_spd(n, block=block, bands=bands, n_rhs=k, seed=0)
     bop = BlockBandedOp.from_dense(prob.A, block=block, bands=bands)
     width = int((np.asarray(prob.A) != 0).sum(1).max())
     width = -(-width // 8) * 8
     eop = EllOp.from_dense(prob.A, width=width)
     cop = CsrOp.from_dense(prob.A)
-
-    # operator-layer matvecs (Pallas kernels behind; interpret mode on CPU)
-    y_b = bop.matvec(prob.x_star)
-    y_e = eop.matvec(prob.x_star)
-    y_c = cop.matvec(prob.x_star)
     y_d = prob.A @ prob.x_star
-    check_bbmv = float(jnp.abs(y_b - y_d).max())
-    check_ell = float(jnp.abs(y_e - y_d).max())
-    check_csr = float(jnp.abs(y_c - y_d).max())
-    emit("bench_kernels", check_bbmv=f"{check_bbmv:.2e}",
-         check_ell=f"{check_ell:.2e}", check_csr=f"{check_csr:.2e}")
 
     # Modeled arithmetic intensity on the A-stream (FLOPs per byte of matrix
     # read): blocked tiles amortize k RHS columns per element; ELL/CSR pay
     # the same matrix bytes plus a gathered row of x per nonzero
-    # (uncoalesced); CSR additionally streams a row id per slot but its
-    # segment sum runs as a one-hot MXU matmul (kernels/spmv_csr.py).
+    # (uncoalesced).  csr_segsum additionally streams a row id per slot and
+    # burns a dense one-hot MXU matmul per panel; csr_sliced (the matvec
+    # default since PR 5) drops both — per-row windows make the segment sum
+    # free — at the cost of per-row (not per-panel) padding.
     bbmv_bytes = bop.nnz_cost() * 4
     bbmv_flops = 2 * bop.nnz_cost() * k
     ell_bytes = eop.nnz_cost() * (4 + 4) + eop.nnz_cost() * k * 4
@@ -53,70 +64,147 @@ def run(n: int = 1024, block: int = 128, bands: int = 1, k: int = 64):
     csr_slots = cop.panel_width * (-(-n // cop.rows_per_panel))
     csr_bytes = csr_slots * (4 + 4 + 4) + csr_slots * k * 4
     csr_flops = 2 * cop.nnz_cost() * k
+    sl_slots = int(np.prod(cop.sliced_rows()[0].shape))
+    sliced_bytes = sl_slots * (4 + 4) + sl_slots * k * 4
+    sliced_flops = 2 * cop.nnz_cost() * k
 
     # Empty-panel-skip variant (scalar-prefetched per-panel nnz counts):
     # on a "patchy" matrix — half the row panels zeroed, the shape a
     # norm-balanced partition of a banded-structure matrix produces — the
-    # predicated grid skips the gather + one-hot matmul of every empty
-    # panel, so its modeled A-stream bytes shrink by the empty fraction.
+    # predicated grid skips the gather + contraction of every empty panel,
+    # so its modeled A-stream bytes shrink by the empty fraction.
     A_patchy = np.array(prob.A)
     R = cop.rows_per_panel
     for p in range(0, n // R, 2):
         A_patchy[p * R:(p + 1) * R] = 0.0
-    pop = CsrOp.from_dense(jnp.asarray(A_patchy))
+    Ap = jnp.asarray(A_patchy)
+    pop = CsrOp.from_dense(Ap)
     pn = np.asarray(pop.panel_nnz())
     empty_frac = float((pn == 0).mean())
     x_p = prob.x_star
-    check_skip = float(jnp.abs(pop.matvec(x_p, skip_empty=True)
-                               - jnp.asarray(A_patchy) @ x_p).max())
+    y_p = Ap @ x_p
     patchy_slots = pop.panel_width * pn.size
     patchy_bytes = patchy_slots * (4 + 4 + 4) + patchy_slots * k * 4
     patchy_flops = 2 * pop.nnz_cost() * k
-    skip_slots = pop.panel_width * int((pn > 0).sum())
-    skip_bytes = (skip_slots * (4 + 4 + 4) + skip_slots * k * 4
-                  + pn.size * 4)
+    skip_slots = (int(pop.sliced_rows()[0].shape[1]) * pop.rows_per_panel
+                  * int((pn > 0).sum()))
+    skip_bytes = (skip_slots * (4 + 4) + skip_slots * k * 4 + pn.size * 4)
     skip_flops = 2 * pop.nnz_cost() * k
 
+    # Every layout row: modeled AI, min-of-N wall time, AND a check value
+    # against the dense oracle (uniform — a fast-but-wrong kernel fails
+    # loudly here and in the CI smoke job).
     layouts = {}
-    for name, ai, fn in (
-        ("block_banded", bbmv_flops / bbmv_bytes,
+    for name, ai, want, fn in (
+        ("block_banded", bbmv_flops / bbmv_bytes, y_d,
          lambda: bop.matvec(prob.x_star)),
-        ("ell_gather", ell_flops / ell_bytes,
+        ("ell_gather", ell_flops / ell_bytes, y_d,
          lambda: eop.matvec(prob.x_star)),
-        ("csr_segsum", csr_flops / csr_bytes,
+        ("csr_segsum", csr_flops / csr_bytes, y_d,
+         lambda: cop.matvec_segsum(prob.x_star)),
+        ("csr_sliced", sliced_flops / sliced_bytes, y_d,
          lambda: cop.matvec(prob.x_star)),
-        ("csr_segsum_patchy", patchy_flops / patchy_bytes,
-         lambda: pop.matvec(x_p)),
-        ("csr_skip_empty", skip_flops / skip_bytes,
+        ("csr_segsum_patchy", patchy_flops / patchy_bytes, y_p,
+         lambda: pop.matvec_segsum(x_p)),
+        ("csr_skip_empty", skip_flops / skip_bytes, y_p,
          lambda: pop.matvec(x_p, skip_empty=True)),
     ):
-        wall = timed(fn)
+        check = float(jnp.abs(fn() - want).max())
+        wall = timed(fn, iters=repeats, stat="min")
         emit("bench_kernels", layout=name, ai_flops_per_byte=f"{ai:.1f}",
-             wall_us=f"{wall*1e6:.0f}")
-        layouts[name] = {"ai_flops_per_byte": ai, "wall_us": wall * 1e6}
-    layouts["csr_skip_empty"].update(empty_panel_frac=empty_frac,
-                                     check=check_skip)
-    emit("bench_kernels", empty_panel_frac=f"{empty_frac:.2f}",
-         check_skip=f"{check_skip:.2e}")
+             wall_us=f"{wall*1e6:.0f}", check=f"{check:.2e}")
+        layouts[name] = {"ai_flops_per_byte": ai, "wall_us": wall * 1e6,
+                         "check": check}
+    layouts["csr_skip_empty"]["empty_panel_frac"] = empty_frac
+    emit("bench_kernels", empty_panel_frac=f"{empty_frac:.2f}")
 
-    # fused sweep kernel vs oracle
+    # fused block-GS sweep kernel vs oracle (dense layout)
     nb = bop.nb
     blocks = jax.random.randint(jax.random.key(1), (nb,), 0, nb)
     x0 = jnp.zeros_like(prob.b)
     out = ops.block_gs_sweep(prob.A, prob.b, x0, blocks, block=block, beta=1.0)
-    want = ref.block_gs_sweep_ref(prob.A, prob.b, x0, blocks, block=block, beta=1.0)
+    want = ref.block_gs_sweep_ref(prob.A, prob.b, x0, blocks, block=block,
+                                  beta=1.0)
     check_block_gs = float(jnp.abs(out - want).max())
     sweep_wall = timed(lambda: ops.block_gs_sweep(prob.A, prob.b, x0, blocks,
-                                                  block=block))
+                                                  block=block),
+                       iters=repeats, stat="min")
     emit("bench_kernels", check_block_gs=f"{check_block_gs:.2e}",
          sweep_wall_us=f"{sweep_wall*1e6:.0f}")
     return {
-        "n": n, "block": block, "bands": bands, "k": k,
-        "check_bbmv": check_bbmv, "check_ell": check_ell,
-        "check_csr": check_csr, "check_block_gs": check_block_gs,
+        "n": n, "block": block, "bands": bands, "k": k, "repeats": repeats,
+        "check_block_gs": check_block_gs,
         "layouts": layouts, "sweep_wall_us": sweep_wall * 1e6,
+        "sweeps": run_sweeps(repeats=repeats, n=min(n, 512)),
     }
 
 
+def run_sweeps(n: int = 512, block: int = 64, bands: int = 1, k: int = 8,
+               row_nnz: int = 16, steps: int = 256, repeats: int = 3,
+               seed: int = 0):
+    """Fused sweep kernels vs the per-step scan engine (PR 5 tentpole).
+
+    Times one full inner loop (``steps`` sequential row/block updates +
+    one metric record) through ``solve_sequential`` both ways for the
+    banded GS action and the CSR/ELL GS and RK actions, and records the
+    parity deviation (``check``; exact 0 expected for GS — identical
+    update order — and roundoff for RK).  CPU-interpret caveat applies to
+    the absolute numbers; what the section pins is the parity and the
+    per-PR trajectory of both paths.
+    """
+    bprob = block_banded_spd(n, block=block, bands=bands, n_rhs=k, seed=seed)
+    bop = BlockBandedOp.from_dense(bprob.A, block=block, bands=bands)
+    sprob = random_sparse_spd(n, row_nnz=row_nnz, n_rhs=k, seed=seed + 1)
+    ewidth = int((np.asarray(sprob.A) != 0).sum(1).max())
+    cases = {
+        "banded_gs": (bop, bprob, "gs"),
+        "csr_gs": (CsrOp.from_dense(sprob.A), sprob, "gs"),
+        "csr_rk": (CsrOp.from_dense(sprob.A), sprob, "rk"),
+        "ell_gs": (EllOp.from_dense(sprob.A, width=ewidth), sprob, "gs"),
+        "ell_rk": (EllOp.from_dense(sprob.A, width=ewidth), sprob, "rk"),
+    }
+    out = {"n": n, "block": block, "bands": bands, "k": k, "steps": steps}
+    for name, (op, prob, action) in cases.items():
+        x0 = jnp.zeros_like(prob.b)
+        kw = dict(action=action, key=jax.random.key(2), num_iters=steps,
+                  record_every=steps)
+
+        def scan():
+            return solve_sequential(op, prob.b, x0, prob.x_star, **kw).x
+
+        def fused():
+            return solve_sequential(op, prob.b, x0, prob.x_star, fused=True,
+                                    **kw).x
+
+        check = float(jnp.abs(scan() - fused()).max())
+        scan_wall = timed(scan, iters=repeats, stat="min")
+        fused_wall = timed(fused, iters=repeats, stat="min")
+        emit("bench_kernels_sweeps", case=name, steps=steps,
+             scan_us=f"{scan_wall*1e6:.0f}", fused_us=f"{fused_wall*1e6:.0f}",
+             check=f"{check:.2e}")
+        out[name] = {"scan_us": scan_wall * 1e6,
+                     "fused_us": fused_wall * 1e6, "check": check}
+    return out
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--n", type=int, default=1024)
+    ap.add_argument("--block", type=int, default=128)
+    ap.add_argument("--bands", type=int, default=1)
+    ap.add_argument("--k", type=int, default=64)
+    ap.add_argument("--repeats", type=int, default=3,
+                    help="timing repetitions; wall times are min-of-N")
+    ap.add_argument("--no-write", action="store_true",
+                    help="print records without persisting BENCH_kernels"
+                         ".json (the CI smoke job runs a tiny shape)")
+    args = ap.parse_args(argv)
+    payload = run(n=args.n, block=args.block, bands=args.bands, k=args.k,
+                  repeats=args.repeats)
+    if not args.no_write:
+        write_json("kernels", payload)
+    return payload
+
+
 if __name__ == "__main__":
-    write_json("kernels", run())
+    main()

@@ -215,7 +215,9 @@ def run_partitioned_rk(m: int = 2048, n: int = 512, row_nnz: int = 16,
         stats_slabs = workers
     rn = np.asarray(op.row_norms_sq())
     uniform = rn.sum() / stats_slabs
-    rp = pt.balanced_row_permutation(op, stats_slabs)
+    labels_bal = pt.balanced_labels(op, stats_slabs)
+    rp = pt.partition_permutation(labels_bal, stats_slabs)
+    labels_cont = np.arange(m) // (m // stats_slabs)
     mass = {
         "contiguous": float(
             pt.slab_norm_mass(rn, np.arange(m), stats_slabs).max()
@@ -224,11 +226,27 @@ def run_partitioned_rk(m: int = 2048, n: int = 512, row_nnz: int = 16,
             pt.slab_norm_mass(rn, np.asarray(rp.perm), stats_slabs).max()
             / uniform),
     }
+    # Cross-slab reach: how many stored nonzeros each assignment leaves
+    # outside the owner slab — the wire-volume cost the norm-balanced
+    # bin-packing is free to inflate, and the quantity a future
+    # reach-aware packing would minimize jointly with the norm mass.
+    cross = None
+    if n % stats_slabs == 0:
+        total_nnz = int(op.nnz_cost())
+        cross = {
+            "contiguous": pt.cross_slab_edges(op, labels_cont, stats_slabs),
+            "balanced": pt.cross_slab_edges(op, labels_bal, stats_slabs),
+            "total_nnz": total_nnz,
+        }
+        emit("bench_lsq_partitioned_rk", stats_slabs=stats_slabs,
+             cross_edges_contiguous=cross["contiguous"],
+             cross_edges_balanced=cross["balanced"], total_nnz=total_nnz)
 
     out = {"m": m, "n": n, "row_nnz": row_nnz, "rhs": rhs, "skew": skew,
            "workers": workers, "stats_slabs": stats_slabs, "rounds": rounds,
            "local_steps": local_steps, "beta": beta,
-           "slab_mass_max_over_uniform": mass}
+           "slab_mass_max_over_uniform": mass,
+           "cross_slab_edges": cross}
     x0 = jnp.zeros((n, rhs))
     bn = float(jnp.linalg.norm(bj))
     for part in ("contiguous", "balanced"):

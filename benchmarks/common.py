@@ -39,8 +39,16 @@ def write_json(name: str, payload) -> Path:
     return path
 
 
-def timed(fn, *args, warmup: int = 1, iters: int = 3):
-    """Median wall time of ``fn(*args)`` with block_until_ready."""
+def timed(fn, *args, warmup: int = 1, iters: int = 3, stat: str = "median"):
+    """Wall time of ``fn(*args)`` with block_until_ready.
+
+    ``stat="median"`` (default) or ``"min"`` — min-of-N is the trustworthy
+    statistic for BENCH_*.json deltas (one-sided noise: a run can only be
+    slowed down by interference, never sped up), so bench_kernels times
+    with ``stat="min"`` and a ``--repeats`` flag.
+    """
+    if stat not in ("min", "median"):
+        raise ValueError(f"unknown stat: {stat!r}")
     for _ in range(warmup):
         jax.block_until_ready(fn(*args))
     times = []
@@ -49,4 +57,4 @@ def timed(fn, *args, warmup: int = 1, iters: int = 3):
         jax.block_until_ready(fn(*args))
         times.append(time.perf_counter() - t0)
     times.sort()
-    return times[len(times) // 2]
+    return times[0] if stat == "min" else times[len(times) // 2]

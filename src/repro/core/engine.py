@@ -113,6 +113,14 @@ class Schedule(NamedTuple):
     dense/banded layouts) or ``"balanced"`` (norm/nnz-balanced
     non-contiguous assignment via a row permutation, ``core.partition``;
     CsrOp/EllOp only).
+
+    ``fused`` runs the inner loop (the per-record chunk in sequential
+    mode, the local phase of a distributed round) as a single fused Pallas
+    sweep kernel — the iterate VMEM-resident across all steps, the pick
+    stream scalar-prefetched — instead of a per-step ``lax.scan``.
+    Action × format combinations without a sweep kernel fall back to the
+    scan engine with a ``UserWarning``; supported combinations produce
+    iterates matching the scan engine (GS bitwise, RK to roundoff).
     """
     num_iters: int = 0
     rounds: int = 0
@@ -120,6 +128,7 @@ class Schedule(NamedTuple):
     tau: int = 0
     record_every: int = 0
     partition: str = "contiguous"
+    fused: bool = False
 
     @property
     def distributed(self) -> bool:
@@ -211,8 +220,30 @@ def sample_rows(key: jax.Array, rn: jax.Array, num: int) -> jax.Array:
 # Sequential engine
 # ---------------------------------------------------------------------------
 
-@functools.partial(
-    jax.jit, static_argnames=("action", "num_iters", "block", "record_every"))
+def _fused_sweep_supported(op, action: str, block: int) -> bool:
+    """Whether a fused sweep kernel exists for this action x format.
+
+    The sweep layer covers the banded block-GS action (kernels/banded_gs),
+    and the padded-row coordinate-GS / Kaczmarz actions for CsrOp / EllOp
+    (kernels/sweep_csr, kernels/sweep_ell).  Dense formats and block > 1
+    row-panel GS stay on the scan engine.
+    """
+    if action == "gs":
+        if isinstance(op, BlockBandedOp):
+            return True
+        return block == 1 and isinstance(op, (CsrOp, EllOp))
+    if action == "rk":
+        return isinstance(op, (CsrOp, EllOp))
+    return False
+
+
+def _warn_fused_fallback(op, action, detail=""):
+    warnings.warn(
+        f"fused=True: no fused sweep kernel for action={action!r} x "
+        f"{type(op).__name__}{detail}; falling back to the per-step scan "
+        "engine", UserWarning, stacklevel=3)
+
+
 def solve_sequential(
     op,
     b: jax.Array,
@@ -225,13 +256,110 @@ def solve_sequential(
     beta: float = 1.0,
     block: int = 1,
     record_every: int = 0,
+    fused: bool = False,
 ) -> SolveResult:
     """Sequential randomized solve: one local-update step per iteration.
 
     action "gs":  coordinate (block=1) or aligned-block Gauss-Seidel on a
                   unit-diagonal SPD system; directions uniform.
     action "rk":  Kaczmarz row action; rows sampled ∝ ||A_i||^2.
+
+    ``fused=True`` executes each record chunk as one fused Pallas sweep
+    (the operator's ``gs_sweep``/``rk_sweep`` entry point: iterate
+    VMEM-resident, picks scalar-prefetched) instead of a per-step
+    ``lax.scan``; the pick stream and update arithmetic are shared, so
+    iterates match the scan engine (GS bitwise, RK to roundoff).  Formats
+    without a sweep kernel fall back to the scan with a ``UserWarning``.
     """
+    if fused:
+        if _fused_sweep_supported(op, action, block):
+            return _sequential_fused_impl(
+                op, b, x0, x_star, action=action, key=key,
+                num_iters=num_iters, beta=float(beta), block=block,
+                record_every=record_every)
+        _warn_fused_fallback(
+            op, action, f" with block={block}" if block != 1 else "")
+    return _sequential_scan_impl(
+        op, b, x0, x_star, action=action, key=key, num_iters=num_iters,
+        beta=beta, block=block, record_every=record_every)
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("action", "num_iters", "block", "record_every", "beta"))
+def _sequential_fused_impl(
+    op,
+    b: jax.Array,
+    x0: jax.Array,
+    x_star: jax.Array,
+    *,
+    action: str,
+    key: jax.Array,
+    num_iters: int,
+    beta: float = 1.0,
+    block: int = 1,
+    record_every: int = 0,
+) -> SolveResult:
+    """Fused-sweep twin of ``_sequential_scan_impl``: identical pick
+    streams and record points, but each record chunk runs as a single
+    Pallas launch.  ``beta`` is static — it is baked into the sweep kernel
+    as a compile-time constant."""
+    rec = record_every or num_iters
+    if num_iters % rec != 0:
+        raise ValueError(
+            f"num_iters ({num_iters}) must be divisible by record_every "
+            f"({rec})")
+
+    if action == "gs":
+        norm = "A"
+        if isinstance(op, BlockBandedOp):
+            picks = jax.random.randint(key, (num_iters,), 0, op.nb)
+        else:
+            picks = jax.random.randint(key, (num_iters,), 0, op.shape[0])
+
+        def sweep(x, ps):
+            return op.gs_sweep(b, x, ps, beta=beta)
+    elif action == "rk":
+        norm = "euclid"
+        rn = op.row_norms_sq()
+        picks = sample_rows(key, rn, num_iters)
+
+        def sweep(x, ps):
+            return op.rk_sweep(b, rn, x, ps, beta=beta)
+    else:
+        raise ValueError(f"unknown action: {action!r}")
+
+    def chunk(x, ps):
+        # The sweep entry points rebuild their loop-invariant operator
+        # views (packed band tiles / padded row windows) per record chunk
+        # — accepted: record chunks are few, the views are cheap relative
+        # to a chunk's sweep, and keeping preparation inside the operator
+        # method is what lets a new format plug in with one method.
+        x = sweep(x, ps)
+        return x, record_metrics(op, b, x, x_star, norm=norm)
+
+    x, (errs, resids) = jax.lax.scan(chunk, x0, picks.reshape(-1, rec))
+    iters = (1 + jnp.arange(num_iters // rec)) * rec
+    return SolveResult(x=x, err_sq=errs, resid=resids, iters=iters)
+
+
+@functools.partial(
+    jax.jit, static_argnames=("action", "num_iters", "block", "record_every"))
+def _sequential_scan_impl(
+    op,
+    b: jax.Array,
+    x0: jax.Array,
+    x_star: jax.Array,
+    *,
+    action: str,
+    key: jax.Array,
+    num_iters: int,
+    beta: float = 1.0,
+    block: int = 1,
+    record_every: int = 0,
+) -> SolveResult:
+    """The per-step scan engine (the pre-PR-5 ``solve_sequential`` body,
+    unchanged — the legacy bit-identity contract lives here)."""
     rec = record_every or num_iters
     if num_iters % rec != 0:
         raise ValueError(
@@ -477,10 +605,20 @@ def solve_distributed(
     beta: float = 1.0,
     sync: str = "auto",
     partition: str = "contiguous",
+    fused: bool = False,
     unroll: bool = False,
     with_metrics: bool = True,
 ) -> ParallelSolveResult:
     """P-way asynchronous solve under the periodic-synchronization schedule.
+
+    ``fused=True`` runs each round's local phase (the ``local_steps``
+    sequential updates between synchronizations) as one fused Pallas sweep
+    on the banded strategies — banded GS under both the all-gather and
+    halo syncs (``kernels/banded_gs.banded_gs_sweep``, bitwise-identical
+    iterates) and banded RK (``banded_rk_sweep``, the masked
+    Cimmino-within-panel action over VMEM-resident window + delta
+    carries).  Strategies without a fused local phase fall back to the
+    per-step scan with a ``UserWarning``.
 
     The sync collective is chosen from the operator's layout metadata when
     ``sync="auto"``: a finite halo (block-banded) means neighbor halo
@@ -545,6 +683,9 @@ def solve_distributed(
             f"distributed block GS with block={block} is not supported for "
             f"{type(op).__name__}; the sparse slab strategies run "
             "coordinate GS (block=1)")
+    if fused and kind not in _FUSED_STRATEGIES:
+        _warn_fused_fallback(op, action, f" under the {kind!r} strategy")
+        fused = False
 
     a2a_schedule, a2a_masks = (), None
     if sync == "a2a" and kind == "sparse_gs":
@@ -621,7 +762,7 @@ def solve_distributed(
         kind, op, b, x0, x_star, key, mesh=mesh, axis=axis, rounds=rounds,
         local_steps=local_steps, block=block, beta=beta, unroll=unroll,
         with_metrics=with_metrics, sync=sync, a2a_schedule=a2a_schedule,
-        a2a_masks=a2a_masks)
+        a2a_masks=a2a_masks, fused=fused)
     if row_perm is not None and action == "gs":
         # Undo the symmetric permutation on the returned iterate (the "rk"
         # iterate lives in column space and was never permuted).
@@ -648,16 +789,26 @@ _DISTRIBUTED_STRATEGIES = {
     ("rk", "CsrOp", "a2a"): "sparse_rk",
 }
 
+#: strategies whose local phase has a fused Pallas sweep.
+_FUSED_STRATEGIES = frozenset({"banded_gs", "halo_gs", "banded_rk"})
+
+
+def _fused_band_tiles(op):
+    """Zero-padded border tiles for the fused banded sweeps (one packing
+    definition: ``BlockBandedOp.packed_band_tiles``)."""
+    return op.packed_band_tiles()
+
 
 @functools.partial(
     jax.jit,
     static_argnames=("kind", "mesh", "axis", "rounds", "local_steps", "block",
                      "beta", "unroll", "with_metrics", "sync",
-                     "a2a_schedule"),
+                     "a2a_schedule", "fused"),
 )
 def _distributed_impl(kind, op, b, x0, xs, key, *, mesh, axis, rounds,
                       local_steps, block, beta, unroll, with_metrics,
-                      sync="allgather", a2a_schedule=(), a2a_masks=None):
+                      sync="allgather", a2a_schedule=(), a2a_masks=None,
+                      fused=False):
     num_workers = mesh.shape[axis]
     k = b.shape[1]
     zero_m = (jnp.zeros((k,), jnp.float32), jnp.zeros((k,), jnp.float32))
@@ -685,13 +836,13 @@ def _distributed_impl(kind, op, b, x0, xs, key, *, mesh, axis, rounds,
             op, b, x0, xs, key, mesh=mesh, axis=axis, rounds=rounds,
             local_steps=local_steps, beta=beta, with_metrics=with_metrics,
             num_workers=num_workers, zero_m=zero_m, local_scan=local_scan,
-            round_scan=round_scan)
+            round_scan=round_scan, fused=fused)
     elif kind == "halo_gs":
         x, errs, resids = _halo_gs(
             op, b, x0, xs, key, mesh=mesh, axis=axis, rounds=rounds,
             local_steps=local_steps, beta=beta, with_metrics=with_metrics,
             num_workers=num_workers, zero_m=zero_m, local_scan=local_scan,
-            round_scan=round_scan)
+            round_scan=round_scan, fused=fused)
     elif kind == "dense_rk":
         x, errs, resids = _dense_rk(
             op.A, b, x0, xs, key, mesh=mesh, axis=axis, rounds=rounds,
@@ -703,7 +854,7 @@ def _distributed_impl(kind, op, b, x0, xs, key, *, mesh, axis, rounds,
             op, b, x0, xs, key, mesh=mesh, axis=axis, rounds=rounds,
             local_steps=local_steps, beta=beta, with_metrics=with_metrics,
             num_workers=num_workers, zero_m=zero_m, local_scan=local_scan,
-            round_scan=round_scan)
+            round_scan=round_scan, fused=fused)
     elif kind == "sparse_gs":
         x, errs, resids = _sparse_gs(
             op, b, x0, xs, key, mesh=mesh, axis=axis, rounds=rounds,
@@ -792,14 +943,25 @@ def _dense_gs(A, b, x0, xs, key, *, mesh, axis, rounds, local_steps, block,
 
 
 def _banded_gs(op, b, x0, xs, key, *, mesh, axis, rounds, local_steps, beta,
-               with_metrics, num_workers, zero_m, local_scan, round_scan):
-    """Block-banded slab GS; per-round all-gather of the owned slab."""
+               with_metrics, num_workers, zero_m, local_scan, round_scan,
+               fused=False):
+    """Block-banded slab GS; per-round all-gather of the owned slab.
+
+    ``fused=True`` replaces the local-phase scan with one
+    ``banded_gs_sweep`` launch per round: the worker's halo-padded window
+    of the replica stays VMEM-resident across all ``local_steps`` updates,
+    and border validity moves from the scan's ``where(valid, ...)`` masks
+    into zero-padded tiles (``pack_bands_local``) — exact zeros either
+    way, so the iterates are bitwise identical.
+    """
     block, bands, nb = op.block, op.bands, op.nb
     n = b.shape[0]
     slab = n // num_workers
     nb_local = slab // block
     assert nb * block == n and nb_local * block == slab
     round_keys = jax.random.split(key, rounds)
+    Ab = _fused_band_tiles(op) if fused else op.A_bands
+    halo = bands * block
 
     def worker(Ab_sh, b_sh, keys, x0_full, xs_full):
         # Ab_sh: (nb_local, width, block, block); b_sh: (slab, k).
@@ -819,8 +981,18 @@ def _banded_gs(op, b, x0, xs, key, *, mesh, axis, rounds, local_steps, beta,
                 return jax.lax.dynamic_update_slice_in_dim(
                     xw, cur + beta * g, rows0, 0), None
 
-            xw, _ = local_scan(step, xw, picks)
-            own = jax.lax.dynamic_slice_in_dim(xw, row0, slab, 0)
+            if fused:
+                from repro.kernels import ops
+                xpad = jnp.pad(xw, ((halo, halo), (0, 0)))
+                win = jax.lax.dynamic_slice_in_dim(
+                    xpad, row0, slab + 2 * halo, 0)
+                win = ops.banded_gs_sweep(Ab_sh, b_sh, win, picks,
+                                          block=block, bands=bands,
+                                          beta=beta)
+                own = jax.lax.dynamic_slice_in_dim(win, halo, slab, 0)
+            else:
+                xw, _ = local_scan(step, xw, picks)
+                own = jax.lax.dynamic_slice_in_dim(xw, row0, slab, 0)
             x2 = jax.lax.all_gather(own, axis, axis=0, tiled=True)
             if not with_metrics:
                 return x2, zero_m
@@ -852,11 +1024,12 @@ def _banded_gs(op, b, x0, xs, key, *, mesh, axis, rounds, local_steps, beta,
                   P(None, None), P(None, None)),
         out_specs=(P(axis, None), P(None, None), P(None, None)),
     )
-    return mapped(op.A_bands, b, round_keys, x0, xs)
+    return mapped(Ab, b, round_keys, x0, xs)
 
 
 def _halo_gs(op, b, x0, xs, key, *, mesh, axis, rounds, local_steps, beta,
-             with_metrics, num_workers, zero_m, local_scan, round_scan):
+             with_metrics, num_workers, zero_m, local_scan, round_scan,
+             fused=False):
     """Block-banded slab GS; neighbor halo exchange instead of all-gather.
 
     Iterates are IDENTICAL to the all-gather strategy — the gathered entries
@@ -864,6 +1037,11 @@ def _halo_gs(op, b, x0, xs, key, *, mesh, axis, rounds, local_steps, beta,
     ``xs`` is provided (computed slab-locally from the halo window) and NaN
     otherwise — pre-refactor this slot silently carried the squared
     residual (ISSUE 2 satellite).
+
+    ``fused=True`` hands the halo-padded window — already exactly the
+    sweep kernel's working-set shape — to one ``banded_gs_sweep`` launch
+    per round in place of the local-phase scan (bitwise-identical
+    iterates; border validity baked into zero-padded tiles).
     """
     block, bands, nb = op.block, op.bands, op.nb
     n, k = b.shape
@@ -872,6 +1050,7 @@ def _halo_gs(op, b, x0, xs, key, *, mesh, axis, rounds, local_steps, beta,
     halo = bands * block
     assert halo <= slab, "halo exchange needs bands*block <= slab"
     round_keys = jax.random.split(key, rounds)
+    Ab = _fused_band_tiles(op) if fused else op.A_bands
     down = [(i, i + 1) for i in range(num_workers - 1)]
     up = [(i + 1, i) for i in range(num_workers - 1)]
     have_xs = xs is not None
@@ -905,7 +1084,12 @@ def _halo_gs(op, b, x0, xs, key, *, mesh, axis, rounds, local_steps, beta,
                 return jax.lax.dynamic_update_slice_in_dim(
                     xw, cur + beta * g, r0, 0), None
 
-            xw, _ = local_scan(step, xw, picks)
+            if fused:
+                from repro.kernels import ops
+                xw = ops.banded_gs_sweep(Ab_sh, b_sh, xw, picks, block=block,
+                                         bands=bands, beta=beta)
+            else:
+                xw, _ = local_scan(step, xw, picks)
             xw = exchange(xw)
             if not with_metrics:
                 return xw, zero_m
@@ -936,7 +1120,7 @@ def _halo_gs(op, b, x0, xs, key, *, mesh, axis, rounds, local_steps, beta,
 
     in_specs = [P(axis, None, None, None), P(axis, None), P(axis, None),
                 P(None)]
-    args = [op.A_bands, b, x0, round_keys]
+    args = [Ab, b, x0, round_keys]
     if have_xs:
         in_specs.append(P(axis, None))
         args.append(xs)
@@ -1014,7 +1198,8 @@ def _dense_rk(A, b, x0, xs, key, *, mesh, axis, rounds, local_steps, beta,
 
 
 def _banded_rk(op, b, x0, xs, key, *, mesh, axis, rounds, local_steps, beta,
-               with_metrics, num_workers, zero_m, local_scan, round_scan):
+               with_metrics, num_workers, zero_m, local_scan, round_scan,
+               fused=False):
     """Block-banded Kaczmarz — the new point in the action×format grid.
 
     The row panel of a random block-row is sampled ∝ its squared Frobenius
@@ -1029,12 +1214,20 @@ def _banded_rk(op, b, x0, xs, key, *, mesh, axis, rounds, local_steps, beta,
     partitioned by owner), each worker carries its own updates fresh within
     a round, and synchronization is a delta psum with scheduled staleness
     ``local_steps - 1``.
+
+    ``fused=True`` runs the local phase as one ``banded_rk_sweep`` launch
+    per round: the worker's halo-padded windows of the replica AND of the
+    round delta stay VMEM-resident across all steps, the global pick
+    stream is pre-localized (clipped local id + ownership gate, both
+    scalar-prefetched), and foreign picks apply the same exact-zero
+    updates the scan's masked arithmetic does.
     """
     block, bands, nb = op.block, op.bands, op.nb
     width = op.width
     n = b.shape[0]
     slab = n // num_workers
     nb_local = slab // block
+    halo = bands * block
     assert nb * block == n and nb_local * block == slab
     rn = op.row_norms_sq()                                  # (nb, block)
     panel_w = jnp.sum(rn, axis=1)                           # (nb,) — raw
@@ -1042,6 +1235,7 @@ def _banded_rk(op, b, x0, xs, key, *, mesh, axis, rounds, local_steps, beta,
     rn = jnp.where(rn > 0, rn, 1.0)                         # divisor guard only
     picks = sample_rows(key, panel_w, rounds * local_steps).reshape(
         rounds, local_steps)
+    Ab = _fused_band_tiles(op) if fused else op.A_bands
 
     def worker(Ab_sh, b_sh, rn_sh, x0_full, xs_full, picks):
         # Ab_sh: (nb_local, width, block, block); rn_sh: (nb_local, block).
@@ -1082,7 +1276,30 @@ def _banded_rk(op, b, x0, xs, key, *, mesh, axis, rounds, local_steps, beta,
                 tiles = jax.lax.dynamic_slice_in_dim(Ab_sh, lic, 1, 0)[0]
                 return apply_panel(xw, delta, tiles, gb, gn), None
 
-            (xw, delta), _ = local_scan(step, (xw, delta), picks_r)
+            if fused:
+                from repro.kernels import ops
+                li = picks_r - w * nb_local
+                mine = (li >= 0) & (li < nb_local)
+                lic = jnp.clip(li, 0, nb_local - 1)
+                row0 = w * slab
+                xpad = jnp.pad(xw, ((halo, halo), (0, 0)))
+                dpad = jnp.pad(delta, ((halo, halo), (0, 0)))
+                xwin = jax.lax.dynamic_slice_in_dim(
+                    xpad, row0, slab + 2 * halo, 0)
+                dwin = jax.lax.dynamic_slice_in_dim(
+                    dpad, row0, slab + 2 * halo, 0)
+                xwin, dwin = ops.banded_rk_sweep(
+                    Ab_sh, b_sh, rn_sh, xwin, dwin, lic,
+                    mine.astype(jnp.int32), block=block, bands=bands,
+                    beta=beta)
+                xpad = jax.lax.dynamic_update_slice_in_dim(
+                    xpad, xwin, row0, 0)
+                dpad = jax.lax.dynamic_update_slice_in_dim(
+                    dpad, dwin, row0, 0)
+                xw = xpad[halo:halo + n]
+                delta = dpad[halo:halo + n]
+            else:
+                (xw, delta), _ = local_scan(step, (xw, delta), picks_r)
             if num_workers > 1:
                 xw = xw + (jax.lax.psum(delta, axis) - delta)
             if not with_metrics:
@@ -1107,7 +1324,7 @@ def _banded_rk(op, b, x0, xs, key, *, mesh, axis, rounds, local_steps, beta,
                   P(None, None), P(None, None), P(None, None)),
         out_specs=(P(None, None), P(None, None), P(None, None)),
     )
-    return mapped(op.A_bands, b, rn, x0, xs, picks)
+    return mapped(Ab, b, rn, x0, xs, picks)
 
 
 def _sparse_gs(op, b, x0, xs, key, *, mesh, axis, rounds, local_steps, beta,
@@ -1359,6 +1576,7 @@ def solve(
     gs_block: int = 1,
     x0: jax.Array | None = None,
     sync: str = "auto",
+    fused: bool | None = None,
     unroll: bool = False,
     with_metrics: bool = True,
     delay_key: jax.Array | None = None,
@@ -1374,11 +1592,15 @@ def solve(
     sequential / bounded-delay simulator / distributed execution (see
     ``Schedule``).  ``block``/``bands`` parameterize the banded format,
     ``width`` the ELL format, ``rows_per_panel`` the CSR panel layout, and
-    ``gs_block`` the dense/CSR block-GS action granularity.
+    ``gs_block`` the dense/CSR block-GS action granularity.  ``fused``
+    overrides ``schedule.fused`` (``None`` defers to the schedule): run
+    inner loops as fused Pallas sweep kernels where the action × format
+    has one, falling back to the per-step scan with a warning elsewhere.
     """
     if action is None:
         action = "rk" if hasattr(problem, "sigma_min") else "gs"
     schedule.validate()
+    use_fused = schedule.fused if fused is None else fused
     op = as_operator(problem.A, format, block=block, bands=bands, width=width,
                      rows_per_panel=rows_per_panel)
     if x0 is None:
@@ -1391,11 +1613,17 @@ def solve(
             op, problem.b, x0, problem.x_star, action=action, key=key,
             mesh=mesh, axis=axis, rounds=schedule.rounds,
             local_steps=schedule.local_steps, block=gs_block, beta=beta,
-            sync=sync, partition=schedule.partition, unroll=unroll,
-            with_metrics=with_metrics)
+            sync=sync, partition=schedule.partition, fused=use_fused,
+            unroll=unroll, with_metrics=with_metrics)
     if schedule.tau > 0:
         if delay_key is None:
             raise ValueError("the bounded-delay simulator needs a delay_key")
+        if use_fused:
+            warnings.warn(
+                "fused=True: the bounded-delay simulator has no fused "
+                "sweep path (its ring-buffer stale reads are inherently "
+                "per-step); running the scan simulator", UserWarning,
+                stacklevel=2)
         return solve_async_sim(
             op, problem.b, x0, problem.x_star, action=action, key=key,
             delay_key=delay_key, num_iters=schedule.num_iters,
@@ -1405,7 +1633,7 @@ def solve(
     return solve_sequential(
         op, problem.b, x0, problem.x_star, action=action, key=key,
         num_iters=schedule.num_iters, beta=beta, block=gs_block,
-        record_every=schedule.record_every)
+        record_every=schedule.record_every, fused=use_fused)
 
 
 __all__ = [

@@ -198,6 +198,31 @@ class BlockBandedOp:
         return banded_rows_matvec(self.A_bands, x, 0, self.nb, self.nb,
                                   self.block, self.bands)
 
+    def packed_band_tiles(self) -> jax.Array:
+        """Border tiles zero-padded for the fused sweep kernels (which
+        bake validity into the data instead of masking) — the single
+        packing definition the sequential ``gs_sweep`` and the engine's
+        three fused distributed banded strategies all share."""
+        from repro.kernels.banded_gs import pack_bands_local
+        return pack_bands_local(self.A_bands, 0, self.nb, self.nb,
+                                self.bands)
+
+    def gs_sweep(self, b, x, picks, *, beta: float = 1.0,
+                 interpret=None) -> jax.Array:
+        """Fused sequential block-GS sweep: ``len(picks)`` block-row
+        updates in one Pallas launch (kernels/banded_gs.py), the iterate
+        VMEM-resident throughout.  Border validity is baked into the data
+        (``packed_band_tiles``; ``dense_to_bands`` already stores border
+        tiles as zeros), so the arithmetic — and the iterate — is bitwise
+        the scan engine's."""
+        from repro.kernels import ops
+        halo = self.bands * self.block
+        xw = jnp.pad(x, ((halo, halo), (0, 0)))
+        xw = ops.banded_gs_sweep(self.packed_band_tiles(), b, xw, picks,
+                                 block=self.block, bands=self.bands,
+                                 beta=beta, interpret=interpret)
+        return xw[halo:halo + self.n]
+
     def row_panel(self, bi) -> jax.Array:
         """Dense (block, n) rows of block-row ``bi`` (diagnostic use)."""
         tiles = self.A_bands[bi]                       # (width, block, block)
@@ -306,6 +331,22 @@ class EllOp:
         """ELL already is the per-row padded-window form (CsrOp protocol)."""
         return self.vals, self.cols
 
+    def gs_sweep(self, b, x, picks, *, beta: float = 1.0,
+                 interpret=None) -> jax.Array:
+        """Fused sequential coordinate-GS sweep (kernels/sweep_ell.py)."""
+        from repro.kernels import ops
+        return ops.sweep_ell_gs(self.vals, self.cols, b, x, picks,
+                                beta=beta, interpret=interpret)
+
+    def rk_sweep(self, b, rn, x, picks, *, beta: float = 1.0,
+                 interpret=None) -> jax.Array:
+        """Fused sequential Kaczmarz sweep (kernels/sweep_ell.py).  ``rn``
+        is the caller's row-norm vector so the divisor matches the scan
+        engine's sampling distribution exactly."""
+        from repro.kernels import ops
+        return ops.sweep_ell_rk(self.vals, self.cols, b, rn, x, picks,
+                                beta=beta, interpret=interpret)
+
     def slab_neighbors(self, num_workers: int) -> np.ndarray:
         """Row-slab neighbor graph (host-side; see slab_neighbor_matrix).
         Memoized per worker count, like CsrOp."""
@@ -366,6 +407,7 @@ class CsrOp:
         self.panel_width = panel_width
         self._neighbors_cache: dict[int, np.ndarray] = {}
         self._panel_nnz_cache: jax.Array | None = None
+        self._sliced_cache: tuple[jax.Array, jax.Array] | None = None
 
     def tree_flatten(self):
         leaves = (self.data, self.indices, self.row_id, self.row_start,
@@ -451,13 +493,42 @@ class CsrOp:
         return None
 
     def matvec(self, x: jax.Array, *, interpret=None,
-               skip_empty: bool = False) -> jax.Array:
-        """``A @ x``.  ``skip_empty=True`` routes to the scalar-prefetch
-        kernel variant that predicates each grid step on the panel's nnz
-        count — empty panels (common after norm-balanced partitioning of
-        banded-structure matrices, or on very uneven row occupancy) write
-        zeros without gathering ``x`` or touching the MXU, and their input
-        DMA is remapped to the already-resident panel 0."""
+               skip_empty: bool | None = None) -> jax.Array:
+        """``A @ x`` via the sliced-ELL gather-accumulate kernel
+        (kernels/spmv_csr.py::spmv_csr_sliced) — the PR-5 overhaul that
+        retired the one-hot-matmul segment sum from the matvec path.
+
+        ``skip_empty`` picks the empty-panel predication (scalar-prefetched
+        per-panel nnz counts; empty panels — common after norm-balanced
+        partitioning of banded-structure matrices, or on very uneven row
+        occupancy — write zeros without gathering ``x``, and their input
+        DMA is remapped to the already-resident panel 0).  ``None`` (the
+        default) auto-selects: the predicated kernel when the stored
+        pattern actually has empty panels, the plain dense-panel kernel
+        otherwise (predication buys nothing when every panel is occupied).
+        Auto-selection needs concrete metadata; under jit the plain kernel
+        is used."""
+        from repro.kernels import ops
+        vals, cols = self.sliced_rows()
+        if skip_empty is None:
+            if isinstance(self.row_nnz, jax.core.Tracer):
+                skip_empty = False
+            else:
+                skip_empty = bool((np.asarray(self.panel_nnz()) == 0).any())
+        if skip_empty:
+            return ops.spmv_csr_sliced_prefetch(
+                vals, cols, self.panel_nnz(), x, m=self._shape[0],
+                rows_per_panel=self.rows_per_panel, interpret=interpret)
+        return ops.spmv_csr_sliced(vals, cols, x, m=self._shape[0],
+                                   rows_per_panel=self.rows_per_panel,
+                                   interpret=interpret)
+
+    def matvec_segsum(self, x: jax.Array, *, interpret=None,
+                      skip_empty: bool = False) -> jax.Array:
+        """The legacy segment-sum-as-one-hot-matmul matvec kernels, kept
+        as the measured contrast case (benchmarks/bench_kernels.py) and as
+        an independent second kernel implementation in the conformance
+        tests."""
         from repro.kernels import ops
         if skip_empty:
             return ops.spmv_csr_prefetch(
@@ -468,6 +539,27 @@ class CsrOp:
                             m=self._shape[0],
                             rows_per_panel=self.rows_per_panel,
                             panel_width=self.panel_width, interpret=interpret)
+
+    def sliced_rows(self) -> tuple[jax.Array, jax.Array]:
+        """Sliced-ELL view of the stored nonzeros: the ``padded_rows()``
+        windows padded to a lane-friendly width and to whole panels
+        (``num_panels * rows_per_panel`` rows), panel-major — what the
+        gather-accumulate matvec kernels stream.  Memoized host-side when
+        the leaves are concrete (the view is static metadata of the stored
+        pattern); recomputed in-graph under jit."""
+        if self._sliced_cache is not None:
+            return self._sliced_cache
+        R = self.rows_per_panel
+        m = self._shape[0]
+        mp = -(-max(m, 1) // R) * R
+        width = -(-self.row_cap // 8) * 8
+        vals, cols = self.padded_rows()
+        if width > self.row_cap or mp > m:
+            vals = jnp.pad(vals, ((0, mp - m), (0, width - self.row_cap)))
+            cols = jnp.pad(cols, ((0, mp - m), (0, width - self.row_cap)))
+        if not isinstance(self.data, jax.core.Tracer):
+            self._sliced_cache = (vals, cols)
+        return vals, cols
 
     def panel_nnz(self) -> jax.Array:
         """Per-panel stored-nonzero counts, shape (num_panels,) — the
@@ -537,6 +629,27 @@ class CsrOp:
         vals = jnp.where(mask, self.data[idx], 0.0)
         cols = jnp.where(mask, self.indices[idx], 0)
         return vals, cols
+
+    def gs_sweep(self, b, x, picks, *, beta: float = 1.0,
+                 interpret=None) -> jax.Array:
+        """Fused sequential coordinate-GS sweep (kernels/sweep_csr.py):
+        the row windows stream via scalar-prefetch index maps over the
+        ``padded_rows()`` form — the same masked windows ``row_dot``
+        reads, so the iterate is bitwise the scan engine's."""
+        from repro.kernels import ops
+        vals, cols = self.padded_rows()
+        return ops.sweep_rows_gs(vals, cols, b, x, picks, beta=beta,
+                                 interpret=interpret)
+
+    def rk_sweep(self, b, rn, x, picks, *, beta: float = 1.0,
+                 interpret=None) -> jax.Array:
+        """Fused sequential Kaczmarz sweep (kernels/sweep_csr.py).  ``rn``
+        is the caller's row-norm vector so the divisor matches the scan
+        engine's sampling distribution exactly."""
+        from repro.kernels import ops
+        vals, cols = self.padded_rows()
+        return ops.sweep_rows_rk(vals, cols, b, rn, x, picks, beta=beta,
+                                 interpret=interpret)
 
     def row_reach(self) -> jax.Array:
         """Per-row reach ``max_j |col_ij - i|`` — the per-row refinement of

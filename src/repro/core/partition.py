@@ -35,7 +35,9 @@ from repro.core.operators import CsrOp, EllOp
 __all__ = [
     "RowPermutation",
     "apply_partition",
+    "balanced_labels",
     "balanced_row_permutation",
+    "cross_slab_edges",
     "norm_balanced_assignment",
     "partition_permutation",
     "permute_rows",
@@ -101,8 +103,10 @@ def partition_permutation(labels, num_slabs: int) -> RowPermutation:
                           inv=jnp.asarray(inv, jnp.int32))
 
 
-def balanced_row_permutation(op, num_slabs: int) -> RowPermutation:
-    """Norm/nnz-balanced ``RowPermutation`` for a padded-row operator."""
+def balanced_labels(op, num_slabs: int) -> np.ndarray:
+    """Per-row slab labels of the norm/nnz-balanced assignment for a
+    padded-row operator — the single source the permutation AND the
+    diagnostics (``slab_norm_mass``, ``cross_slab_edges``) derive from."""
     if not hasattr(op, "padded_rows"):
         raise NotImplementedError(
             "balanced partitioning needs a padded-row format (CsrOp/EllOp); "
@@ -111,8 +115,56 @@ def balanced_row_permutation(op, num_slabs: int) -> RowPermutation:
     rn = np.asarray(op.row_norms_sq()).reshape(-1)
     vals, _ = op.padded_rows()
     nnz = (np.asarray(vals) != 0).sum(axis=1)
-    return partition_permutation(
-        norm_balanced_assignment(rn, nnz, num_slabs), num_slabs)
+    return norm_balanced_assignment(rn, nnz, num_slabs)
+
+
+def balanced_row_permutation(op, num_slabs: int) -> RowPermutation:
+    """Norm/nnz-balanced ``RowPermutation`` for a padded-row operator."""
+    return partition_permutation(balanced_labels(op, num_slabs), num_slabs)
+
+
+def cross_slab_edges(op, labels, num_slabs: int, *,
+                     col_labels=None) -> int:
+    """Count of stored nonzeros reaching outside their owner slab.
+
+    ``labels`` assigns each *row* to a slab (``labels[i]`` in
+    ``[0, num_slabs)`` — e.g. the output of ``norm_balanced_assignment``,
+    or ``arange(m) // (m // P)`` for the contiguous baseline).  A nonzero
+    ``(i, j)`` is a *cross-slab edge* when the column's owning slab differs
+    from the row's: by default columns are owned contiguously
+    (``j // (n / P)`` — the distributed engine's column-slab ownership,
+    which both RK delta syncs reduce onto); pass ``col_labels`` for a
+    square symmetric assignment where columns move with their rows.
+
+    This is the wire-volume side of the partition-quality trade-off: the
+    norm-balanced bin-packing of ``norm_balanced_assignment`` optimizes
+    sampling fidelity and per-round work but is free to scatter a row far
+    from the slabs it reads, and every cross-slab edge is a coefficient
+    the periodic sync must carry.  Reported per assignment by
+    ``benchmarks/bench_lsq.py::run_partitioned_rk`` — the measurement
+    groundwork for reach-aware bin-packing (minimize edges jointly with
+    norm mass).
+    """
+    if not hasattr(op, "padded_rows"):
+        raise NotImplementedError(
+            "cross_slab_edges needs a padded-row format (CsrOp/EllOp); "
+            f"got {type(op).__name__}")
+    m, n = op.shape
+    if n % num_slabs:
+        raise ValueError(
+            f"slab count ({num_slabs}) must divide the column count ({n}) "
+            "for contiguous column ownership")
+    labels = np.asarray(labels).reshape(-1)
+    if labels.shape != (m,):
+        raise ValueError(f"labels must assign every row: {labels.shape} "
+                         f"vs m={m}")
+    vals, cols = map(np.asarray, op.padded_rows())
+    if col_labels is None:
+        col_lab = cols // (n // num_slabs)
+    else:
+        col_lab = np.asarray(col_labels).reshape(-1)[cols]
+    real = vals != 0
+    return int((real & (labels[:, None] != col_lab)).sum())
 
 
 def slab_norm_mass(row_norms_sq, perm, num_slabs: int) -> np.ndarray:

@@ -10,12 +10,22 @@ from __future__ import annotations
 import jax
 
 from repro.kernels import ref
+from repro.kernels.banded_gs import (banded_gs_sweep as _banded_gs_sweep,
+                                     banded_rk_sweep as _banded_rk_sweep)
 from repro.kernels.bbmv import bbmv as _bbmv, dense_to_bands
 from repro.kernels.block_gs import block_gs_sweep as _block_gs_sweep
 from repro.kernels.decode_attention import decode_attention as _decode_attention
-from repro.kernels.spmv_csr import (spmv_csr as _spmv_csr,
-                                    spmv_csr_prefetch as _spmv_csr_prefetch)
+from repro.kernels.spmv_csr import (
+    spmv_csr as _spmv_csr,
+    spmv_csr_prefetch as _spmv_csr_prefetch,
+    spmv_csr_sliced as _spmv_csr_sliced,
+    spmv_csr_sliced_prefetch as _spmv_csr_sliced_prefetch,
+)
 from repro.kernels.spmv_ell import spmv_ell as _spmv_ell
+from repro.kernels.sweep_csr import (sweep_rows_gs as _sweep_rows_gs,
+                                     sweep_rows_rk as _sweep_rows_rk)
+from repro.kernels.sweep_ell import (sweep_ell_gs as _sweep_ell_gs,
+                                     sweep_ell_rk as _sweep_ell_rk)
 
 
 def _interp(interpret):
@@ -61,6 +71,63 @@ def spmv_csr_prefetch(data, indices, row_id, panel_nnz, x, *, m,
                               interpret=_interp(interpret))
 
 
+def spmv_csr_sliced(vals, cols, x, *, m, rows_per_panel, panels_per_tile=0,
+                    interpret=None):
+    """Gather-accumulate CSR matvec on the sliced-ELL view (the default
+    ``CsrOp.matvec`` path; no empty-panel predication)."""
+    return _spmv_csr_sliced(vals, cols, x, m=m, rows_per_panel=rows_per_panel,
+                            panels_per_tile=panels_per_tile,
+                            interpret=_interp(interpret))
+
+
+def spmv_csr_sliced_prefetch(vals, cols, panel_nnz, x, *, m, rows_per_panel,
+                             interpret=None):
+    """Empty-panel-skipping ``spmv_csr_sliced`` (scalar-prefetched nnz)."""
+    return _spmv_csr_sliced_prefetch(vals, cols, panel_nnz, x, m=m,
+                                     rows_per_panel=rows_per_panel,
+                                     interpret=_interp(interpret))
+
+
+def banded_gs_sweep(A_bands, b, xw, picks, *, block, bands, beta=1.0,
+                    interpret=None):
+    """Fused banded block-GS sweep (halo-padded window stays VMEM-resident;
+    picks scalar-prefetched)."""
+    return _banded_gs_sweep(A_bands, b, xw, picks, block=block, bands=bands,
+                            beta=beta, interpret=_interp(interpret))
+
+
+def banded_rk_sweep(A_bands, b, rn, xw, dw, picks, gates, *, block, bands,
+                    beta=1.0, interpret=None):
+    """Fused masked banded Kaczmarz sweep over (window, delta) carries."""
+    return _banded_rk_sweep(A_bands, b, rn, xw, dw, picks, gates, block=block,
+                            bands=bands, beta=beta,
+                            interpret=_interp(interpret))
+
+
+def sweep_rows_gs(vals, cols, b, x, picks, *, beta=1.0, interpret=None):
+    """Fused coordinate-GS sweep over padded sparse rows (CSR/ELL)."""
+    return _sweep_rows_gs(vals, cols, b, x, picks, beta=beta,
+                          interpret=_interp(interpret))
+
+
+def sweep_rows_rk(vals, cols, b, rn, x, picks, *, beta=1.0, interpret=None):
+    """Fused Kaczmarz sweep over padded sparse rows (CSR/ELL)."""
+    return _sweep_rows_rk(vals, cols, b, rn, x, picks, beta=beta,
+                          interpret=_interp(interpret))
+
+
+def sweep_ell_gs(vals, cols, b, x, picks, *, beta=1.0, interpret=None):
+    """Fused coordinate-GS sweep on ELL storage (kernels/sweep_ell.py)."""
+    return _sweep_ell_gs(vals, cols, b, x, picks, beta=beta,
+                         interpret=_interp(interpret))
+
+
+def sweep_ell_rk(vals, cols, b, rn, x, picks, *, beta=1.0, interpret=None):
+    """Fused Kaczmarz sweep on ELL storage (kernels/sweep_ell.py)."""
+    return _sweep_ell_rk(vals, cols, b, rn, x, picks, beta=beta,
+                         interpret=_interp(interpret))
+
+
 def decode_attention(q, k_cache, v_cache, lengths, *, chunk=512, interpret=None):
     if k_cache.shape[1] % chunk != 0:
         return ref.decode_attention_ref(q, k_cache, v_cache, lengths)
@@ -70,11 +137,19 @@ def decode_attention(q, k_cache, v_cache, lengths, *, chunk=512, interpret=None)
 
 
 __all__ = [
+    "banded_gs_sweep",
+    "banded_rk_sweep",
     "bbmv",
     "block_gs_sweep",
     "decode_attention",
     "dense_to_bands",
     "spmv_csr",
     "spmv_csr_prefetch",
+    "spmv_csr_sliced",
+    "spmv_csr_sliced_prefetch",
     "spmv_ell",
+    "sweep_ell_gs",
+    "sweep_ell_rk",
+    "sweep_rows_gs",
+    "sweep_rows_rk",
 ]

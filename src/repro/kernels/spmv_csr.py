@@ -1,20 +1,39 @@
-"""Pallas kernel: CSR SpMV via per-panel segment sums.
+"""Pallas kernels: CSR SpMV — sliced-ELL gather-accumulate (the default
+``CsrOp.matvec`` path) and the legacy per-panel segment-sum contrast.
 
 General compressed-sparse-row is the format the paper's reference scenario
 (unstructured sparsity, C1..C2 nonzeros per row) actually ships in.  The
-TPU-shaped layout here is *panel-aligned* CSR (see core.operators.CsrOp):
+TPU-shaped layout is *panel-aligned* CSR (see core.operators.CsrOp):
 nonzeros stay in row-major CSR order but each panel of ``rows_per_panel``
 consecutive rows is padded to a fixed nnz budget ``panel_width``, so the
 flat ``data``/``indices``/``row_id`` arrays reshape to
 ``(num_panels, panel_width)`` and stream HBM->VMEM contiguously.
 
-Within a kernel invocation the segment sum over a panel's rows is expressed
-as a one-hot matmul — ``onehot[(local_row, slot)] @ (data * x[cols])`` —
-which runs on the MXU instead of a scatter unit the TPU does not have.
-Padding slots carry ``data == 0`` so they contribute nothing wherever their
-``row_id`` points.  Gathers of ``x`` rows are the unavoidable CSR cost (the
-same cost spmv_ell pays); the contrast with the fully gather-free
-block-banded layout is quantified in benchmarks/bench_kernels.py.
+Two matvec strategies over that storage:
+
+* ``spmv_csr_sliced`` / ``spmv_csr_sliced_prefetch`` — the **default**
+  (PR 5): the matvec reads the *sliced-ELL view* of the same nonzeros
+  (``CsrOp.sliced_rows()``: per-row fixed-width value/column windows,
+  panel-major), gathers each slot's x row and accumulates with a plain
+  multiply-add contraction.  No one-hot matmul: the segment sum is free
+  because every slot already sits in its own row of the output tile, so
+  the per-panel flop count drops from Θ(rows_per_panel · panel_width · k)
+  MXU work to the Θ(nnz · k) the nonzeros actually require.  The
+  ``_prefetch`` variant folds in the PR-4 empty-panel predication
+  (scalar-prefetched per-panel nnz counts; empty panels skip the gather
+  and their input DMA is remapped to the resident panel 0).
+* ``spmv_csr`` / ``spmv_csr_prefetch`` — the legacy segment-sum-as-
+  one-hot-matmul kernels, kept as the measured contrast case
+  (benchmarks/bench_kernels.py ``csr_segsum``): expressing the segment
+  sum as ``onehot[(local_row, slot)] @ (data * x[cols])`` runs on the MXU
+  but pays a dense (rows_per_panel, panel_width) matmul per panel —
+  BENCH_kernels.json records it ~22x behind the block-banded layout at
+  equal nnz, which is what motivated the sliced overhaul.
+
+Padding slots carry ``data == 0`` so they contribute nothing in either
+strategy.  Gathers of ``x`` rows are the unavoidable CSR cost (the same
+cost spmv_ell pays); the contrast with the fully gather-free block-banded
+layout is quantified in benchmarks/bench_kernels.py.
 """
 from __future__ import annotations
 
@@ -173,4 +192,143 @@ def spmv_csr_prefetch(
                                        x.dtype),
         interpret=interpret,
     )(panel_nnz.astype(jnp.int32), vals2, cols2, rows2, x)
+    return y[:m]
+
+
+# ---------------------------------------------------------------------------
+# Sliced-ELL gather-accumulate kernels (the default CsrOp.matvec path)
+# ---------------------------------------------------------------------------
+
+def _sliced_body(vals_ref, cols_ref, x_ref, o_ref):
+    """Gather-accumulate over a tile of per-row windows.
+
+    Each output row is the contraction of its own value window with the
+    gathered x rows — the segment sum is implicit in the layout (one window
+    per output row), so no one-hot matmul and no scatter.  Padding slots
+    carry value 0 and column 0, contributing exact zeros.
+    """
+    x = x_ref[...]                                   # (n, k) resident in VMEM
+    vals = vals_ref[...]                             # (tile_rows, width)
+    cols = cols_ref[...]
+    xr = jnp.take(x, cols.reshape(-1), axis=0)       # (tile_rows*width, k)
+    xr = xr.reshape(cols.shape + (x.shape[1],))
+    o_ref[...] = jnp.einsum(
+        "rw,rwk->rk", vals.astype(jnp.float32), xr.astype(jnp.float32)
+    ).astype(o_ref.dtype)
+
+
+def _sliced_kernel(vals_ref, cols_ref, x_ref, o_ref):
+    _sliced_body(vals_ref, cols_ref, x_ref, o_ref)
+
+
+def _sliced_kernel_skip(nnz_ref, vals_ref, cols_ref, x_ref, o_ref):
+    """Predicated sliced kernel: panels with zero stored nonzeros skip the
+    gather and the contraction, writing zero output rows; their input DMA
+    is remapped to the already-resident panel 0 (see the index maps)."""
+    i = pl.program_id(0)
+
+    @pl.when(nnz_ref[i] > 0)
+    def _compute():
+        _sliced_body(vals_ref, cols_ref, x_ref, o_ref)
+
+    @pl.when(nnz_ref[i] == 0)
+    def _skip():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("m", "rows_per_panel", "panels_per_tile", "interpret"))
+def spmv_csr_sliced(
+    vals: jax.Array,
+    cols: jax.Array,
+    x: jax.Array,
+    *,
+    m: int,
+    rows_per_panel: int,
+    panels_per_tile: int = 0,
+    interpret: bool = False,
+) -> jax.Array:
+    """y = A @ x from the sliced-ELL view (``CsrOp.sliced_rows()``).
+
+    vals/cols: (num_panels * rows_per_panel, width) per-row windows with
+    global column ids (padding slots: value 0, column 0); x: (n, k).
+    ``panels_per_tile`` groups several panels per grid step (0 = auto: tile
+    ~128 rows) — the dense-panel fast path with no predication.
+    """
+    mp, width = vals.shape
+    n, k = x.shape
+    num_panels = -(-m // rows_per_panel)
+    assert mp == num_panels * rows_per_panel, (mp, num_panels, rows_per_panel)
+    G = panels_per_tile or max(1, 128 // rows_per_panel)
+    num_tiles = -(-num_panels // G)
+    tile_rows = G * rows_per_panel
+    pad = num_tiles * tile_rows - mp
+    if pad:
+        vals = jnp.pad(vals, ((0, pad), (0, 0)))
+        cols = jnp.pad(cols, ((0, pad), (0, 0)))
+
+    y = pl.pallas_call(
+        _sliced_kernel,
+        grid=(num_tiles,),
+        in_specs=[
+            pl.BlockSpec((tile_rows, width), lambda i: (i, 0)),
+            pl.BlockSpec((tile_rows, width), lambda i: (i, 0)),
+            pl.BlockSpec((n, k), lambda i: (0, 0)),
+        ],
+        out_specs=pl.BlockSpec((tile_rows, k), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((num_tiles * tile_rows, k), x.dtype),
+        interpret=interpret,
+    )(vals, cols, x)
+    return y[:m]
+
+
+@functools.partial(
+    jax.jit, static_argnames=("m", "rows_per_panel", "interpret"))
+def spmv_csr_sliced_prefetch(
+    vals: jax.Array,
+    cols: jax.Array,
+    panel_nnz: jax.Array,
+    x: jax.Array,
+    *,
+    m: int,
+    rows_per_panel: int,
+    interpret: bool = False,
+) -> jax.Array:
+    """``spmv_csr_sliced`` with empty-panel skipping via scalar prefetch.
+
+    One grid step per panel (the skip granularity of ``panel_nnz``): the
+    per-panel nnz counts are prefetched ahead of the grid, so both the
+    input index maps and the kernel predicate see them before a panel's
+    windows move — an empty panel costs neither the x gather nor the
+    contraction nor a fresh window DMA (its index maps revisit panel 0).
+    Output rows of empty panels are written as zeros, so the result is
+    bitwise the unpredicated kernel's.
+    """
+    mp, width = vals.shape
+    n, k = x.shape
+    num_panels = -(-m // rows_per_panel)
+    assert mp == num_panels * rows_per_panel, (mp, num_panels, rows_per_panel)
+    assert panel_nnz.shape == (num_panels,), (panel_nnz.shape, num_panels)
+
+    def panel_or_zero(i, nnz):
+        return (jnp.where(nnz[i] > 0, i, 0), 0)
+
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=1,
+        grid=(num_panels,),
+        in_specs=[
+            pl.BlockSpec((rows_per_panel, width), panel_or_zero),
+            pl.BlockSpec((rows_per_panel, width), panel_or_zero),
+            pl.BlockSpec((n, k), lambda i, nnz: (0, 0)),
+        ],
+        out_specs=pl.BlockSpec((rows_per_panel, k), lambda i, nnz: (i, 0)),
+    )
+    y = pl.pallas_call(
+        _sliced_kernel_skip,
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((num_panels * rows_per_panel, k),
+                                       x.dtype),
+        interpret=interpret,
+    )(panel_nnz.astype(jnp.int32), vals, cols, x)
     return y[:m]

@@ -1,0 +1,165 @@
+"""Pallas TPU kernels: fused GS/RK sweeps over padded sparse rows.
+
+The engine's sequential inner loop executes one row action per
+``lax.scan`` step, round-tripping the whole iterate through HBM between
+steps — per-update overhead the paper's cost model (per-nonzero, Sec. 4-5)
+assumes away, and exactly what Chow et al.'s asynchronous-Richardson
+argument says kills asynchronous methods in practice.  These kernels run an
+*entire sweep* (``len(picks)`` sequential row updates) in a single Pallas
+launch:
+
+* the iterate ``x`` stays resident in VMEM across all steps (the BlockSpec
+  maps the full array at every grid step, so nothing is re-fetched and
+  step s+1 sees step s's update — sequential semantics, tau = 0);
+* the pre-sampled pick sequence is **scalar-prefetched**, so the per-step
+  row window (values, global column ids), b row, and row norm stream
+  HBM->VMEM through prefetch-driven index maps — the per-step HBM traffic
+  is exactly the picked row's Θ(width) window and nothing else.
+
+The row storage is the *padded-row* form shared by ``CsrOp.padded_rows()``
+and ``EllOp`` (``kernels/sweep_ell.py`` is the ELL-named sibling): per-row
+fixed-width value/column windows with global column ids, padding slots
+carrying value 0 / column 0 so they contribute exact zeros.
+
+Actions (arithmetic transplanted from ``core.engine.solve_sequential`` —
+the GS sweep is bitwise the scan engine's update order):
+
+* GS  — ``gamma = b[r] - <A_r, x>``; ``x[r] += beta * gamma``;
+* RK  — ``g = (b[r] - <A_r, x>) / ||A_r||²``; ``x[cols_r] += beta * A_r g``
+  (the scatter runs as ``width`` sequential dynamic row updates — VMEM
+  read-modify-writes, not an HBM scatter).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _gs_kernel(idx_ref, vals_ref, cols_ref, b_ref, x_ref, o_ref, *,
+               beta: float):
+    s = pl.program_id(0)
+
+    @pl.when(s == 0)
+    def _init():
+        o_ref[...] = x_ref[...]
+
+    r = idx_ref[s]
+    vals = vals_ref[0]                               # (width,)
+    cols = cols_ref[0]
+    xg = jnp.take(o_ref[...], cols, axis=0)          # (width, k) gather
+    gamma = b_ref[0] - jnp.einsum("w,wk->k", vals, xg)
+    cur = o_ref[pl.ds(r, 1), :]
+    o_ref[pl.ds(r, 1), :] = cur + beta * gamma[None, :]
+
+
+def _rk_kernel(idx_ref, vals_ref, cols_ref, b_ref, rn_ref, x_ref, o_ref, *,
+               beta: float, width: int):
+    s = pl.program_id(0)
+
+    @pl.when(s == 0)
+    def _init():
+        o_ref[...] = x_ref[...]
+
+    vals = vals_ref[0]                               # (width,)
+    cols = cols_ref[0]
+    xg = jnp.take(o_ref[...], cols, axis=0)          # (width, k) gather
+    g = (b_ref[0] - jnp.einsum("w,wk->k", vals, xg)) / rn_ref[0, 0]
+    # Scatter A_r^T g back as `width` sequential single-row RMWs in VMEM.
+    # Real columns of one row are distinct; padding slots (value 0) add
+    # exact zeros wherever they land, so the result matches x.at[cols].add.
+    for j in range(width):
+        c = cols[j]
+        cur = o_ref[pl.ds(c, 1), :]
+        o_ref[pl.ds(c, 1), :] = cur + (beta * vals[j]) * g[None, :]
+
+
+@functools.partial(jax.jit, static_argnames=("beta", "interpret"))
+def sweep_rows_gs(
+    vals: jax.Array,
+    cols: jax.Array,
+    b: jax.Array,
+    x: jax.Array,
+    picks: jax.Array,
+    *,
+    beta: float = 1.0,
+    interpret: bool = False,
+) -> jax.Array:
+    """Apply ``len(picks)`` sequential coordinate-GS row updates; returns x.
+
+    vals/cols: (m, width) padded row windows (global column ids);
+    b: (m, k); x: (n, k); picks: (steps,) int32 row ids in [0, m).
+    """
+    m, width = vals.shape
+    n, k = x.shape
+    assert b.shape[0] == m
+    steps = picks.shape[0]
+    if steps == 0:
+        return x
+
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=1,
+        grid=(steps,),
+        in_specs=[
+            pl.BlockSpec((1, width), lambda s, idx: (idx[s], 0)),
+            pl.BlockSpec((1, width), lambda s, idx: (idx[s], 0)),
+            pl.BlockSpec((1, k), lambda s, idx: (idx[s], 0)),
+            pl.BlockSpec((n, k), lambda s, idx: (0, 0)),
+        ],
+        out_specs=pl.BlockSpec((n, k), lambda s, idx: (0, 0)),
+    )
+    return pl.pallas_call(
+        functools.partial(_gs_kernel, beta=beta),
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((n, k), x.dtype),
+        interpret=interpret,
+    )(picks.astype(jnp.int32), vals, cols, b, x)
+
+
+@functools.partial(jax.jit, static_argnames=("beta", "interpret"))
+def sweep_rows_rk(
+    vals: jax.Array,
+    cols: jax.Array,
+    b: jax.Array,
+    rn: jax.Array,
+    x: jax.Array,
+    picks: jax.Array,
+    *,
+    beta: float = 1.0,
+    interpret: bool = False,
+) -> jax.Array:
+    """Apply ``len(picks)`` sequential Kaczmarz row updates; returns x.
+
+    vals/cols: (m, width) padded row windows; b: (m, k); rn: (m,) squared
+    row norms (the caller's sampling distribution — passed in so the
+    divisor matches the scan engine's bit-for-bit); x: (n, k);
+    picks: (steps,) int32 row ids in [0, m).
+    """
+    m, width = vals.shape
+    n, k = x.shape
+    assert b.shape[0] == m and rn.shape == (m,)
+    steps = picks.shape[0]
+    if steps == 0:
+        return x
+
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=1,
+        grid=(steps,),
+        in_specs=[
+            pl.BlockSpec((1, width), lambda s, idx: (idx[s], 0)),
+            pl.BlockSpec((1, width), lambda s, idx: (idx[s], 0)),
+            pl.BlockSpec((1, k), lambda s, idx: (idx[s], 0)),
+            pl.BlockSpec((1, 1), lambda s, idx: (idx[s], 0)),
+            pl.BlockSpec((n, k), lambda s, idx: (0, 0)),
+        ],
+        out_specs=pl.BlockSpec((n, k), lambda s, idx: (0, 0)),
+    )
+    return pl.pallas_call(
+        functools.partial(_rk_kernel, beta=beta, width=width),
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((n, k), x.dtype),
+        interpret=interpret,
+    )(picks.astype(jnp.int32), vals, cols, b, rn.reshape(m, 1), x)

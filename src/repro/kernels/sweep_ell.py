@@ -1,0 +1,31 @@
+"""Fused GS/RK sweeps for the ELLPACK layout — the sibling of
+``kernels/sweep_csr.py``, and the module ``EllOp.gs_sweep``/``rk_sweep``
+route through (via ``kernels.ops``).
+
+ELL *is* the padded-row form the sweep kernels consume (``EllOp.vals`` /
+``EllOp.cols`` are per-row fixed-width value/column windows with global
+column ids and zero-valued padding — exactly what ``CsrOp.padded_rows()``
+reconstructs from the panel-aligned flat layout), so the sibling shares
+the kernel bodies and exists to make the format pairing explicit: an
+``EllOp`` sweep streams its stored windows directly, with no intermediate
+view to build.
+"""
+from __future__ import annotations
+
+import jax
+
+from repro.kernels.sweep_csr import sweep_rows_gs, sweep_rows_rk
+
+
+def sweep_ell_gs(vals, cols, b, x, picks, *, beta: float = 1.0,
+                 interpret: bool = False) -> jax.Array:
+    """``sweep_rows_gs`` on ELL storage (vals/cols: (n, width))."""
+    return sweep_rows_gs(vals, cols, b, x, picks, beta=beta,
+                         interpret=interpret)
+
+
+def sweep_ell_rk(vals, cols, b, rn, x, picks, *, beta: float = 1.0,
+                 interpret: bool = False) -> jax.Array:
+    """``sweep_rows_rk`` on ELL storage (vals/cols: (m, width))."""
+    return sweep_rows_rk(vals, cols, b, rn, x, picks, beta=beta,
+                         interpret=interpret)

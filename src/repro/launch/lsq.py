@@ -60,6 +60,11 @@ def main(argv=None):
                          "row permutation (csr format), restoring the "
                          "global Strohmer-Vershynin row law under "
                          "per-worker local sampling")
+    ap.add_argument("--fused", action="store_true",
+                    help="run inner loops as fused Pallas sweep kernels "
+                         "(csr format: the whole record chunk in one "
+                         "launch, iterate VMEM-resident); falls back to "
+                         "the per-step scan with a warning elsewhere")
     ap.add_argument("--workers", type=int, default=0,
                     help="0 = all local devices")
     ap.add_argument("--local-steps", type=int, default=0,
@@ -89,10 +94,11 @@ def main(argv=None):
     iters = args.sweeps * m
     t0 = time.time()
     res = solve(prob, key=jax.random.key(1), format=args.format,
-                schedule=Schedule(num_iters=iters, record_every=m))
+                schedule=Schedule(num_iters=iters, record_every=m,
+                                  fused=args.fused))
     jax.block_until_ready(res.x)
-    print(f"  seq RK     : {args.sweeps} sweeps, relresid "
-          f"{float(jnp.linalg.norm(res.resid[-1]))/bn:.3e} "
+    print(f"  seq RK     : {args.sweeps} sweeps, fused={args.fused} "
+          f"relresid {float(jnp.linalg.norm(res.resid[-1]))/bn:.3e} "
           f"({time.time()-t0:.1f}s)")
 
     rho_rk = float(theory.rk_rho(prob.A))
@@ -123,7 +129,8 @@ def main(argv=None):
     pres = solve(prob, key=jax.random.key(1), mesh=mesh, beta=pbeta,
                  format=args.format, sync=args.rk_sync,
                  schedule=Schedule(rounds=rounds, local_steps=local_steps,
-                                   partition=args.partition))
+                                   partition=args.partition,
+                                   fused=args.fused))
     jax.block_until_ready(pres.x)
     sampling = "local" if args.format == "csr" else "global-stream"
     print(f"  par RK     : P={workers} tau={ptau} beta~={pbeta:.3f} "

@@ -44,6 +44,11 @@ def main(argv=None):
                     help="distributed slab assignment: 'balanced' bin-packs "
                          "rows by norm mass and nnz into the P slabs via a "
                          "symmetric row permutation (CSR/ELL formats)")
+    ap.add_argument("--fused", action="store_true",
+                    help="run inner loops as fused Pallas sweep kernels "
+                         "(iterate VMEM-resident, picks scalar-prefetched) "
+                         "where the action x format has one; falls back to "
+                         "the per-step scan with a warning elsewhere")
     ap.add_argument("--workers", type=int, default=0,
                     help="0 = all local devices")
     ap.add_argument("--local-steps", type=int, default=0,
@@ -79,9 +84,11 @@ def main(argv=None):
     t0 = time.time()
     res = solve(prob, key=jax.random.key(1), format=args.format,
                 width=args.ell_width,
-                schedule=Schedule(num_iters=iters, record_every=n))
+                schedule=Schedule(num_iters=iters, record_every=n,
+                                  fused=args.fused))
     jax.block_until_ready(res.x)
-    print(f"  sync RGS   : {args.sweeps} sweeps, resid {float(res.resid[-1,0]):.3e} "
+    print(f"  sync RGS   : {args.sweeps} sweeps, fused={args.fused} "
+          f"resid {float(res.resid[-1,0]):.3e} "
           f"({time.time()-t0:.1f}s)")
 
     workers = args.workers or len(jax.devices())
@@ -94,7 +101,8 @@ def main(argv=None):
     pres = solve(prob, key=jax.random.key(2), mesh=mesh, beta=beta,
                  format=args.format, width=args.ell_width, sync=args.sync,
                  schedule=Schedule(rounds=rounds, local_steps=local_steps,
-                                   partition=args.partition))
+                                   partition=args.partition,
+                                   fused=args.fused))
     jax.block_until_ready(pres.x)
     print(f"  async RGS  : P={workers} tau={tau} beta~={beta:.3f} "
           f"format={args.format} sync={args.sync} "

@@ -20,9 +20,17 @@ method never needs.
 
 A full run persists its records (wall-clock, relresid trajectories, problem
 dims, P/tau) to BENCH_lsq.json at the repo root so later PRs can diff the
-perf trajectory.
+perf trajectory.  The ``overlap_tau`` section (``run_overlap_tau``, forced
+4-device subprocess) records scheduled vs measured staleness for the
+overlapped-sync variants and the theory quantities at both.
 """
 from __future__ import annotations
+
+import json
+import os
+import subprocess
+import sys
+import textwrap
 
 import jax
 import jax.numpy as jnp
@@ -270,11 +278,104 @@ def run_partitioned_rk(m: int = 2048, n: int = 512, row_nnz: int = 16,
     return out
 
 
+_OVERLAP_TAU_SCRIPT = """
+import json
+import jax, jax.numpy as jnp, numpy as np
+from repro.core import CsrOp, random_sparse_spd, theory
+from repro.core.engine import scheduled_tau, solve_distributed
+from repro.launch.mesh import make_host_mesh
+
+P, L, rounds = {workers}, {local_steps}, {rounds}
+prob = random_sparse_spd({n}, row_nnz={row_nnz}, n_rhs={rhs}, seed={seed})
+op = CsrOp.from_dense(prob.A)
+x0 = jnp.zeros_like(prob.x_star)
+mesh = make_host_mesh(P)
+rho = float(theory.rho(prob.A))
+out = {{"workers": P, "local_steps": L, "rounds": rounds, "rho": rho}}
+for action, fused in (("gs", True), ("rk", True)):
+    local_sampling = action == "rk"
+    tau_lock = scheduled_tau(P, L, local_sampling=local_sampling)
+    res = {{}}
+    for overlap in (False, True):
+        r = solve_distributed(op, prob.b, x0, prob.x_star, action=action,
+                              key=jax.random.key(1), mesh=mesh,
+                              rounds=rounds, local_steps=L, beta={beta},
+                              fused=fused, overlap=overlap)
+        jax.block_until_ready(r.x)
+        rec = {{"tau_scheduled": int(r.tau),
+               "err_first": float(r.err_sq[0].max()),
+               "err_last": float(r.err_sq[-1].max()),
+               "beta_opt": theory.beta_opt(rho, int(r.tau))}}
+        if overlap:
+            lag = np.asarray(r.lag)
+            # measured staleness: in-flight payload + lockstep interleave
+            rec["lag_trace_head"] = lag[:4].tolist()
+            rec["lag_steady"] = int(lag[1:].max()) if rounds > 1 else 0
+            rec["tau_empirical"] = int(lag.max()) + tau_lock
+            rec["bound_holds"] = rec["tau_empirical"] <= int(r.tau)
+            rec["beta_opt_empirical"] = theory.beta_opt(
+                rho, rec["tau_empirical"])
+            rec["nu_tau_at_beta"] = theory.nu_tau(rho, rec["tau_empirical"],
+                                                  {beta})
+        res["overlap" if overlap else "lockstep"] = rec
+    out[action] = res
+print("OVERLAP_TAU_JSON " + json.dumps(out))
+"""
+
+
+def run_overlap_tau(n: int = 256, row_nnz: int = 8, rhs: int = 4,
+                    rounds: int = 30, local_steps: int = 8,
+                    beta: float = 0.9, seed: int = 2, workers: int = 4):
+    """Scheduled vs measured staleness for the overlapped-sync variants
+    (ISSUE 6 tentpole): runs sparse GS / sparse RK lockstep and overlapped
+    on a forced-``workers``-device host mesh (fresh interpreter — XLA's
+    device count is fixed at import) and reports the per-round lag trace,
+    the empirical tau it implies, and the theory quantities
+    (``beta_opt``, ``nu_tau``) at both the scheduled bound and the
+    measured staleness.  The scheduled bound must dominate the measured
+    trace — that is the contract the overlap term of ``scheduled_tau``
+    encodes.
+    """
+    script = ("import os\n"
+              f'os.environ["XLA_FLAGS"] = '
+              f'"--xla_force_host_platform_device_count={workers}"\n'
+              + _OVERLAP_TAU_SCRIPT.format(
+                  workers=workers, local_steps=local_steps, rounds=rounds,
+                  n=n, row_nnz=row_nnz, rhs=rhs, seed=seed, beta=beta))
+    env = dict(os.environ, PYTHONPATH="src", JAX_PLATFORMS="cpu")
+    proc = subprocess.run([sys.executable, "-c", script], env=env,
+                          capture_output=True, text=True, timeout=900)
+    if proc.returncode != 0:
+        raise RuntimeError(f"overlap-tau subprocess failed:\n"
+                           f"{proc.stderr[-3000:]}")
+    line = next(l for l in proc.stdout.splitlines()
+                if l.startswith("OVERLAP_TAU_JSON "))
+    out = json.loads(line[len("OVERLAP_TAU_JSON "):])
+    for action in ("gs", "rk"):
+        ov, lk = out[action]["overlap"], out[action]["lockstep"]
+        if not ov["bound_holds"]:
+            raise RuntimeError(
+                f"measured tau {ov['tau_empirical']} exceeds scheduled "
+                f"bound {ov['tau_scheduled']} for {action}")
+        emit("bench_lsq_overlap_tau", action=action, workers=workers,
+             local_steps=local_steps, tau_lockstep=lk["tau_scheduled"],
+             tau_overlap=ov["tau_scheduled"],
+             tau_empirical=ov["tau_empirical"],
+             lag_steady=ov["lag_steady"],
+             beta_opt_scheduled=f"{ov['beta_opt']:.4f}",
+             beta_opt_empirical=f"{ov['beta_opt_empirical']:.4f}",
+             nu_tau_at_beta=f"{ov['nu_tau_at_beta']:.4f}",
+             err_last_lockstep=f"{lk['err_last']:.3e}",
+             err_last_overlap=f"{ov['err_last']:.3e}")
+    return out
+
+
 if __name__ == "__main__":
     payload = {
         "lsq": run(),
         "banded_rk": run_banded_rk(),
         "csr_rk": run_csr_rk(),
         "partitioned_rk": run_partitioned_rk(),
+        "overlap_tau": run_overlap_tau(),
     }
     write_json("lsq", payload)

@@ -66,6 +66,13 @@ class ParallelSolveResult(NamedTuple):
     err_sq: jax.Array   # (rounds, k)
     resid: jax.Array    # (rounds, k)
     tau: int            # effective staleness bound of the schedule
+    #: per-round measured exchange lag (overlap=True only, else None):
+    #: lag[r] = max over workers of the foreign updates committed by the end
+    #: of round r-1 that the worker's round-r reads do NOT see.  The
+    #: empirical staleness of a run is ``max(lag) + scheduled_tau(...)``
+    #: with ``overlap=False`` (the in-round term), which the schedule
+    #: guarantees is <= ``scheduled_tau(..., overlap=True)`` == ``tau``.
+    lag: jax.Array | None = None
 
 
 # ---------------------------------------------------------------------------
@@ -74,7 +81,8 @@ class ParallelSolveResult(NamedTuple):
 
 def scheduled_tau(num_workers: int, local_steps: int, *,
                   shared_stream: bool = False,
-                  local_sampling: bool = False) -> int:
+                  local_sampling: bool = False,
+                  overlap: bool = False) -> int:
     """Staleness bound of the periodic-synchronization schedule.
 
     ``shared_stream=False`` (per-worker direction streams, the RGS scheme):
@@ -92,13 +100,33 @@ def scheduled_tau(num_workers: int, local_steps: int, *,
     and the shared-stream bound applies to that length —
     tau = P * local_steps - 1.  This is the single source of truth for the
     rule; the engine, CLIs, and benchmarks all route through it.
+
+    ``overlap=True`` (double-buffered sync, ``Schedule(overlap=True)``):
+    round r's exchange is issued concurrently with round r+1's local
+    sweep, so a worker's reads additionally miss the *previous round's*
+    foreign updates — the bound grows by exactly that payload:
+
+    * per-worker streams: the other P-1 workers' full previous round,
+      + (P - 1) * local_steps;
+    * shared stream: the whole previous round of the stream,
+      + local_steps;
+    * local sampling: the other workers' previous-round picks,
+      + (P - 1) * local_steps.
+
+    At P = 1 there is nothing in flight and the term is 0.
     """
+    extra = 0
+    if overlap and num_workers > 1:
+        if local_sampling or not shared_stream:
+            extra = (num_workers - 1) * local_steps
+        else:
+            extra = local_steps
     if local_sampling:
         shared_stream = True
         local_steps = num_workers * local_steps
     if shared_stream:
-        return 0 if num_workers == 1 else local_steps - 1
-    return (num_workers - 1) * local_steps
+        return extra + (0 if num_workers == 1 else local_steps - 1)
+    return extra + (num_workers - 1) * local_steps
 
 
 class Schedule(NamedTuple):
@@ -121,6 +149,13 @@ class Schedule(NamedTuple):
     Action × format combinations without a sweep kernel fall back to the
     scan engine with a ``UserWarning``; supported combinations produce
     iterates matching the scan engine (GS bitwise, RK to roundoff).
+
+    ``overlap`` (distributed only) double-buffers the sync: round r's
+    halo / a2a / delta exchange is issued concurrently with round r+1's
+    local sweep, so workers read one-round-staler remote slabs and the
+    scheduled staleness grows by the quantified overlap term of
+    ``scheduled_tau``.  Strategies without an overlapped variant fall
+    back to lockstep rounds with a ``UserWarning`` (exact fallback).
     """
     num_iters: int = 0
     rounds: int = 0
@@ -129,6 +164,7 @@ class Schedule(NamedTuple):
     record_every: int = 0
     partition: str = "contiguous"
     fused: bool = False
+    overlap: bool = False
 
     @property
     def distributed(self) -> bool:
@@ -167,6 +203,11 @@ class Schedule(NamedTuple):
                 raise ValueError(
                     "partition='balanced' is a distributed-schedule option "
                     f"(slab assignment needs rounds/local_steps) — got {self}")
+            if self.overlap:
+                raise ValueError(
+                    "overlap=True is a distributed-schedule option (the "
+                    "double-buffered sync needs rounds/local_steps) — got "
+                    f"{self}")
         return self
 
     def effective_tau(self, num_workers: int, *, shared_stream: bool = False,
@@ -174,7 +215,8 @@ class Schedule(NamedTuple):
         if self.distributed:
             return scheduled_tau(num_workers, self.local_steps,
                                  shared_stream=shared_stream,
-                                 local_sampling=local_sampling)
+                                 local_sampling=local_sampling,
+                                 overlap=self.overlap)
         return self.tau
 
 
@@ -244,6 +286,14 @@ def _warn_fused_fallback(op, action, detail=""):
         "engine", UserWarning, stacklevel=3)
 
 
+def _warn_overlap_fallback(op, action, kind):
+    warnings.warn(
+        f"overlap=True: the {kind!r} strategy (action={action!r} x "
+        f"{type(op).__name__}) has no overlapped-sync variant; running "
+        "lockstep rounds (exact fallback — iterates unchanged)",
+        UserWarning, stacklevel=3)
+
+
 def solve_sequential(
     op,
     b: jax.Array,
@@ -302,8 +352,18 @@ def _sequential_fused_impl(
 ) -> SolveResult:
     """Fused-sweep twin of ``_sequential_scan_impl``: identical pick
     streams and record points, but each record chunk runs as a single
-    Pallas launch.  ``beta`` is static — it is baked into the sweep kernel
-    as a compile-time constant."""
+    Pallas launch.
+
+    ``beta`` is DELIBERATELY static here (its scan twin traces it): the
+    sweep kernels bake the step size into the kernel body as a
+    compile-time constant — a scalar operand would ride the scalar-
+    prefetch channel and change every kernel's signature for a value
+    that is fixed for the lifetime of a solve.  The visible consequence
+    is one recompilation per distinct ``beta``; solves sweep few betas
+    (one, or theory.beta_opt per tau), so the cache stays small.  The
+    contract is pinned by a compile-count test
+    (tests/test_engine_overlap.py::test_fused_beta_static_recompiles).
+    """
     rec = record_every or num_iters
     if num_iters % rec != 0:
         raise ValueError(
@@ -606,6 +666,7 @@ def solve_distributed(
     sync: str = "auto",
     partition: str = "contiguous",
     fused: bool = False,
+    overlap: bool = False,
     unroll: bool = False,
     with_metrics: bool = True,
 ) -> ParallelSolveResult:
@@ -617,8 +678,24 @@ def solve_distributed(
     halo syncs (``kernels/banded_gs.banded_gs_sweep``, bitwise-identical
     iterates) and banded RK (``banded_rk_sweep``, the masked
     Cimmino-within-panel action over VMEM-resident window + delta
-    carries).  Strategies without a fused local phase fall back to the
-    per-step scan with a ``UserWarning``.
+    carries) — and on the sparse strategies: sparse slab GS
+    (``sweep_rows_gs`` with the slab's traced write base scalar-
+    prefetched; bitwise-identical iterates) and sparse local-sampling RK
+    (``sweep_rows_rk_delta``, the two-carry replica+delta sweep, iterates
+    to roundoff).  Strategies without a fused local phase fall back to
+    the per-step scan with a ``UserWarning``.
+
+    ``overlap=True`` double-buffers the synchronization: round r's
+    exchange payload (halo edges / slab rotations / round delta) is the
+    one captured at the END of round r-1, so the collective has no data
+    dependency on round r's sweep and XLA is free to run them
+    concurrently — workers read remote state that is one round staler,
+    and the scheduled tau grows by ``scheduled_tau``'s overlap term.
+    Overlapped variants exist for the ``halo_gs``, ``sparse_gs`` and
+    ``sparse_rk`` strategies (``_OVERLAP_STRATEGIES``); others fall back
+    to lockstep rounds with a ``UserWarning`` (exact fallback).  The
+    result's ``lag`` field then carries the measured per-round staleness
+    trace (see ``ParallelSolveResult``).
 
     The sync collective is chosen from the operator's layout metadata when
     ``sync="auto"``: a finite halo (block-banded) means neighbor halo
@@ -686,6 +763,9 @@ def solve_distributed(
     if fused and kind not in _FUSED_STRATEGIES:
         _warn_fused_fallback(op, action, f" under the {kind!r} strategy")
         fused = False
+    if overlap and kind not in _OVERLAP_STRATEGIES:
+        _warn_overlap_fallback(op, action, kind)
+        overlap = False
 
     a2a_schedule, a2a_masks = (), None
     if sync == "a2a" and kind == "sparse_gs":
@@ -762,7 +842,7 @@ def solve_distributed(
         kind, op, b, x0, x_star, key, mesh=mesh, axis=axis, rounds=rounds,
         local_steps=local_steps, block=block, beta=beta, unroll=unroll,
         with_metrics=with_metrics, sync=sync, a2a_schedule=a2a_schedule,
-        a2a_masks=a2a_masks, fused=fused)
+        a2a_masks=a2a_masks, fused=fused, overlap=overlap)
     if row_perm is not None and action == "gs":
         # Undo the symmetric permutation on the returned iterate (the "rk"
         # iterate lives in column space and was never permuted).
@@ -790,7 +870,13 @@ _DISTRIBUTED_STRATEGIES = {
 }
 
 #: strategies whose local phase has a fused Pallas sweep.
-_FUSED_STRATEGIES = frozenset({"banded_gs", "halo_gs", "banded_rk"})
+_FUSED_STRATEGIES = frozenset(
+    {"banded_gs", "halo_gs", "banded_rk", "sparse_gs", "sparse_rk"})
+
+#: strategies with a double-buffered (overlapped) sync variant: the round-r
+#: exchange payload is captured at the end of round r-1, so the collective
+#: carries no data dependency on round r's local sweep.
+_OVERLAP_STRATEGIES = frozenset({"halo_gs", "sparse_gs", "sparse_rk"})
 
 
 def _fused_band_tiles(op):
@@ -803,12 +889,12 @@ def _fused_band_tiles(op):
     jax.jit,
     static_argnames=("kind", "mesh", "axis", "rounds", "local_steps", "block",
                      "beta", "unroll", "with_metrics", "sync",
-                     "a2a_schedule", "fused"),
+                     "a2a_schedule", "fused", "overlap"),
 )
 def _distributed_impl(kind, op, b, x0, xs, key, *, mesh, axis, rounds,
                       local_steps, block, beta, unroll, with_metrics,
                       sync="allgather", a2a_schedule=(), a2a_masks=None,
-                      fused=False):
+                      fused=False, overlap=False):
     num_workers = mesh.shape[axis]
     k = b.shape[1]
     zero_m = (jnp.zeros((k,), jnp.float32), jnp.zeros((k,), jnp.float32))
@@ -823,8 +909,10 @@ def _distributed_impl(kind, op, b, x0, xs, key, *, mesh, axis, rounds,
 
     tau = scheduled_tau(num_workers, local_steps,
                         shared_stream=kind.endswith("_rk"),
-                        local_sampling=kind == "sparse_rk")
+                        local_sampling=kind == "sparse_rk",
+                        overlap=overlap)
 
+    lag = None
     if kind == "dense_gs":
         x, errs, resids = _dense_gs(
             op.A, b, x0, xs, key, mesh=mesh, axis=axis, rounds=rounds,
@@ -838,11 +926,11 @@ def _distributed_impl(kind, op, b, x0, xs, key, *, mesh, axis, rounds,
             num_workers=num_workers, zero_m=zero_m, local_scan=local_scan,
             round_scan=round_scan, fused=fused)
     elif kind == "halo_gs":
-        x, errs, resids = _halo_gs(
+        x, errs, resids, lag = _halo_gs(
             op, b, x0, xs, key, mesh=mesh, axis=axis, rounds=rounds,
             local_steps=local_steps, beta=beta, with_metrics=with_metrics,
             num_workers=num_workers, zero_m=zero_m, local_scan=local_scan,
-            round_scan=round_scan, fused=fused)
+            round_scan=round_scan, fused=fused, overlap=overlap)
     elif kind == "dense_rk":
         x, errs, resids = _dense_rk(
             op.A, b, x0, xs, key, mesh=mesh, axis=axis, rounds=rounds,
@@ -856,23 +944,24 @@ def _distributed_impl(kind, op, b, x0, xs, key, *, mesh, axis, rounds,
             num_workers=num_workers, zero_m=zero_m, local_scan=local_scan,
             round_scan=round_scan, fused=fused)
     elif kind == "sparse_gs":
-        x, errs, resids = _sparse_gs(
+        x, errs, resids, lag = _sparse_gs(
             op, b, x0, xs, key, mesh=mesh, axis=axis, rounds=rounds,
             local_steps=local_steps, beta=beta, with_metrics=with_metrics,
             num_workers=num_workers, zero_m=zero_m, local_scan=local_scan,
             round_scan=round_scan, sync=sync, a2a_schedule=a2a_schedule,
-            a2a_masks=a2a_masks)
+            a2a_masks=a2a_masks, fused=fused, overlap=overlap)
     elif kind == "sparse_rk":
-        x, errs, resids = _sparse_rk(
+        x, errs, resids, lag = _sparse_rk(
             op, b, x0, xs, key, mesh=mesh, axis=axis, rounds=rounds,
             local_steps=local_steps, beta=beta, with_metrics=with_metrics,
             num_workers=num_workers, zero_m=zero_m, local_scan=local_scan,
             round_scan=round_scan, sync=sync, a2a_schedule=a2a_schedule,
-            a2a_masks=a2a_masks)
+            a2a_masks=a2a_masks, fused=fused, overlap=overlap)
     else:  # pragma: no cover - guarded by solve_distributed
         raise ValueError(kind)
 
-    return ParallelSolveResult(x=x, err_sq=errs, resid=resids, tau=tau)
+    return ParallelSolveResult(x=x, err_sq=errs, resid=resids, tau=tau,
+                               lag=lag)
 
 
 def _dense_gs(A, b, x0, xs, key, *, mesh, axis, rounds, local_steps, block,
@@ -916,10 +1005,15 @@ def _dense_gs(A, b, x0, xs, key, *, mesh, axis, rounds, local_steps, block,
             x2 = x + jax.lax.all_gather(delta, axis, axis=0, tiled=True)
             if not with_metrics:
                 return x2, zero_m
-            e_local = (jax.lax.dynamic_slice_in_dim(x2, col0, slab, 0)
-                       - jax.lax.dynamic_slice_in_dim(xs_full, col0, slab, 0))
-            err = jax.lax.psum(
-                jnp.einsum("sk,sk->k", e_local, A_sh @ (x2 - xs_full)), axis)
+            if xs_full is not None:
+                e_local = (jax.lax.dynamic_slice_in_dim(x2, col0, slab, 0)
+                           - jax.lax.dynamic_slice_in_dim(xs_full, col0,
+                                                          slab, 0))
+                err = jax.lax.psum(
+                    jnp.einsum("sk,sk->k", e_local, A_sh @ (x2 - xs_full)),
+                    axis)
+            else:
+                err = jnp.full((b_sh.shape[1],), jnp.nan, jnp.float32)
             r_local = b_sh - A_sh @ x2
             rsq = jax.lax.psum(jnp.einsum("sk,sk->k", r_local, r_local), axis)
             return x2, (err, jnp.sqrt(rsq))
@@ -1009,7 +1103,7 @@ def _banded_gs(op, b, x0, xs, key, *, mesh, axis, rounds, local_steps, beta,
                                    bands))),
                     axis)
             else:
-                esq = rsq
+                esq = jnp.full((b_sh.shape[1],), jnp.nan, jnp.float32)
             return x2, (esq, jnp.sqrt(rsq))
 
         x, (errs, resids) = round_scan(round_body, pvary(x0_full, (axis,)),
@@ -1029,7 +1123,7 @@ def _banded_gs(op, b, x0, xs, key, *, mesh, axis, rounds, local_steps, beta,
 
 def _halo_gs(op, b, x0, xs, key, *, mesh, axis, rounds, local_steps, beta,
              with_metrics, num_workers, zero_m, local_scan, round_scan,
-             fused=False):
+             fused=False, overlap=False):
     """Block-banded slab GS; neighbor halo exchange instead of all-gather.
 
     Iterates are IDENTICAL to the all-gather strategy — the gathered entries
@@ -1042,6 +1136,13 @@ def _halo_gs(op, b, x0, xs, key, *, mesh, axis, rounds, local_steps, beta,
     sweep kernel's working-set shape — to one ``banded_gs_sweep`` launch
     per round in place of the local-phase scan (bitwise-identical
     iterates; border validity baked into zero-padded tiles).
+
+    ``overlap=True`` double-buffers the halo exchange: the edges installed
+    during round r are the ones CAPTURED at the end of round r-1 (carried
+    through the round scan), so the two ppermutes have no data dependency
+    on round r's sweep and XLA can run them concurrently — the halos a
+    sweep reads are one round staler, and staleness counters measure the
+    resulting lag (see ``ParallelSolveResult.lag``).
     """
     block, bands, nb = op.block, op.bands, op.nb
     n, k = b.shape
@@ -1058,20 +1159,22 @@ def _halo_gs(op, b, x0, xs, key, *, mesh, axis, rounds, local_steps, beta,
     def worker(Ab_sh, b_sh, x0_sh, keys, *maybe_xs):
         w = jax.lax.axis_index(axis)
 
-        def exchange(xw):
-            own = jax.lax.dynamic_slice_in_dim(xw, halo, slab, 0)
-            lo_edge = own[:halo]          # my top rows -> prev worker's hi halo
-            hi_edge = own[-halo:]         # my bottom rows -> next worker's lo halo
+        def install(xw, lo_edge, hi_edge):
+            # lo/hi_edge: my top/bottom owned rows -> neighbors' halos.
             from_prev = jax.lax.ppermute(hi_edge, axis, down)   # w-1's bottom
             from_next = jax.lax.ppermute(lo_edge, axis, up)     # w+1's top
             xw = jax.lax.dynamic_update_slice_in_dim(xw, from_prev, 0, 0)
             return jax.lax.dynamic_update_slice_in_dim(
                 xw, from_next, halo + slab, 0)
 
+        def exchange(xw):
+            own = jax.lax.dynamic_slice_in_dim(xw, halo, slab, 0)
+            return install(xw, own[:halo], own[-halo:])
+
         if have_xs:
             xs_w = exchange(jnp.pad(maybe_xs[0], ((halo, halo), (0, 0))))
 
-        def round_body(xw, rkey):
+        def local_phase(xw, rkey):
             rkey = jax.random.fold_in(rkey, w)
             picks = jax.random.randint(rkey, (local_steps,), 0, nb_local)
 
@@ -1086,19 +1189,27 @@ def _halo_gs(op, b, x0, xs, key, *, mesh, axis, rounds, local_steps, beta,
 
             if fused:
                 from repro.kernels import ops
-                xw = ops.banded_gs_sweep(Ab_sh, b_sh, xw, picks, block=block,
-                                         bands=bands, beta=beta)
-            else:
-                xw, _ = local_scan(step, xw, picks)
-            xw = exchange(xw)
+                return ops.banded_gs_sweep(Ab_sh, b_sh, xw, picks,
+                                           block=block, bands=bands,
+                                           beta=beta)
+            xw, _ = local_scan(step, xw, picks)
+            return xw
+
+        def metrics(xw):
             if not with_metrics:
-                return xw, zero_m
-            resid2 = jnp.zeros((k,), jnp.float32)
-            for bi in range(nb_local):
-                r = banded_panel_residual_window(
+                return zero_m
+            # Vectorized residual: vmap the per-panel window residual, then
+            # accumulate the per-panel squared sums LEFT-TO-RIGHT via scan —
+            # bitwise the old Python loop's grouping (a fused jnp.sum would
+            # reassociate), with O(1) trace size instead of O(nb_local).
+            r_all = jax.vmap(
+                lambda bi: banded_panel_residual_window(
                     Ab_sh, b_sh, xw, bi, w * nb_local + bi, nb, slab, block,
-                    bands).astype(jnp.float32)
-                resid2 = resid2 + jnp.einsum("bk,bk->k", r, r)
+                    bands).astype(jnp.float32))(jnp.arange(nb_local))
+            part = jnp.einsum("nbk,nbk->nk", r_all, r_all)
+            resid2, _ = jax.lax.scan(
+                lambda acc, p: (acc + p, None),
+                jnp.zeros((k,), jnp.float32), part)
             rsq = jax.lax.psum(resid2, axis)
             if have_xs:
                 # A-norm error from the window: e^T A e = sum over owned
@@ -1111,10 +1222,45 @@ def _halo_gs(op, b, x0, xs, key, *, mesh, axis, rounds, local_steps, beta,
                     jnp.einsum("sk,sk->k", e_own, Ae_own), axis)
             else:
                 esq = jnp.full((k,), jnp.nan, jnp.float32)
-            return xw, (esq, jnp.sqrt(rsq))
+            return esq, jnp.sqrt(rsq)
 
         xw0 = jnp.pad(x0_sh, ((halo, halo), (0, 0)))
         xw0 = exchange(xw0)
+
+        if overlap:
+            foreign = jnp.arange(num_workers) != w
+
+            def round_body(carry, rkey):
+                xw, lo_prev, hi_prev, cnt, seen = carry
+                # cnt carried in == updates committed by the end of the
+                # previous round == the count of the in-flight payload, so
+                # one all_gather serves both the payload's bookkeeping and
+                # the lag measurement.
+                cnt_all = jax.lax.all_gather(cnt, axis)
+                lag = jax.lax.pmax(
+                    jnp.sum(jnp.where(foreign, cnt_all - seen, 0)), axis)
+                seen = jnp.where(foreign, cnt_all, seen)
+                cnt = cnt + local_steps
+                xw = local_phase(xw, rkey)          # halos one round stale
+                xw = install(xw, lo_prev, hi_prev)  # in-flight edges land
+                own = jax.lax.dynamic_slice_in_dim(xw, halo, slab, 0)
+                return ((xw, own[:halo], own[-halo:], cnt, seen),
+                        (metrics(xw), lag))
+
+            own0 = jax.lax.dynamic_slice_in_dim(xw0, halo, slab, 0)
+            cnt0 = pvary(jnp.zeros((), jnp.int32), (axis,))
+            seen0 = pvary(jnp.zeros((num_workers,), jnp.int32), (axis,))
+            carry0 = (xw0, own0[:halo], own0[-halo:], cnt0, seen0)
+            (xw, *_), ((errs, resids), lags) = round_scan(
+                round_body, carry0, keys)
+            return (jax.lax.dynamic_slice_in_dim(xw, halo, slab, 0),
+                    errs, resids, lags)
+
+        def round_body(xw, rkey):
+            xw = local_phase(xw, rkey)
+            xw = exchange(xw)
+            return xw, metrics(xw)
+
         xw, (errs, resids) = round_scan(round_body, xw0, keys)
         return jax.lax.dynamic_slice_in_dim(xw, halo, slab, 0), errs, resids
 
@@ -1124,13 +1270,17 @@ def _halo_gs(op, b, x0, xs, key, *, mesh, axis, rounds, local_steps, beta,
     if have_xs:
         in_specs.append(P(axis, None))
         args.append(xs)
+    out_specs = [P(axis, None), P(None, None), P(None, None)]
+    if overlap:
+        out_specs.append(P(None))
     mapped = shard_map(
         worker,
         mesh=mesh,
         in_specs=tuple(in_specs),
-        out_specs=(P(axis, None), P(None, None), P(None, None)),
+        out_specs=tuple(out_specs),
     )
-    return mapped(*args)
+    out = mapped(*args)
+    return out if overlap else out + (None,)
 
 
 def _dense_rk(A, b, x0, xs, key, *, mesh, axis, rounds, local_steps, beta,
@@ -1178,7 +1328,10 @@ def _dense_rk(A, b, x0, xs, key, *, mesh, axis, rounds, local_steps, beta,
                 return xw, zero_m
             # xw is a full replica, so the error is local; residual rows are
             # sharded, so the squared norm needs a psum.
-            err = jnp.einsum("nk,nk->k", xw - xs_full, xw - xs_full)
+            if xs_full is not None:
+                err = jnp.einsum("nk,nk->k", xw - xs_full, xw - xs_full)
+            else:
+                err = jnp.full((b_sh.shape[1],), jnp.nan, jnp.float32)
             r_local = b_sh - A_sh @ xw
             rsq = jax.lax.psum(jnp.einsum("sk,sk->k", r_local, r_local), axis)
             return xw, (err, jnp.sqrt(rsq))
@@ -1329,7 +1482,7 @@ def _banded_rk(op, b, x0, xs, key, *, mesh, axis, rounds, local_steps, beta,
 
 def _sparse_gs(op, b, x0, xs, key, *, mesh, axis, rounds, local_steps, beta,
                with_metrics, num_workers, zero_m, local_scan, round_scan,
-               sync, a2a_schedule, a2a_masks):
+               sync, a2a_schedule, a2a_masks, fused=False, overlap=False):
     """Row-sparse slab GS (CsrOp / EllOp) — the format-generic strategy.
 
     Each worker owns a slab of rows in padded-row form (fixed-width
@@ -1341,6 +1494,18 @@ def _sparse_gs(op, b, x0, xs, key, *, mesh, axis, rounds, local_steps, beta,
     sending a worker's slab only to the workers whose rows actually read
     it.  Iterates are IDENTICAL to the all-gather strategy — the slabs a2a
     leaves stale are never read.
+
+    ``fused=True`` runs the local phase as one ``sweep_rows_gs`` launch
+    per round: the replica stays VMEM-resident across all ``local_steps``
+    updates and the slab offset rides the scalar-prefetch channel as the
+    kernel's write base (it is traced — ``axis_index`` under shard_map).
+    The arithmetic is the scan step's, so iterates are bitwise identical.
+
+    ``overlap=True`` exchanges the own slab captured at the END of round
+    r-1 (carried through the round scan) while round r's sweep runs on
+    remote slabs that are one round staler; the a2a rotations never write
+    the own slab, and the all-gather path splices the fresh own rows back
+    over the stale gather.  Staleness counters measure the per-round lag.
     """
     n, k = b.shape
     if n % num_workers:
@@ -1357,10 +1522,19 @@ def _sparse_gs(op, b, x0, xs, key, *, mesh, axis, rounds, local_steps, beta,
         w = jax.lax.axis_index(axis)
         row0 = w * slab
 
-        def refresh(xw):
-            own = jax.lax.dynamic_slice_in_dim(xw, row0, slab, 0)
+        def refresh(xw, own_prev=None):
+            """own_prev=None: lockstep (exchange this round's own slab);
+            otherwise install the in-flight previous-round payload."""
+            own = (jax.lax.dynamic_slice_in_dim(xw, row0, slab, 0)
+                   if own_prev is None else own_prev)
             if sync == "allgather":
-                return jax.lax.all_gather(own, axis, axis=0, tiled=True)
+                x2 = jax.lax.all_gather(own, axis, axis=0, tiled=True)
+                if own_prev is None:
+                    return x2
+                fresh = jax.lax.dynamic_slice_in_dim(xw, row0, slab, 0)
+                return jax.lax.dynamic_update_slice_in_dim(x2, fresh, row0, 0)
+            # a2a rotations only ever write remote slabs (shift != 0), so
+            # the fresh own slab survives either way.
             for si, (shift, perm) in enumerate(a2a_schedule):
                 recv = jax.lax.ppermute(own, axis, perm)
                 src0 = ((w - shift) % num_workers) * slab
@@ -1369,9 +1543,13 @@ def _sparse_gs(op, b, x0, xs, key, *, mesh, axis, rounds, local_steps, beta,
                 xw = jax.lax.dynamic_update_slice_in_dim(xw, upd, src0, 0)
             return xw
 
-        def round_body(xw, rkey):
+        def local_phase(xw, rkey):
             rkey = jax.random.fold_in(rkey, w)
             picks = jax.random.randint(rkey, (local_steps,), 0, slab)
+            if fused:
+                from repro.kernels import ops
+                return ops.sweep_rows_gs(vals_sh, cols_sh, b_sh, xw, picks,
+                                         beta=beta, write_base=row0)
 
             def step(xw, li):
                 g = b_sh[li] - jnp.einsum("w,wk->k", vals_sh[li],
@@ -1379,9 +1557,11 @@ def _sparse_gs(op, b, x0, xs, key, *, mesh, axis, rounds, local_steps, beta,
                 return xw.at[row0 + li].add(beta * g), None
 
             xw, _ = local_scan(step, xw, picks)
-            xw = refresh(xw)
+            return xw
+
+        def metrics(xw):
             if not with_metrics:
-                return xw, zero_m
+                return zero_m
             # Both metric reductions only read the slabs this worker's rows
             # reference, so they are exact under a2a as well.
             r_local = b_sh - jnp.einsum("sw,swk->sk", vals_sh, xw[cols_sh])
@@ -1394,26 +1574,60 @@ def _sparse_gs(op, b, x0, xs, key, *, mesh, axis, rounds, local_steps, beta,
                                    axis)
             else:
                 esq = jnp.full((k,), jnp.nan, jnp.float32)
-            return xw, (esq, jnp.sqrt(rsq))
+            return esq, jnp.sqrt(rsq)
+
+        if overlap:
+            foreign = jnp.arange(num_workers) != w
+
+            def round_body(carry, rkey):
+                xw, own_prev, cnt, seen = carry
+                cnt_all = jax.lax.all_gather(cnt, axis)
+                lag = jax.lax.pmax(
+                    jnp.sum(jnp.where(foreign, cnt_all - seen, 0)), axis)
+                seen = jnp.where(foreign, cnt_all, seen)
+                cnt = cnt + local_steps
+                xw = local_phase(xw, rkey)   # remote slabs one round stale
+                xw = refresh(xw, own_prev)   # in-flight payload lands
+                own = jax.lax.dynamic_slice_in_dim(xw, row0, slab, 0)
+                return (xw, own, cnt, seen), (metrics(xw), lag)
+
+            xw0 = pvary(x0_full, (axis,))
+            own0 = jax.lax.dynamic_slice_in_dim(xw0, row0, slab, 0)
+            cnt0 = pvary(jnp.zeros((), jnp.int32), (axis,))
+            seen0 = pvary(jnp.zeros((num_workers,), jnp.int32), (axis,))
+            (xw, *_), ((errs, resids), lags) = round_scan(
+                round_body, (xw0, own0, cnt0, seen0), keys)
+            x_slab = jax.lax.dynamic_slice_in_dim(xw, row0, slab, 0)
+            return x_slab, errs, resids, lags
+
+        def round_body(xw, rkey):
+            xw = local_phase(xw, rkey)
+            xw = refresh(xw)
+            return xw, metrics(xw)
 
         xw, (errs, resids) = round_scan(round_body, pvary(x0_full, (axis,)),
                                         keys)
         x_slab = jax.lax.dynamic_slice_in_dim(xw, row0, slab, 0)
         return x_slab, errs, resids
 
+    out_specs = [P(axis, None), P(None, None), P(None, None)]
+    if overlap:
+        out_specs.append(P(None))
     mapped = shard_map(
         worker,
         mesh=mesh,
         in_specs=(P(axis, None), P(axis, None), P(axis, None),
                   P(axis, None), P(None), P(None, None), P(None, None)),
-        out_specs=(P(axis, None), P(None, None), P(None, None)),
+        out_specs=tuple(out_specs),
     )
-    return mapped(vals, cols, b, a2a_masks, round_keys, x0, xs)
+    out = mapped(vals, cols, b, a2a_masks, round_keys, x0, xs)
+    return out if overlap else out + (None,)
 
 
 def _sparse_rk(op, b, x0, xs, key, *, mesh, axis, rounds, local_steps, beta,
                with_metrics, num_workers, zero_m, local_scan, round_scan,
-               sync="psum", a2a_schedule=(), a2a_masks=None):
+               sync="psum", a2a_schedule=(), a2a_masks=None, fused=False,
+               overlap=False):
     """Row-sparse Kaczmarz with per-worker LOCAL sampling (CsrOp / EllOp).
 
     The wall-clock-faithful scheme: each worker samples its ``local_steps``
@@ -1441,6 +1655,20 @@ def _sparse_rk(op, b, x0, xs, key, *, mesh, axis, rounds, local_steps, beta,
     references stay stale — they are never read, and the returned iterate
     is assembled from the owners' slabs, so iterates and metrics are
     bitwise identical to the psum sync at a fraction of its wire volume.
+
+    ``fused=True`` runs the local phase as one ``sweep_rows_rk_delta``
+    launch per round: BOTH carries — the working replica and the round's
+    delta — stay VMEM-resident across all ``local_steps`` updates (the
+    ``banded_rk_sweep`` two-carry pattern on padded rows); iterates match
+    the scan to roundoff (the kernel's per-column scatter is a sequence of
+    row RMWs where the scan uses one segment scatter).
+
+    ``overlap=True`` exchanges the delta ACCUMULATED IN round r-1 (carried
+    through the round scan) while round r's sweep accumulates a fresh one,
+    so foreign updates land one round late; the final round's delta is
+    flushed with one trailing exchange after the scan so the returned
+    iterate contains every update.  Staleness counters measure the
+    per-round lag.
     """
     m, k = b.shape
     n = x0.shape[0]
@@ -1505,10 +1733,15 @@ def _sparse_rk(op, b, x0, xs, key, *, mesh, axis, rounds, local_steps, beta,
                     xw, jnp.where(masks_sh[0, si], upd, cur), src * cs, 0)
             return xw
 
-        def round_body(xw, rkey):
+        def local_phase(xw, rkey):
             rkey = jax.random.fold_in(rkey, w)
             picks = sample_rows(rkey, rn_sh, local_steps)
             delta = pvary(jnp.zeros_like(xw), (axis,))
+            if fused:
+                from repro.kernels import ops
+                return ops.sweep_rows_rk_delta(
+                    vals_sh, cols_sh, b_sh, rn_safe, xw, delta, picks,
+                    beta=beta)
 
             def step(carry, li):
                 xw, delta = carry
@@ -1518,9 +1751,11 @@ def _sparse_rk(op, b, x0, xs, key, *, mesh, axis, rounds, local_steps, beta,
                 return (xw.at[cr].add(upd), delta.at[cr].add(upd)), None
 
             (xw, delta), _ = local_scan(step, (xw, delta), picks)
-            xw = refresh(xw, delta)
+            return xw, delta
+
+        def metrics(xw):
             if not with_metrics:
-                return xw, zero_m
+                return zero_m
             if xs_full is None:
                 err = jnp.full((k,), jnp.nan, jnp.float32)
             elif cs is not None:
@@ -1534,7 +1769,39 @@ def _sparse_rk(op, b, x0, xs, key, *, mesh, axis, rounds, local_steps, beta,
                 err = jnp.einsum("nk,nk->k", xw - xs_full, xw - xs_full)
             r_local = b_sh - jnp.einsum("sw,swk->sk", vals_sh, xw[cols_sh])
             rsq = jax.lax.psum(jnp.einsum("sk,sk->k", r_local, r_local), axis)
-            return xw, (err, jnp.sqrt(rsq))
+            return err, jnp.sqrt(rsq)
+
+        if overlap:
+            foreign = jnp.arange(num_workers) != w
+
+            def round_body(carry, rkey):
+                xw, dprev, cnt, seen = carry
+                cnt_all = jax.lax.all_gather(cnt, axis)
+                lag = jax.lax.pmax(
+                    jnp.sum(jnp.where(foreign, cnt_all - seen, 0)), axis)
+                seen = jnp.where(foreign, cnt_all, seen)
+                cnt = cnt + local_steps
+                xw, delta = local_phase(xw, rkey)
+                xw = refresh(xw, dprev)      # previous round's deltas land
+                return (xw, delta, cnt, seen), (metrics(xw), lag)
+
+            xw0 = pvary(x0_full, (axis,))
+            d0 = pvary(jnp.zeros_like(xw0), (axis,))
+            cnt0 = pvary(jnp.zeros((), jnp.int32), (axis,))
+            seen0 = pvary(jnp.zeros((num_workers,), jnp.int32), (axis,))
+            (xw, dlast, *_), ((errs, resids), lags) = round_scan(
+                round_body, (xw0, d0, cnt0, seen0), keys)
+            # Flush the final round's in-flight delta so the returned
+            # iterate contains every update.
+            xw = refresh(xw, dlast)
+            if use_a2a:
+                return col_slab(xw, w), errs, resids, lags
+            return xw, errs, resids, lags
+
+        def round_body(xw, rkey):
+            xw, delta = local_phase(xw, rkey)
+            xw = refresh(xw, delta)
+            return xw, metrics(xw)
 
         xw, (errs, resids) = round_scan(round_body, pvary(x0_full, (axis,)),
                                         keys)
@@ -1544,15 +1811,19 @@ def _sparse_rk(op, b, x0, xs, key, *, mesh, axis, rounds, local_steps, beta,
             return col_slab(xw, w), errs, resids
         return xw, errs, resids
 
+    out_specs = [P(axis, None) if use_a2a else P(None, None),
+                 P(None, None), P(None, None)]
+    if overlap:
+        out_specs.append(P(None))
     mapped = shard_map(
         worker,
         mesh=mesh,
         in_specs=(P(axis, None), P(axis, None), P(axis, None), P(axis),
                   P(axis, None), P(None), P(None, None), P(None, None)),
-        out_specs=(P(axis, None) if use_a2a else P(None, None),
-                   P(None, None), P(None, None)),
+        out_specs=tuple(out_specs),
     )
-    return mapped(vals, cols, b, rn, a2a_masks, round_keys, x0, xs)
+    out = mapped(vals, cols, b, rn, a2a_masks, round_keys, x0, xs)
+    return out if overlap else out + (None,)
 
 
 # ---------------------------------------------------------------------------
@@ -1614,7 +1885,8 @@ def solve(
             mesh=mesh, axis=axis, rounds=schedule.rounds,
             local_steps=schedule.local_steps, block=gs_block, beta=beta,
             sync=sync, partition=schedule.partition, fused=use_fused,
-            unroll=unroll, with_metrics=with_metrics)
+            overlap=schedule.overlap, unroll=unroll,
+            with_metrics=with_metrics)
     if schedule.tau > 0:
         if delay_key is None:
             raise ValueError("the bounded-delay simulator needs a delay_key")

@@ -331,12 +331,14 @@ class EllOp:
         """ELL already is the per-row padded-window form (CsrOp protocol)."""
         return self.vals, self.cols
 
-    def gs_sweep(self, b, x, picks, *, beta: float = 1.0,
+    def gs_sweep(self, b, x, picks, *, beta: float = 1.0, write_base=0,
                  interpret=None) -> jax.Array:
-        """Fused sequential coordinate-GS sweep (kernels/sweep_ell.py)."""
+        """Fused sequential coordinate-GS sweep (kernels/sweep_ell.py).
+        ``write_base`` offsets writes for distributed slab-local phases."""
         from repro.kernels import ops
         return ops.sweep_ell_gs(self.vals, self.cols, b, x, picks,
-                                beta=beta, interpret=interpret)
+                                beta=beta, write_base=write_base,
+                                interpret=interpret)
 
     def rk_sweep(self, b, rn, x, picks, *, beta: float = 1.0,
                  interpret=None) -> jax.Array:
@@ -630,15 +632,17 @@ class CsrOp:
         cols = jnp.where(mask, self.indices[idx], 0)
         return vals, cols
 
-    def gs_sweep(self, b, x, picks, *, beta: float = 1.0,
+    def gs_sweep(self, b, x, picks, *, beta: float = 1.0, write_base=0,
                  interpret=None) -> jax.Array:
         """Fused sequential coordinate-GS sweep (kernels/sweep_csr.py):
         the row windows stream via scalar-prefetch index maps over the
         ``padded_rows()`` form — the same masked windows ``row_dot``
-        reads, so the iterate is bitwise the scan engine's."""
+        reads, so the iterate is bitwise the scan engine's.
+        ``write_base`` offsets writes for distributed slab-local phases."""
         from repro.kernels import ops
         vals, cols = self.padded_rows()
         return ops.sweep_rows_gs(vals, cols, b, x, picks, beta=beta,
+                                 write_base=write_base,
                                  interpret=interpret)
 
     def rk_sweep(self, b, rn, x, picks, *, beta: float = 1.0,

@@ -98,13 +98,31 @@ def beta_opt_inconsistent(rho2_val: float, tau: int) -> float:
     return 1.0 / (2.0 + rho2_val * tau**2)
 
 
+def _check_lam_max(lam_max: float, n: int, where: str) -> None:
+    """Both epoch formulas need 0 < lam_max/n < 1 (they take logs/negative
+    powers of 1 - lam_max/n).  lam_max == n is REACHABLE for a valid
+    unit-diagonal SPD matrix (e.g. the all-ones rank-one-plus-identity
+    family pushes lam_max -> n), where the expressions silently degenerate
+    — a math domain error from ``log`` or a garbage ``0 ** -2tau`` —
+    so reject with the actual constraint instead."""
+    if not 0.0 < lam_max < n:
+        raise ValueError(
+            f"{where} needs 0 < lam_max < n (got lam_max={lam_max}, "
+            f"n={n}): the epoch length ~ log(1/2)/log(1 - lam_max/n) is "
+            "undefined at the boundary — lam_max = n means a single "
+            "coordinate step can solve the dominant mode, so no epoch "
+            "analysis applies")
+
+
 def chi_consistent(rho_val: float, tau: int, lam_max: float, n: int, beta: float = 1.0) -> float:
+    _check_lam_max(lam_max, n, "chi_consistent")
     dmax = 1.0 - lam_max / n
     return rho_val * tau**2 * beta**2 * lam_max * dmax ** (-2 * tau) / n
 
 
 def epoch_len(lam_max: float, n: int) -> int:
     """T0 = ceil(log(1/2) / log(1 - lam_max/n)) ~= 0.693 n / lam_max."""
+    _check_lam_max(lam_max, n, "epoch_len")
     return int(math.ceil(math.log(0.5) / math.log(1.0 - lam_max / n)))
 
 

@@ -22,10 +22,16 @@ from repro.kernels.spmv_csr import (
     spmv_csr_sliced_prefetch as _spmv_csr_sliced_prefetch,
 )
 from repro.kernels.spmv_ell import spmv_ell as _spmv_ell
-from repro.kernels.sweep_csr import (sweep_rows_gs as _sweep_rows_gs,
-                                     sweep_rows_rk as _sweep_rows_rk)
-from repro.kernels.sweep_ell import (sweep_ell_gs as _sweep_ell_gs,
-                                     sweep_ell_rk as _sweep_ell_rk)
+from repro.kernels.sweep_csr import (
+    sweep_rows_gs as _sweep_rows_gs,
+    sweep_rows_rk as _sweep_rows_rk,
+    sweep_rows_rk_delta as _sweep_rows_rk_delta,
+)
+from repro.kernels.sweep_ell import (
+    sweep_ell_gs as _sweep_ell_gs,
+    sweep_ell_rk as _sweep_ell_rk,
+    sweep_ell_rk_delta as _sweep_ell_rk_delta,
+)
 
 
 def _interp(interpret):
@@ -104,9 +110,13 @@ def banded_rk_sweep(A_bands, b, rn, xw, dw, picks, gates, *, block, bands,
                             interpret=_interp(interpret))
 
 
-def sweep_rows_gs(vals, cols, b, x, picks, *, beta=1.0, interpret=None):
-    """Fused coordinate-GS sweep over padded sparse rows (CSR/ELL)."""
+def sweep_rows_gs(vals, cols, b, x, picks, *, beta=1.0, write_base=0,
+                  interpret=None):
+    """Fused coordinate-GS sweep over padded sparse rows (CSR/ELL).
+    ``write_base`` offsets writes by a (possibly traced) slab offset —
+    the distributed local phase's global row base."""
     return _sweep_rows_gs(vals, cols, b, x, picks, beta=beta,
+                          write_base=write_base,
                           interpret=_interp(interpret))
 
 
@@ -116,16 +126,32 @@ def sweep_rows_rk(vals, cols, b, rn, x, picks, *, beta=1.0, interpret=None):
                           interpret=_interp(interpret))
 
 
-def sweep_ell_gs(vals, cols, b, x, picks, *, beta=1.0, interpret=None):
+def sweep_rows_rk_delta(vals, cols, b, rn, x, d, picks, *, beta=1.0,
+                        interpret=None):
+    """Fused two-carry (replica, round-delta) Kaczmarz sweep over padded
+    sparse rows — the distributed local phase of ``sparse_rk``."""
+    return _sweep_rows_rk_delta(vals, cols, b, rn, x, d, picks, beta=beta,
+                                interpret=_interp(interpret))
+
+
+def sweep_ell_gs(vals, cols, b, x, picks, *, beta=1.0, write_base=0,
+                 interpret=None):
     """Fused coordinate-GS sweep on ELL storage (kernels/sweep_ell.py)."""
     return _sweep_ell_gs(vals, cols, b, x, picks, beta=beta,
-                         interpret=_interp(interpret))
+                         write_base=write_base, interpret=_interp(interpret))
 
 
 def sweep_ell_rk(vals, cols, b, rn, x, picks, *, beta=1.0, interpret=None):
     """Fused Kaczmarz sweep on ELL storage (kernels/sweep_ell.py)."""
     return _sweep_ell_rk(vals, cols, b, rn, x, picks, beta=beta,
                          interpret=_interp(interpret))
+
+
+def sweep_ell_rk_delta(vals, cols, b, rn, x, d, picks, *, beta=1.0,
+                       interpret=None):
+    """Fused two-carry Kaczmarz sweep on ELL storage."""
+    return _sweep_ell_rk_delta(vals, cols, b, rn, x, d, picks, beta=beta,
+                               interpret=_interp(interpret))
 
 
 def decode_attention(q, k_cache, v_cache, lengths, *, chunk=512, interpret=None):
@@ -150,6 +176,8 @@ __all__ = [
     "spmv_ell",
     "sweep_ell_gs",
     "sweep_ell_rk",
+    "sweep_ell_rk_delta",
     "sweep_rows_gs",
     "sweep_rows_rk",
+    "sweep_rows_rk_delta",
 ]

@@ -24,10 +24,21 @@ carrying value 0 / column 0 so they contribute exact zeros.
 Actions (arithmetic transplanted from ``core.engine.solve_sequential`` —
 the GS sweep is bitwise the scan engine's update order):
 
-* GS  — ``gamma = b[r] - <A_r, x>``; ``x[r] += beta * gamma``;
+* GS  — ``gamma = b[r] - <A_r, x>``; ``x[base + r] += beta * gamma``;
 * RK  — ``g = (b[r] - <A_r, x>) / ||A_r||²``; ``x[cols_r] += beta * A_r g``
   (the scatter runs as ``width`` sequential dynamic row updates — VMEM
   read-modify-writes, not an HBM scatter).
+
+The GS **write base** is what lets the distributed local phases fuse: a
+worker holds a *slab* of rows (local ids ``[0, slab)``) but updates a
+full-length replica at global rows ``base + r``.  The base is a traced
+scalar (``jax.lax.axis_index`` under shard_map), so it rides the scalar-
+prefetch channel next to the pick stream rather than being baked into the
+kernel.  ``base = 0`` recovers the sequential square-system sweep exactly.
+The RK sibling ``sweep_rows_rk_delta`` needs no base — Kaczmarz writes
+land at global *column* ids — but carries a second VMEM-resident output,
+the round's delta window, so the distributed strategies can sync
+``delta`` at round end (the ``banded_rk_sweep`` two-carry pattern).
 """
 from __future__ import annotations
 
@@ -39,7 +50,7 @@ from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
 
-def _gs_kernel(idx_ref, vals_ref, cols_ref, b_ref, x_ref, o_ref, *,
+def _gs_kernel(idx_ref, base_ref, vals_ref, cols_ref, b_ref, x_ref, o_ref, *,
                beta: float):
     s = pl.program_id(0)
 
@@ -47,7 +58,7 @@ def _gs_kernel(idx_ref, vals_ref, cols_ref, b_ref, x_ref, o_ref, *,
     def _init():
         o_ref[...] = x_ref[...]
 
-    r = idx_ref[s]
+    r = base_ref[0] + idx_ref[s]                     # global write row
     vals = vals_ref[0]                               # (width,)
     cols = cols_ref[0]
     xg = jnp.take(o_ref[...], cols, axis=0)          # (width, k) gather
@@ -86,12 +97,21 @@ def sweep_rows_gs(
     picks: jax.Array,
     *,
     beta: float = 1.0,
+    write_base: jax.Array | int = 0,
     interpret: bool = False,
 ) -> jax.Array:
     """Apply ``len(picks)`` sequential coordinate-GS row updates; returns x.
 
     vals/cols: (m, width) padded row windows (global column ids);
     b: (m, k); x: (n, k); picks: (steps,) int32 row ids in [0, m).
+
+    ``write_base`` offsets every write: pick ``r`` updates row
+    ``write_base + r`` of ``x`` (gathers stay at the stored global column
+    ids).  This is the slab offset of the distributed local phases — a
+    worker's rows are local ids but its replica is full-length — and may
+    be a traced scalar (``axis_index`` under shard_map); the caller must
+    keep ``write_base + r`` inside [0, n).  Default 0: the sequential
+    square-system sweep, bitwise unchanged.
     """
     m, width = vals.shape
     n, k = x.shape
@@ -99,24 +119,25 @@ def sweep_rows_gs(
     steps = picks.shape[0]
     if steps == 0:
         return x
+    base = jnp.asarray(write_base, jnp.int32).reshape((1,))
 
     grid_spec = pltpu.PrefetchScalarGridSpec(
-        num_scalar_prefetch=1,
+        num_scalar_prefetch=2,
         grid=(steps,),
         in_specs=[
-            pl.BlockSpec((1, width), lambda s, idx: (idx[s], 0)),
-            pl.BlockSpec((1, width), lambda s, idx: (idx[s], 0)),
-            pl.BlockSpec((1, k), lambda s, idx: (idx[s], 0)),
-            pl.BlockSpec((n, k), lambda s, idx: (0, 0)),
+            pl.BlockSpec((1, width), lambda s, idx, base: (idx[s], 0)),
+            pl.BlockSpec((1, width), lambda s, idx, base: (idx[s], 0)),
+            pl.BlockSpec((1, k), lambda s, idx, base: (idx[s], 0)),
+            pl.BlockSpec((n, k), lambda s, idx, base: (0, 0)),
         ],
-        out_specs=pl.BlockSpec((n, k), lambda s, idx: (0, 0)),
+        out_specs=pl.BlockSpec((n, k), lambda s, idx, base: (0, 0)),
     )
     return pl.pallas_call(
         functools.partial(_gs_kernel, beta=beta),
         grid_spec=grid_spec,
         out_shape=jax.ShapeDtypeStruct((n, k), x.dtype),
         interpret=interpret,
-    )(picks.astype(jnp.int32), vals, cols, b, x)
+    )(picks.astype(jnp.int32), base, vals, cols, b, x)
 
 
 @functools.partial(jax.jit, static_argnames=("beta", "interpret"))
@@ -163,3 +184,81 @@ def sweep_rows_rk(
         out_shape=jax.ShapeDtypeStruct((n, k), x.dtype),
         interpret=interpret,
     )(picks.astype(jnp.int32), vals, cols, b, rn.reshape(m, 1), x)
+
+
+def _rk_delta_kernel(idx_ref, vals_ref, cols_ref, b_ref, rn_ref, x_ref,
+                     d_ref, xo_ref, do_ref, *, beta: float, width: int):
+    """RK step over TWO VMEM-resident carries: the working replica ``xo``
+    and the round's delta ``do`` (what the distributed engine syncs at
+    round end) — the padded-row sibling of ``banded_gs._rk_kernel``."""
+    s = pl.program_id(0)
+
+    @pl.when(s == 0)
+    def _init():
+        xo_ref[...] = x_ref[...]
+        do_ref[...] = d_ref[...]
+
+    vals = vals_ref[0]                               # (width,)
+    cols = cols_ref[0]
+    xg = jnp.take(xo_ref[...], cols, axis=0)         # (width, k) gather
+    g = (b_ref[0] - jnp.einsum("w,wk->k", vals, xg)) / rn_ref[0, 0]
+    for j in range(width):
+        c = cols[j]
+        contrib = (beta * vals[j]) * g[None, :]
+        xo_ref[pl.ds(c, 1), :] = xo_ref[pl.ds(c, 1), :] + contrib
+        do_ref[pl.ds(c, 1), :] = do_ref[pl.ds(c, 1), :] + contrib
+
+
+@functools.partial(jax.jit, static_argnames=("beta", "interpret"))
+def sweep_rows_rk_delta(
+    vals: jax.Array,
+    cols: jax.Array,
+    b: jax.Array,
+    rn: jax.Array,
+    x: jax.Array,
+    d: jax.Array,
+    picks: jax.Array,
+    *,
+    beta: float = 1.0,
+    interpret: bool = False,
+) -> tuple[jax.Array, jax.Array]:
+    """Apply ``len(picks)`` sequential Kaczmarz row updates to the
+    (replica, round-delta) pair in one launch; returns ``(x, d)``.
+
+    The distributed form of ``sweep_rows_rk``: every update lands in both
+    carries (both stay VMEM-resident across all steps), so the caller can
+    psum / a2a-exchange the accumulated ``d`` at round end.  vals/cols:
+    (m, width) padded row windows with global column ids — a worker's
+    slab; no write base is needed because Kaczmarz writes land at the
+    stored (global) column ids.  rn: (m,) squared row norms, zero rows
+    pre-guarded by the caller.
+    """
+    m, width = vals.shape
+    n, k = x.shape
+    assert b.shape[0] == m and rn.shape == (m,)
+    assert d.shape == (n, k)
+    steps = picks.shape[0]
+    if steps == 0:
+        return x, d
+
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=1,
+        grid=(steps,),
+        in_specs=[
+            pl.BlockSpec((1, width), lambda s, idx: (idx[s], 0)),
+            pl.BlockSpec((1, width), lambda s, idx: (idx[s], 0)),
+            pl.BlockSpec((1, k), lambda s, idx: (idx[s], 0)),
+            pl.BlockSpec((1, 1), lambda s, idx: (idx[s], 0)),
+            pl.BlockSpec((n, k), lambda s, idx: (0, 0)),
+            pl.BlockSpec((n, k), lambda s, idx: (0, 0)),
+        ],
+        out_specs=(pl.BlockSpec((n, k), lambda s, idx: (0, 0)),
+                   pl.BlockSpec((n, k), lambda s, idx: (0, 0))),
+    )
+    return pl.pallas_call(
+        functools.partial(_rk_delta_kernel, beta=beta, width=width),
+        grid_spec=grid_spec,
+        out_shape=(jax.ShapeDtypeStruct((n, k), x.dtype),
+                   jax.ShapeDtypeStruct((n, k), d.dtype)),
+        interpret=interpret,
+    )(picks.astype(jnp.int32), vals, cols, b, rn.reshape(m, 1), x, d)

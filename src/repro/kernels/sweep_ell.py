@@ -14,14 +14,15 @@ from __future__ import annotations
 
 import jax
 
-from repro.kernels.sweep_csr import sweep_rows_gs, sweep_rows_rk
+from repro.kernels.sweep_csr import (sweep_rows_gs, sweep_rows_rk,
+                                     sweep_rows_rk_delta)
 
 
 def sweep_ell_gs(vals, cols, b, x, picks, *, beta: float = 1.0,
-                 interpret: bool = False) -> jax.Array:
+                 write_base=0, interpret: bool = False) -> jax.Array:
     """``sweep_rows_gs`` on ELL storage (vals/cols: (n, width))."""
     return sweep_rows_gs(vals, cols, b, x, picks, beta=beta,
-                         interpret=interpret)
+                         write_base=write_base, interpret=interpret)
 
 
 def sweep_ell_rk(vals, cols, b, rn, x, picks, *, beta: float = 1.0,
@@ -29,3 +30,11 @@ def sweep_ell_rk(vals, cols, b, rn, x, picks, *, beta: float = 1.0,
     """``sweep_rows_rk`` on ELL storage (vals/cols: (m, width))."""
     return sweep_rows_rk(vals, cols, b, rn, x, picks, beta=beta,
                          interpret=interpret)
+
+
+def sweep_ell_rk_delta(vals, cols, b, rn, x, d, picks, *, beta: float = 1.0,
+                       interpret: bool = False):
+    """``sweep_rows_rk_delta`` on ELL storage — the distributed two-carry
+    (replica, round-delta) Kaczmarz sweep."""
+    return sweep_rows_rk_delta(vals, cols, b, rn, x, d, picks, beta=beta,
+                               interpret=interpret)

@@ -49,6 +49,13 @@ def main(argv=None):
                          "(iterate VMEM-resident, picks scalar-prefetched) "
                          "where the action x format has one; falls back to "
                          "the per-step scan with a warning elsewhere")
+    ap.add_argument("--overlap", action="store_true",
+                    help="double-buffered sync: each round installs the "
+                         "PREVIOUS round's exchange while sweeping, hiding "
+                         "sync latency behind local work at the cost of one "
+                         "extra round of scheduled staleness (sparse/halo "
+                         "strategies; others fall back to lockstep with a "
+                         "warning)")
     ap.add_argument("--workers", type=int, default=0,
                     help="0 = all local devices")
     ap.add_argument("--local-steps", type=int, default=0,
@@ -94,7 +101,7 @@ def main(argv=None):
     workers = args.workers or len(jax.devices())
     mesh = make_host_mesh(workers)
     local_steps = args.local_steps or max(1, n // workers)
-    tau = scheduled_tau(workers, local_steps)
+    tau = scheduled_tau(workers, local_steps, overlap=args.overlap)
     beta = theory.beta_opt(rho, tau)
     rounds = max(1, iters // (workers * local_steps))
     t0 = time.time()
@@ -102,13 +109,19 @@ def main(argv=None):
                  format=args.format, width=args.ell_width, sync=args.sync,
                  schedule=Schedule(rounds=rounds, local_steps=local_steps,
                                    partition=args.partition,
-                                   fused=args.fused))
+                                   fused=args.fused, overlap=args.overlap))
     jax.block_until_ready(pres.x)
     print(f"  async RGS  : P={workers} tau={tau} beta~={beta:.3f} "
           f"format={args.format} sync={args.sync} "
-          f"partition={args.partition} "
+          f"partition={args.partition} overlap={args.overlap} "
           f"{rounds} rounds, resid {float(pres.resid[-1,0]):.3e} "
           f"({time.time()-t0:.1f}s)")
+    if pres.lag is not None:
+        lag = jnp.asarray(pres.lag)
+        tau_emp = int(lag.max()) + scheduled_tau(workers, local_steps)
+        print(f"  staleness  : measured lag max={int(lag.max())} "
+              f"(round 1: {int(lag[0])}) -> empirical tau {tau_emp} "
+              f"<= scheduled bound {tau}")
 
     t0 = time.time()
     cres = cg_solve(prob.A, prob.b, x0, prob.x_star,

@@ -275,15 +275,34 @@ DIST_SCRIPT = textwrap.dedent("""
             assert jnp.array_equal(r0.resid, r1.resid), (action, sync)
             assert jnp.array_equal(r0.err_sq, r1.err_sq), (action, sync)
 
-    # strategies without a fused phase fall back with a warning
-    import warnings
+    # sparse distributed local phases are fused too (PR 6): GS bitwise
+    # under both syncs, local-sampling RK to roundoff
     cop = CsrOp.from_dense(prob.A)
+    for sync in ("allgather", "a2a"):
+        r0 = solve_distributed(cop, prob.b, x0, prob.x_star, action="gs",
+                               sync=sync, **kw)
+        r1 = solve_distributed(cop, prob.b, x0, prob.x_star, action="gs",
+                               sync=sync, fused=True, **kw)
+        assert jnp.array_equal(r0.x, r1.x), sync
+        assert jnp.array_equal(r0.err_sq, r1.err_sq), sync
+        assert jnp.array_equal(r0.resid, r1.resid), sync
+    r0 = solve_distributed(cop, prob.b, x0, prob.x_star, action="rk",
+                           sync="psum", **kw)
+    r1 = solve_distributed(cop, prob.b, x0, prob.x_star, action="rk",
+                           sync="psum", fused=True, **kw)
+    denom = float(jnp.linalg.norm(r0.x)) or 1.0
+    assert float(jnp.linalg.norm(r0.x - r1.x)) / denom <= 1e-5
+
+    # strategies without a fused phase (dense) fall back with a warning
+    import warnings
+    from repro.core.operators import DenseOp
+    dop = DenseOp(prob.A)
     with warnings.catch_warnings(record=True) as w:
         warnings.simplefilter("always")
-        r2 = solve_distributed(cop, prob.b, x0, prob.x_star, action="gs",
+        r2 = solve_distributed(dop, prob.b, x0, prob.x_star, action="gs",
                                sync="allgather", fused=True, **kw)
     assert any("no fused sweep kernel" in str(x.message) for x in w)
-    r3 = solve_distributed(cop, prob.b, x0, prob.x_star, action="gs",
+    r3 = solve_distributed(dop, prob.b, x0, prob.x_star, action="gs",
                            sync="allgather", **kw)
     assert jnp.array_equal(r2.x, r3.x)
     print("FUSED_DIST_OK")

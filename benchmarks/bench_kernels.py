@@ -41,14 +41,20 @@ from repro.kernels import ops, ref
 
 
 def run(n: int = 1024, block: int = 128, bands: int = 1, k: int = 64,
-        repeats: int = 3):
+        repeats: int = 3, storage_dtype=None):
     prob = block_banded_spd(n, block=block, bands=bands, n_rhs=k, seed=0)
-    bop = BlockBandedOp.from_dense(prob.A, block=block, bands=bands)
+    bop = BlockBandedOp.from_dense(prob.A, block=block, bands=bands,
+                                   storage_dtype=storage_dtype)
     width = int((np.asarray(prob.A) != 0).sum(1).max())
     width = -(-width // 8) * 8
-    eop = EllOp.from_dense(prob.A, width=width)
-    cop = CsrOp.from_dense(prob.A)
-    y_d = prob.A @ prob.x_star
+    eop = EllOp.from_dense(prob.A, width=width, storage_dtype=storage_dtype)
+    cop = CsrOp.from_dense(prob.A, storage_dtype=storage_dtype)
+    # oracle convention (tests/test_operators.py): low-precision storage is
+    # checked against the ROUNDED dense matrix, so `check` stays at kernel
+    # roundoff for every storage dtype.
+    A_ref = (prob.A if storage_dtype is None
+             else prob.A.astype(storage_dtype).astype(jnp.float32))
+    y_d = A_ref @ prob.x_star
 
     # Modeled arithmetic intensity on the A-stream (FLOPs per byte of matrix
     # read): blocked tiles amortize k RHS columns per element; ELL/CSR pay
@@ -57,15 +63,20 @@ def run(n: int = 1024, block: int = 128, bands: int = 1, k: int = 64,
     # burns a dense one-hot MXU matmul per panel; csr_sliced (the matvec
     # default since PR 5) drops both — per-row windows make the segment sum
     # free — at the cost of per-row (not per-panel) padding.
-    bbmv_bytes = bop.nnz_cost() * 4
+    # Byte models are derived from the dtypes actually stored, so
+    # ``--storage-dtype bfloat16`` (2-byte values, int16 gather indices)
+    # shows up directly in the modeled AI; the iterate/RHS stream stays f32.
+    ev, ec = eop.vals.dtype.itemsize, eop.cols.dtype.itemsize
+    cv, ci = cop.data.dtype.itemsize, cop.indices.dtype.itemsize
+    bbmv_bytes = bop.nnz_cost() * bop.A_bands.dtype.itemsize
     bbmv_flops = 2 * bop.nnz_cost() * k
-    ell_bytes = eop.nnz_cost() * (4 + 4) + eop.nnz_cost() * k * 4
+    ell_bytes = eop.nnz_cost() * (ev + ec) + eop.nnz_cost() * k * 4
     ell_flops = 2 * eop.nnz_cost() * k
     csr_slots = cop.panel_width * (-(-n // cop.rows_per_panel))
-    csr_bytes = csr_slots * (4 + 4 + 4) + csr_slots * k * 4
+    csr_bytes = csr_slots * (cv + ci + 4) + csr_slots * k * 4
     csr_flops = 2 * cop.nnz_cost() * k
     sl_slots = int(np.prod(cop.sliced_rows()[0].shape))
-    sliced_bytes = sl_slots * (4 + 4) + sl_slots * k * 4
+    sliced_bytes = sl_slots * (cv + ci) + sl_slots * k * 4
     sliced_flops = 2 * cop.nnz_cost() * k
 
     # Empty-panel-skip variant (scalar-prefetched per-panel nnz counts):
@@ -78,17 +89,19 @@ def run(n: int = 1024, block: int = 128, bands: int = 1, k: int = 64,
     for p in range(0, n // R, 2):
         A_patchy[p * R:(p + 1) * R] = 0.0
     Ap = jnp.asarray(A_patchy)
-    pop = CsrOp.from_dense(Ap)
+    pop = CsrOp.from_dense(Ap, storage_dtype=storage_dtype)
     pn = np.asarray(pop.panel_nnz())
     empty_frac = float((pn == 0).mean())
     x_p = prob.x_star
-    y_p = Ap @ x_p
+    y_p = (Ap if storage_dtype is None
+           else Ap.astype(storage_dtype).astype(jnp.float32)) @ x_p
+    pv, pi = pop.data.dtype.itemsize, pop.indices.dtype.itemsize
     patchy_slots = pop.panel_width * pn.size
-    patchy_bytes = patchy_slots * (4 + 4 + 4) + patchy_slots * k * 4
+    patchy_bytes = patchy_slots * (pv + pi + 4) + patchy_slots * k * 4
     patchy_flops = 2 * pop.nnz_cost() * k
     skip_slots = (int(pop.sliced_rows()[0].shape[1]) * pop.rows_per_panel
                   * int((pn > 0).sum()))
-    skip_bytes = (skip_slots * (4 + 4) + skip_slots * k * 4 + pn.size * 4)
+    skip_bytes = (skip_slots * (pv + pi) + skip_slots * k * 4 + pn.size * 4)
     skip_flops = 2 * pop.nnz_cost() * k
 
     # Every layout row: modeled AI, min-of-N wall time, AND a check value
@@ -133,10 +146,84 @@ def run(n: int = 1024, block: int = 128, bands: int = 1, k: int = 64,
          sweep_wall_us=f"{sweep_wall*1e6:.0f}")
     return {
         "n": n, "block": block, "bands": bands, "k": k, "repeats": repeats,
+        "storage_dtype": storage_dtype,
         "check_block_gs": check_block_gs,
         "layouts": layouts, "sweep_wall_us": sweep_wall * 1e6,
         "sweeps": run_sweeps(repeats=repeats, n=min(n, 512)),
+        "precision": run_precision(repeats=repeats, n=min(n, 512)),
     }
+
+
+def run_precision(n: int = 512, k: int = 8, row_nnz: int = 16,
+                  steps: int = 256, repeats: int = 3, seed: int = 0):
+    """Per-dtype bytes-per-iteration rows for the CSR/ELL matvec + sweep.
+
+    The quantity ``storage_dtype`` controls is the coefficient stream the
+    kernels read each iteration — values plus gather indices (bf16 storage
+    also narrows ELL/CSR column indices to int16 when ``n`` fits), while the
+    iterate, RHS and accumulation stay f32.  For each format the row records
+    the modeled matvec A-stream bytes, the per-row sweep-step bytes, the
+    measured wall time, and a check against the ROUNDED dense oracle; the
+    bf16 row adds the reduction vs f32 (the acceptance number: >= 40%).
+    """
+    prob = random_sparse_spd(n, row_nnz=row_nnz, n_rhs=k, seed=seed)
+    width = int((np.asarray(prob.A) != 0).sum(1).max())
+    makers = {
+        "csr": lambda dt: CsrOp.from_dense(prob.A, storage_dtype=dt),
+        "ell": lambda dt: EllOp.from_dense(prob.A, width=width,
+                                           storage_dtype=dt),
+    }
+    out = {"n": n, "k": k, "row_nnz": row_nnz, "steps": steps}
+    for fmt, make in makers.items():
+        rows = {}
+        for dt in ("float32", "bfloat16"):
+            op = make(dt)
+            if fmt == "csr":
+                vsz = op.data.dtype.itemsize
+                isz = op.indices.dtype.itemsize
+                slots = int(np.prod(op.sliced_rows()[0].shape))
+                row_slots = op.row_cap
+            else:
+                vsz = op.vals.dtype.itemsize
+                isz = op.cols.dtype.itemsize
+                slots = int(op.nnz_cost())
+                row_slots = op.vals.shape[1]
+            matvec_bytes = slots * (vsz + isz)
+            sweep_step_bytes = row_slots * (vsz + isz)
+            A_ref = prob.A.astype(dt).astype(jnp.float32)
+            y_ref = A_ref @ prob.x_star
+            check = float(jnp.abs(op.matvec(prob.x_star) - y_ref).max())
+            mv_wall = timed(lambda: op.matvec(prob.x_star),
+                            iters=repeats, stat="min")
+            x0 = jnp.zeros_like(prob.b)
+            sweep_wall = timed(
+                lambda: solve_sequential(op, prob.b, x0, prob.x_star,
+                                         action="gs", key=jax.random.key(2),
+                                         num_iters=steps, record_every=steps,
+                                         fused=True).x,
+                iters=repeats, stat="min")
+            rows[dt] = {"matvec_bytes": matvec_bytes,
+                        "sweep_step_bytes": sweep_step_bytes,
+                        "matvec_wall_us": mv_wall * 1e6,
+                        "sweep_wall_us": sweep_wall * 1e6,
+                        "vals_dtype": str(op.data.dtype if fmt == "csr"
+                                          else op.vals.dtype),
+                        "idx_dtype": str(op.indices.dtype if fmt == "csr"
+                                         else op.cols.dtype),
+                        "check": check}
+            emit("bench_kernels_precision", fmt=fmt, dtype=dt,
+                 matvec_bytes=matvec_bytes,
+                 sweep_step_bytes=sweep_step_bytes,
+                 matvec_us=f"{mv_wall*1e6:.0f}",
+                 sweep_us=f"{sweep_wall*1e6:.0f}", check=f"{check:.2e}")
+        f32, bf16 = rows["float32"], rows["bfloat16"]
+        for key_ in ("matvec_bytes", "sweep_step_bytes"):
+            red = 1.0 - bf16[key_] / f32[key_]
+            bf16[f"{key_}_reduction_vs_f32"] = red
+            emit("bench_kernels_precision", fmt=fmt,
+                 **{f"{key_}_reduction": f"{red:.2f}"})
+        out[fmt] = rows
+    return out
 
 
 def run_sweeps(n: int = 512, block: int = 64, bands: int = 1, k: int = 8,
@@ -195,12 +282,18 @@ def main(argv=None):
     ap.add_argument("--k", type=int, default=64)
     ap.add_argument("--repeats", type=int, default=3,
                     help="timing repetitions; wall times are min-of-N")
+    ap.add_argument("--storage-dtype", choices=("float32", "bfloat16"),
+                    default=None,
+                    help="coefficient storage precision for the layout "
+                         "section's operators (checks run against the "
+                         "rounded dense oracle); the per-dtype `precision` "
+                         "section always reports both")
     ap.add_argument("--no-write", action="store_true",
                     help="print records without persisting BENCH_kernels"
                          ".json (the CI smoke job runs a tiny shape)")
     args = ap.parse_args(argv)
     payload = run(n=args.n, block=args.block, bands=args.bands, k=args.k,
-                  repeats=args.repeats)
+                  repeats=args.repeats, storage_dtype=args.storage_dtype)
     if not args.no_write:
         write_json("kernels", payload)
     return payload

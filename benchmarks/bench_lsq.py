@@ -39,9 +39,9 @@ import numpy as np
 import time
 
 from benchmarks.common import emit, timed, write_json
-from repro.core import (BlockBandedOp, CsrOp, block_banded_spd, cg_solve,
-                        random_lsq, random_sparse_lsq, rk_solve, theory,
-                        to_unit_diagonal)
+from repro.core import (BlockBandedOp, CsrOp, Schedule, block_banded_spd,
+                        cg_solve, random_lsq, random_sparse_lsq, rk_solve,
+                        solve, theory, to_unit_diagonal)
 from repro.core.engine import scheduled_tau, solve_distributed
 from repro.launch.mesh import make_host_mesh
 
@@ -370,6 +370,131 @@ def run_overlap_tau(n: int = 256, row_nnz: int = 8, rhs: int = 4,
     return out
 
 
+_PRECISION_SCRIPT = """
+import json
+import jax, jax.numpy as jnp, numpy as np
+from repro.core import CsrOp, random_sparse_lsq
+from repro.core.engine import solve_distributed
+from repro.launch.mesh import make_host_mesh
+
+P, L, rounds = {workers}, {local_steps}, {rounds}
+prob = random_sparse_lsq({m}, {n}, row_nnz={row_nnz}, n_rhs={rhs},
+                         seed={seed})
+op = CsrOp.from_dense(prob.A)
+x0 = jnp.zeros_like(prob.x_star)
+mesh = make_host_mesh(P)
+tol = {tol}
+out = {{"workers": P, "local_steps": L, "rounds": rounds, "tol": tol}}
+for compress in ("none", "bf16", "int8_ef"):
+    r = solve_distributed(op, prob.b, x0, prob.x_star, action="rk",
+                          key=jax.random.key(1), mesh=mesh, rounds=rounds,
+                          local_steps=L, beta={beta}, sync="psum",
+                          compress=compress)
+    err = np.asarray(r.err_sq).max(axis=1)
+    hit = np.nonzero(err <= tol * err[0])[0]
+    out[compress] = {{
+        "bytes_per_round": float(r.bytes_per_round),
+        "err_first": float(err[0]), "err_last": float(err[-1]),
+        "rounds_to_tol": int(hit[0]) + 1 if hit.size else 0,
+    }}
+print("PRECISION_JSON " + json.dumps(out))
+"""
+
+
+def run_precision(m: int = 512, n: int = 256, row_nnz: int = 6, rhs: int = 2,
+                  rounds: int = 60, local_steps: int = 16, beta: float = 1.0,
+                  tol: float = 0.05, seed: int = 3, workers: int = 4,
+                  sweeps: int = 8):
+    """The precision trade-off, measured (ISSUE 7 tentpole).
+
+    Wire: sparse-RK delta psum on a forced-``workers``-device mesh with
+    ``compress`` ∈ {none, bf16, int8_ef} — per-mode bytes-per-round (the
+    engine's analytic payload model), rounds to reach ``tol`` × the
+    round-1 error, and the round inflation vs the exact f32 wire (the
+    acceptance gate: int8+EF within 1.3×).  Storage: the same design
+    solved sequentially with f32 vs bf16 coefficient panels, reporting
+    sweeps to the low-accuracy target.  Theory: the perturbed-rate
+    prediction from ``theory.iteration_inflation`` — storage rounding and
+    wire quantization are RELATIVE perturbations (error proportional to
+    the step, not the iterate), so the per-step contraction moves from
+    ``c`` to ``c + eps*(1-c)`` and the predicted inflation stays finite.
+    """
+    script = ("import os\n"
+              f'os.environ["XLA_FLAGS"] = '
+              f'"--xla_force_host_platform_device_count={workers}"\n'
+              + _PRECISION_SCRIPT.format(
+                  workers=workers, local_steps=local_steps, rounds=rounds,
+                  m=m, n=n, row_nnz=row_nnz, rhs=rhs, seed=seed, beta=beta,
+                  tol=tol))
+    env = dict(os.environ, PYTHONPATH="src", JAX_PLATFORMS="cpu")
+    proc = subprocess.run([sys.executable, "-c", script], env=env,
+                          capture_output=True, text=True, timeout=900)
+    if proc.returncode != 0:
+        raise RuntimeError(f"precision subprocess failed:\n"
+                           f"{proc.stderr[-3000:]}")
+    line = next(l for l in proc.stdout.splitlines()
+                if l.startswith("PRECISION_JSON "))
+    out = json.loads(line[len("PRECISION_JSON "):])
+    base = out["none"]["rounds_to_tol"]
+    if base == 0:
+        raise RuntimeError(f"f32 wire never reached tol {tol}")
+    for c in ("none", "bf16", "int8_ef"):
+        rec = out[c]
+        if rec["rounds_to_tol"] == 0:
+            raise RuntimeError(f"compress={c} never reached tol {tol}")
+        rec["round_inflation_vs_f32"] = rec["rounds_to_tol"] / base
+        rec["bytes_to_tol"] = rec["bytes_per_round"] * rec["rounds_to_tol"]
+        emit("bench_lsq_precision", compress=c,
+             bytes_per_round=f"{rec['bytes_per_round']:.0f}",
+             rounds_to_tol=rec["rounds_to_tol"],
+             round_inflation=f"{rec['round_inflation_vs_f32']:.2f}",
+             bytes_to_tol=f"{rec['bytes_to_tol']:.0f}",
+             err_last=f"{rec['err_last']:.3e}")
+    if out["int8_ef"]["round_inflation_vs_f32"] > 1.3:
+        raise RuntimeError(
+            f"int8+EF round inflation "
+            f"{out['int8_ef']['round_inflation_vs_f32']:.2f} exceeds the "
+            f"1.3x acceptance bound")
+
+    # storage: f32 vs bf16 coefficient panels, sequential RK, equal work
+    prob = random_sparse_lsq(m, n, row_nnz=row_nnz, n_rhs=rhs, seed=seed)
+    bn = float(jnp.linalg.norm(prob.b))
+    floor = float(jnp.linalg.norm(prob.b - prob.A @ prob.x_star)) / bn
+    storage = {}
+    for dt in ("float32", "bfloat16"):
+        r = solve(prob, key=jax.random.key(1), format="csr",
+                  storage_dtype=dt,
+                  schedule=Schedule(num_iters=sweeps * m, record_every=m))
+        rel = np.linalg.norm(np.asarray(r.resid), axis=1) / bn
+        hits = _first_at(rel, (1e-1,), floor)
+        storage[dt] = {"final_relresid": float(rel[-1]),
+                       "sweeps_to_1e1": hits[1e-1]}
+        emit("bench_lsq_precision", storage_dtype=dt,
+             final_relresid=f"{rel[-1]:.3e}", sweeps_to_1e1=hits[1e-1])
+    out["storage"] = storage
+
+    # theory: predicted inflation from the measured perturbation bounds
+    f = float(theory.rk_factor(prob.A))
+    A = np.asarray(prob.A)
+    Ar = np.asarray(jnp.asarray(prob.A).astype(jnp.bfloat16)
+                    .astype(jnp.float32))
+    eps_bf16 = float(np.abs(A - Ar).max() / np.abs(A).max())
+    eps_int8 = 1.0 / 254.0            # half a quantization step, relative
+    c = float(np.sqrt(f))
+    pred = {
+        "exact_factor": f,
+        "eps_bf16_storage": eps_bf16,
+        "eps_int8_wire": eps_int8,
+        "inflation_bf16": theory.iteration_inflation(f, eps_bf16 * (1 - c)),
+        "inflation_int8": theory.iteration_inflation(f, eps_int8 * (1 - c)),
+    }
+    out["theory"] = pred
+    emit("bench_lsq_precision", exact_factor=f"{f:.6f}",
+         predicted_inflation_bf16=f"{pred['inflation_bf16']:.3f}",
+         predicted_inflation_int8=f"{pred['inflation_int8']:.3f}")
+    return out
+
+
 if __name__ == "__main__":
     payload = {
         "lsq": run(),
@@ -377,5 +502,6 @@ if __name__ == "__main__":
         "csr_rk": run_csr_rk(),
         "partitioned_rk": run_partitioned_rk(),
         "overlap_tau": run_overlap_tau(),
+        "precision": run_precision(),
     }
     write_json("lsq", payload)

@@ -48,6 +48,7 @@ from repro.core.operators import (
     banded_rows_matvec,
     banded_window_matvec,
 )
+from repro.optim import compression
 
 
 # ---------------------------------------------------------------------------
@@ -73,6 +74,13 @@ class ParallelSolveResult(NamedTuple):
     #: with ``overlap=False`` (the in-round term), which the schedule
     #: guarantees is <= ``scheduled_tau(..., overlap=True)`` == ``tau``.
     lag: jax.Array | None = None
+    #: analytic per-round wire volume (bytes one worker contributes to the
+    #: sync collective each round, averaged over workers for the
+    #: participation-asymmetric a2a exchanges), computed host-side from the
+    #: dispatched strategy, sync and compress mode — None outside
+    #: ``solve_distributed``.  This is the model quantity the compressed
+    #: syncs shrink; benchmarks report it next to iterations-to-tolerance.
+    bytes_per_round: float | None = None
 
 
 # ---------------------------------------------------------------------------
@@ -156,6 +164,16 @@ class Schedule(NamedTuple):
     scheduled staleness grows by the quantified overlap term of
     ``scheduled_tau``.  Strategies without an overlapped variant fall
     back to lockstep rounds with a ``UserWarning`` (exact fallback).
+
+    ``compress`` (distributed only) picks the wire format of the sync
+    payload: ``"none"`` (f32, the default — bitwise-unchanged engine),
+    ``"bf16"`` (payload rounded to bfloat16 on the wire), or
+    ``"int8_ef"`` (int8 blocks + f32 scales via ``optim.compression``;
+    the RK delta sync carries a per-worker error-feedback residual as
+    loop state, flushed after the final round so the returned iterate
+    contains every update).  Strategies without a compressed wire —
+    everything but the RK delta psum and the banded halo exchange — fall
+    back to the f32 payload with a ``UserWarning`` (exact fallback).
     """
     num_iters: int = 0
     rounds: int = 0
@@ -165,6 +183,7 @@ class Schedule(NamedTuple):
     partition: str = "contiguous"
     fused: bool = False
     overlap: bool = False
+    compress: str = "none"
 
     @property
     def distributed(self) -> bool:
@@ -190,6 +209,10 @@ class Schedule(NamedTuple):
             raise ValueError(
                 f"unknown partition: {self.partition!r} (expected "
                 "'contiguous' or 'balanced')")
+        if self.compress not in ("none", "bf16", "int8_ef"):
+            raise ValueError(
+                f"unknown compress: {self.compress!r} (expected 'none', "
+                "'bf16' or 'int8_ef')")
         if not self.distributed:
             if self.num_iters <= 0:
                 raise ValueError(
@@ -208,6 +231,11 @@ class Schedule(NamedTuple):
                     "overlap=True is a distributed-schedule option (the "
                     "double-buffered sync needs rounds/local_steps) — got "
                     f"{self}")
+            if self.compress != "none":
+                raise ValueError(
+                    "compress is a distributed-schedule option (there is no "
+                    "sync payload to compress without rounds/local_steps) — "
+                    f"got {self}")
         return self
 
     def effective_tau(self, num_workers: int, *, shared_stream: bool = False,
@@ -291,6 +319,14 @@ def _warn_overlap_fallback(op, action, kind):
         f"overlap=True: the {kind!r} strategy (action={action!r} x "
         f"{type(op).__name__}) has no overlapped-sync variant; running "
         "lockstep rounds (exact fallback — iterates unchanged)",
+        UserWarning, stacklevel=3)
+
+
+def _warn_compress_fallback(op, action, kind, compress):
+    warnings.warn(
+        f"compress={compress!r}: the {kind!r} strategy (action={action!r} x "
+        f"{type(op).__name__}) has no compressed wire format; running the "
+        "f32 payload (exact fallback — iterates unchanged)",
         UserWarning, stacklevel=3)
 
 
@@ -667,6 +703,7 @@ def solve_distributed(
     partition: str = "contiguous",
     fused: bool = False,
     overlap: bool = False,
+    compress: str = "none",
     unroll: bool = False,
     with_metrics: bool = True,
 ) -> ParallelSolveResult:
@@ -720,6 +757,21 @@ def solve_distributed(
     EllOp): the operator, b (and, for the coordinate action, the iterate
     vectors) are permuted up front, every downstream slab is contiguous
     again, and the returned iterate is un-permuted.
+
+    ``compress`` shrinks the sync payload on the wire (see ``Schedule``):
+    the RK delta psum sends the round delta as bf16 or int8+error-feedback
+    (``sparse_rk``; foreign replicas see compressed deltas, a worker's own
+    updates stay exact, and the int8 residual is flushed after the last
+    round so the returned iterate misses nothing), and the banded halo
+    exchange sends its edge payloads quantized per round (``halo_gs``; the
+    edges are *state*, re-sent fresh every round, so the error does not
+    compound and no feedback term is needed — and the owned slab the
+    worker returns is never compressed).  Strategies without a compressed
+    wire fall back to f32 with a ``UserWarning``; ``sparse_rk`` under
+    ``sync="a2a"`` falls back to the psum wire (with a warning), because
+    the a2a exchange's bitwise-psum invariant cannot survive a lossy
+    payload.  The analytic per-round wire volume of the dispatched
+    combination is returned in ``ParallelSolveResult.bytes_per_round``.
     """
     num_workers = mesh.shape[axis]
     row_perm = None
@@ -766,6 +818,20 @@ def solve_distributed(
     if overlap and kind not in _OVERLAP_STRATEGIES:
         _warn_overlap_fallback(op, action, kind)
         overlap = False
+    if compress not in ("none", "bf16", "int8_ef"):
+        raise ValueError(
+            f"unknown compress: {compress!r} (expected 'none', 'bf16' or "
+            "'int8_ef')")
+    if compress != "none" and kind not in _COMPRESS_STRATEGIES:
+        _warn_compress_fallback(op, action, kind, compress)
+        compress = "none"
+    if compress != "none" and kind == "sparse_rk" and sync == "a2a":
+        warnings.warn(
+            f"compress={compress!r}: the a2a delta exchange is pinned "
+            "bitwise to the psum reduction, which a lossy payload cannot "
+            "preserve; running the compressed psum wire instead",
+            UserWarning, stacklevel=2)
+        sync = "psum"
 
     a2a_schedule, a2a_masks = (), None
     if sync == "a2a" and kind == "sparse_gs":
@@ -842,7 +908,10 @@ def solve_distributed(
         kind, op, b, x0, x_star, key, mesh=mesh, axis=axis, rounds=rounds,
         local_steps=local_steps, block=block, beta=beta, unroll=unroll,
         with_metrics=with_metrics, sync=sync, a2a_schedule=a2a_schedule,
-        a2a_masks=a2a_masks, fused=fused, overlap=overlap)
+        a2a_masks=a2a_masks, fused=fused, overlap=overlap, compress=compress)
+    res = res._replace(bytes_per_round=_sync_bytes_per_round(
+        kind, sync, compress, op=op, n=x0.shape[0], k=b.shape[1],
+        num_workers=num_workers, a2a_schedule=a2a_schedule))
     if row_perm is not None and action == "gs":
         # Undo the symmetric permutation on the returned iterate (the "rk"
         # iterate lives in column space and was never permuted).
@@ -878,6 +947,57 @@ _FUSED_STRATEGIES = frozenset(
 #: carries no data dependency on round r's local sweep.
 _OVERLAP_STRATEGIES = frozenset({"halo_gs", "sparse_gs", "sparse_rk"})
 
+#: strategies with a compressed wire format (``Schedule.compress``): the RK
+#: delta psum and the banded halo exchange.  The slab all-gathers stay f32 —
+#: a gathered slab IS the iterate (not an additive correction), so lossy
+#: gathers would overwrite owned state with rounded values.
+_COMPRESS_STRATEGIES = frozenset({"sparse_rk", "halo_gs"})
+
+
+def _payload_bytes(size: int, compress: str) -> float:
+    """Wire bytes of one ``size``-element f32 payload under a codec."""
+    if compress == "bf16":
+        return 2.0 * size
+    if compress == "int8_ef":
+        blocks = -(-size // compression.BLOCK)
+        return float(blocks * compression.BLOCK + 4 * blocks)  # q + scales
+    return 4.0 * size
+
+
+def _sync_bytes_per_round(kind, sync, compress, *, op, n, k, num_workers,
+                          a2a_schedule=()):
+    """Analytic per-round sync payload: bytes ONE worker sends per round.
+
+    Derived from the dispatch row, not measured — the model quantity the
+    compressed wire formats shrink.  For the participation-asymmetric a2a
+    exchanges the per-worker send count varies with the neighbor graph, so
+    the total across workers is averaged over P.  At P = 1 every strategy
+    skips its collective: 0 bytes.
+    """
+    if num_workers <= 1:
+        return 0.0
+    slab = n // num_workers
+    if kind in ("dense_gs", "banded_gs"):
+        return 4.0 * slab * k                      # all-gather of slab delta
+    if kind == "halo_gs":
+        halo = op.bands * op.block
+        return 2.0 * _payload_bytes(halo * k, compress)   # two edges
+    if kind == "sparse_gs":
+        if sync == "a2a":
+            sends = sum(len(pairs) for _, pairs in a2a_schedule)
+            return 4.0 * slab * k * sends / num_workers
+        return 4.0 * slab * k                      # all-gather of slab
+    if kind in ("dense_rk", "banded_rk"):
+        return _payload_bytes(n * k, compress)     # full-delta psum
+    if kind == "sparse_rk":
+        if sync == "a2a":
+            reduce_scheds, bcast_scheds = a2a_schedule
+            sends = (sum(len(p) for p in reduce_scheds)
+                     + sum(len(p) for p in bcast_scheds))
+            return 4.0 * slab * k * sends / num_workers
+        return _payload_bytes(n * k, compress)     # full-delta psum
+    raise ValueError(kind)  # pragma: no cover - guarded by dispatch
+
 
 def _fused_band_tiles(op):
     """Zero-padded border tiles for the fused banded sweeps (one packing
@@ -889,12 +1009,12 @@ def _fused_band_tiles(op):
     jax.jit,
     static_argnames=("kind", "mesh", "axis", "rounds", "local_steps", "block",
                      "beta", "unroll", "with_metrics", "sync",
-                     "a2a_schedule", "fused", "overlap"),
+                     "a2a_schedule", "fused", "overlap", "compress"),
 )
 def _distributed_impl(kind, op, b, x0, xs, key, *, mesh, axis, rounds,
                       local_steps, block, beta, unroll, with_metrics,
                       sync="allgather", a2a_schedule=(), a2a_masks=None,
-                      fused=False, overlap=False):
+                      fused=False, overlap=False, compress="none"):
     num_workers = mesh.shape[axis]
     k = b.shape[1]
     zero_m = (jnp.zeros((k,), jnp.float32), jnp.zeros((k,), jnp.float32))
@@ -930,7 +1050,8 @@ def _distributed_impl(kind, op, b, x0, xs, key, *, mesh, axis, rounds,
             op, b, x0, xs, key, mesh=mesh, axis=axis, rounds=rounds,
             local_steps=local_steps, beta=beta, with_metrics=with_metrics,
             num_workers=num_workers, zero_m=zero_m, local_scan=local_scan,
-            round_scan=round_scan, fused=fused, overlap=overlap)
+            round_scan=round_scan, fused=fused, overlap=overlap,
+            compress=compress)
     elif kind == "dense_rk":
         x, errs, resids = _dense_rk(
             op.A, b, x0, xs, key, mesh=mesh, axis=axis, rounds=rounds,
@@ -956,7 +1077,8 @@ def _distributed_impl(kind, op, b, x0, xs, key, *, mesh, axis, rounds,
             local_steps=local_steps, beta=beta, with_metrics=with_metrics,
             num_workers=num_workers, zero_m=zero_m, local_scan=local_scan,
             round_scan=round_scan, sync=sync, a2a_schedule=a2a_schedule,
-            a2a_masks=a2a_masks, fused=fused, overlap=overlap)
+            a2a_masks=a2a_masks, fused=fused, overlap=overlap,
+            compress=compress)
     else:  # pragma: no cover - guarded by solve_distributed
         raise ValueError(kind)
 
@@ -1123,7 +1245,7 @@ def _banded_gs(op, b, x0, xs, key, *, mesh, axis, rounds, local_steps, beta,
 
 def _halo_gs(op, b, x0, xs, key, *, mesh, axis, rounds, local_steps, beta,
              with_metrics, num_workers, zero_m, local_scan, round_scan,
-             fused=False, overlap=False):
+             fused=False, overlap=False, compress="none"):
     """Block-banded slab GS; neighbor halo exchange instead of all-gather.
 
     Iterates are IDENTICAL to the all-gather strategy — the gathered entries
@@ -1143,6 +1265,15 @@ def _halo_gs(op, b, x0, xs, key, *, mesh, axis, rounds, local_steps, beta,
     on round r's sweep and XLA can run them concurrently — the halos a
     sweep reads are one round staler, and staleness counters measure the
     resulting lag (see ``ParallelSolveResult.lag``).
+
+    ``compress`` quantizes the edge payloads on the wire (bf16 round, or
+    absolute int8 blocks + scales).  No error feedback: an edge is *state*
+    — the neighbor's current boundary rows, re-sent fresh every round — so
+    per-round quantization error never accumulates across rounds the way a
+    compressed additive delta would.  Only the halo copies are perturbed;
+    the owned slab each worker returns is never compressed, and the
+    metrics exchange of ``xs`` stays exact so the recorded A-norm error
+    measures the true trajectory of the compressed run.
     """
     block, bands, nb = op.block, op.bands, op.nb
     n, k = b.shape
@@ -1159,20 +1290,35 @@ def _halo_gs(op, b, x0, xs, key, *, mesh, axis, rounds, local_steps, beta,
     def worker(Ab_sh, b_sh, x0_sh, keys, *maybe_xs):
         w = jax.lax.axis_index(axis)
 
-        def install(xw, lo_edge, hi_edge):
+        def wire_edge(e):
+            # What the compressed wire does to an outgoing edge.  Applied
+            # sender-side before the ppermute so the collective carries the
+            # narrow payload; identity under compress="none".
+            if compress == "bf16":
+                return compression.bf16_roundtrip_array(e)
+            if compress == "int8_ef":
+                return compression.roundtrip_array(e)
+            return e
+
+        def install(xw, lo_edge, hi_edge, *, codec=True):
             # lo/hi_edge: my top/bottom owned rows -> neighbors' halos.
+            if codec:
+                lo_edge, hi_edge = wire_edge(lo_edge), wire_edge(hi_edge)
             from_prev = jax.lax.ppermute(hi_edge, axis, down)   # w-1's bottom
             from_next = jax.lax.ppermute(lo_edge, axis, up)     # w+1's top
             xw = jax.lax.dynamic_update_slice_in_dim(xw, from_prev, 0, 0)
             return jax.lax.dynamic_update_slice_in_dim(
                 xw, from_next, halo + slab, 0)
 
-        def exchange(xw):
+        def exchange(xw, *, codec=True):
             own = jax.lax.dynamic_slice_in_dim(xw, halo, slab, 0)
-            return install(xw, own[:halo], own[-halo:])
+            return install(xw, own[:halo], own[-halo:], codec=codec)
 
         if have_xs:
-            xs_w = exchange(jnp.pad(maybe_xs[0], ((halo, halo), (0, 0))))
+            # Metrics-only exchange: x* halos travel exact so the recorded
+            # error norm is not itself perturbed by the codec.
+            xs_w = exchange(jnp.pad(maybe_xs[0], ((halo, halo), (0, 0))),
+                            codec=False)
 
         def local_phase(xw, rkey):
             rkey = jax.random.fold_in(rkey, w)
@@ -1627,7 +1773,7 @@ def _sparse_gs(op, b, x0, xs, key, *, mesh, axis, rounds, local_steps, beta,
 def _sparse_rk(op, b, x0, xs, key, *, mesh, axis, rounds, local_steps, beta,
                with_metrics, num_workers, zero_m, local_scan, round_scan,
                sync="psum", a2a_schedule=(), a2a_masks=None, fused=False,
-               overlap=False):
+               overlap=False, compress="none"):
     """Row-sparse Kaczmarz with per-worker LOCAL sampling (CsrOp / EllOp).
 
     The wall-clock-faithful scheme: each worker samples its ``local_steps``
@@ -1669,6 +1815,20 @@ def _sparse_rk(op, b, x0, xs, key, *, mesh, axis, rounds, local_steps, beta,
     flushed with one trailing exchange after the scan so the returned
     iterate contains every update.  Staleness counters measure the
     per-round lag.
+
+    ``compress`` shrinks the psum payload (a2a is forced back to psum by
+    the caller — its bitwise-psum invariant cannot survive lossy bits):
+    each worker sends its round delta bf16-rounded or int8-quantized and
+    applies ``psum(sent) - sent`` — its OWN updates stay exact in its
+    replica, only the foreign contributions arrive rounded, so the scheme
+    perturbs exactly what the wire carries.  ``int8_ef`` additionally
+    carries a per-worker error-feedback residual through the round scan
+    (quantize ``delta + residual``, keep the quantization error as the
+    next residual — Karimireddy-style EF), so dropped bits are re-sent
+    rather than lost; the residual is flushed with one exact trailing
+    psum after the scan (after the overlap flush, when both compose), so
+    the RETURNED iterate contains every update while the per-round
+    metrics keep measuring the true compressed trajectory.
     """
     m, k = b.shape
     n = x0.shape[0]
@@ -1685,6 +1845,11 @@ def _sparse_rk(op, b, x0, xs, key, *, mesh, axis, rounds, local_steps, beta,
     cs = n // num_workers if n % num_workers == 0 else None
     if a2a_masks is None:
         a2a_masks = jnp.zeros((num_workers, max(num_workers - 1, 0)), bool)
+    if num_workers == 1 or use_a2a:
+        # P = 1 has no collective to compress; a2a was already forced back
+        # to psum by the caller.  Normalizing here keeps the carries clean.
+        compress = "none"
+    use_ef = compress == "int8_ef"
 
     def worker(vals_sh, cols_sh, b_sh, rn_sh, masks_sh, keys, x0_full,
                xs_full):
@@ -1733,6 +1898,21 @@ def _sparse_rk(op, b, x0, xs, key, *, mesh, axis, rounds, local_steps, beta,
                     xw, jnp.where(masks_sh[0, si], upd, cur), src * cs, 0)
             return xw
 
+        def wire(payload, resid):
+            """(bytes actually sent, next EF residual) for one payload.
+
+            Identity under compress="none"; bf16 rounds the payload; int8
+            EF quantizes (payload + residual) and keeps the quantization
+            error as the next residual so no update is permanently lost.
+            """
+            if compress == "bf16":
+                return compression.bf16_roundtrip_array(payload), resid
+            if use_ef:
+                corrected = payload + resid
+                sent = compression.roundtrip_array(corrected)
+                return sent, corrected - sent
+            return payload, resid
+
         def local_phase(xw, rkey):
             rkey = jax.random.fold_in(rkey, w)
             picks = sample_rows(rkey, rn_sh, local_steps)
@@ -1775,32 +1955,59 @@ def _sparse_rk(op, b, x0, xs, key, *, mesh, axis, rounds, local_steps, beta,
             foreign = jnp.arange(num_workers) != w
 
             def round_body(carry, rkey):
-                xw, dprev, cnt, seen = carry
+                if use_ef:
+                    xw, dprev, resid, cnt, seen = carry
+                else:
+                    (xw, dprev, cnt, seen), resid = carry, None
                 cnt_all = jax.lax.all_gather(cnt, axis)
                 lag = jax.lax.pmax(
                     jnp.sum(jnp.where(foreign, cnt_all - seen, 0)), axis)
                 seen = jnp.where(foreign, cnt_all, seen)
                 cnt = cnt + local_steps
                 xw, delta = local_phase(xw, rkey)
-                xw = refresh(xw, dprev)      # previous round's deltas land
-                return (xw, delta, cnt, seen), (metrics(xw), lag)
+                sent, resid = wire(dprev, resid)
+                xw = refresh(xw, sent)       # previous round's deltas land
+                carry = ((xw, delta, resid, cnt, seen) if use_ef
+                         else (xw, delta, cnt, seen))
+                return carry, (metrics(xw), lag)
 
             xw0 = pvary(x0_full, (axis,))
             d0 = pvary(jnp.zeros_like(xw0), (axis,))
             cnt0 = pvary(jnp.zeros((), jnp.int32), (axis,))
             seen0 = pvary(jnp.zeros((num_workers,), jnp.int32), (axis,))
-            (xw, dlast, *_), ((errs, resids), lags) = round_scan(
-                round_body, (xw0, d0, cnt0, seen0), keys)
-            # Flush the final round's in-flight delta so the returned
-            # iterate contains every update.
-            xw = refresh(xw, dlast)
+            carry0 = ((xw0, d0, pvary(jnp.zeros_like(xw0), (axis,)), cnt0,
+                       seen0) if use_ef else (xw0, d0, cnt0, seen0))
+            (xw, dlast, *rest), ((errs, resids), lags) = round_scan(
+                round_body, carry0, keys)
+            # Flush the final round's in-flight delta — plus, under EF, the
+            # outstanding residual — with one EXACT trailing exchange so
+            # the returned iterate contains every update.
+            xw = refresh(xw, dlast + rest[0] if use_ef else dlast)
             if use_a2a:
                 return col_slab(xw, w), errs, resids, lags
             return xw, errs, resids, lags
 
+        if use_ef:
+            def round_body(carry, rkey):
+                xw, resid = carry
+                xw, delta = local_phase(xw, rkey)
+                sent, resid = wire(delta, resid)
+                xw = refresh(xw, sent)
+                return (xw, resid), metrics(xw)
+
+            xw0 = pvary(x0_full, (axis,))
+            resid0 = pvary(jnp.zeros_like(xw0), (axis,))
+            (xw, resid), (errs, resids) = round_scan(
+                round_body, (xw0, resid0), keys)
+            # Exact trailing flush of the outstanding residual: per-round
+            # metrics above measured the compressed trajectory; the
+            # returned iterate misses no update.
+            return refresh(xw, resid), errs, resids
+
         def round_body(xw, rkey):
             xw, delta = local_phase(xw, rkey)
-            xw = refresh(xw, delta)
+            sent, _ = wire(delta, None)
+            xw = refresh(xw, sent)
             return xw, metrics(xw)
 
         xw, (errs, resids) = round_scan(round_body, pvary(x0_full, (axis,)),
@@ -1844,6 +2051,7 @@ def solve(
     bands: int = 2,
     width: int = 32,
     rows_per_panel: int = 8,
+    storage_dtype=None,
     gs_block: int = 1,
     x0: jax.Array | None = None,
     sync: str = "auto",
@@ -1862,18 +2070,22 @@ def solve(
     operator ("dense", "banded", "ell", "csr"); ``schedule`` picks
     sequential / bounded-delay simulator / distributed execution (see
     ``Schedule``).  ``block``/``bands`` parameterize the banded format,
-    ``width`` the ELL format, ``rows_per_panel`` the CSR panel layout, and
-    ``gs_block`` the dense/CSR block-GS action granularity.  ``fused``
-    overrides ``schedule.fused`` (``None`` defers to the schedule): run
-    inner loops as fused Pallas sweep kernels where the action × format
-    has one, falling back to the per-step scan with a warning elsewhere.
+    ``width`` the ELL format, ``rows_per_panel`` the CSR panel layout,
+    ``storage_dtype`` the precision the operator's coefficients are held
+    in (``None`` keeps the input dtype — bitwise-unchanged; the iterate,
+    ``b`` and all accumulation stay f32 regardless), and ``gs_block`` the
+    dense/CSR block-GS action granularity.  ``fused`` overrides
+    ``schedule.fused`` (``None`` defers to the schedule): run inner loops
+    as fused Pallas sweep kernels where the action × format has one,
+    falling back to the per-step scan with a warning elsewhere.
     """
     if action is None:
         action = "rk" if hasattr(problem, "sigma_min") else "gs"
     schedule.validate()
     use_fused = schedule.fused if fused is None else fused
     op = as_operator(problem.A, format, block=block, bands=bands, width=width,
-                     rows_per_panel=rows_per_panel)
+                     rows_per_panel=rows_per_panel,
+                     storage_dtype=storage_dtype)
     if x0 is None:
         x0 = jnp.zeros_like(problem.x_star)
 
@@ -1885,8 +2097,8 @@ def solve(
             mesh=mesh, axis=axis, rounds=schedule.rounds,
             local_steps=schedule.local_steps, block=gs_block, beta=beta,
             sync=sync, partition=schedule.partition, fused=use_fused,
-            overlap=schedule.overlap, unroll=unroll,
-            with_metrics=with_metrics)
+            overlap=schedule.overlap, compress=schedule.compress,
+            unroll=unroll, with_metrics=with_metrics)
     if schedule.tau > 0:
         if delay_key is None:
             raise ValueError("the bounded-delay simulator needs a delay_key")

@@ -44,8 +44,41 @@ __all__ = [
     "banded_panel_residual_window",
     "banded_rows_matvec",
     "banded_window_matvec",
+    "canonical_storage_dtype",
     "slab_neighbor_matrix",
 ]
+
+# The storage-precision axis (DESIGN.md §7): coefficient panels may be held
+# low-precision while row_norms_sq, sampling scales, and the iterate stay
+# f32 — the kernels up-cast tiles on load and accumulate in f32.  ``None``
+# keeps the input dtype untouched (the pre-existing behavior, bitwise).
+_STORAGE_DTYPES = ("float32", "bfloat16")
+
+
+def canonical_storage_dtype(storage_dtype):
+    """Validate/normalize a ``storage_dtype`` argument to a jnp dtype.
+
+    ``None`` -> None (keep the input dtype, the bitwise-pinned default).
+    """
+    if storage_dtype is None:
+        return None
+    name = (storage_dtype if isinstance(storage_dtype, str)
+            else jnp.dtype(storage_dtype).name)
+    if name not in _STORAGE_DTYPES:
+        raise ValueError(
+            f"unknown storage_dtype: {storage_dtype!r} "
+            f"(choose from {_STORAGE_DTYPES})")
+    return jnp.dtype(name)
+
+
+def _index_dtype(values_dtype, n: int):
+    """Column-index dtype paired with a value dtype: low-precision values
+    narrow the index stream to int16 when every column id fits, halving
+    the index bytes alongside the value bytes (the sparse paths are
+    bandwidth-bound, so the index stream is half the win)."""
+    if jnp.dtype(values_dtype).itemsize < 4 and n <= np.iinfo(np.int16).max:
+        return np.int16
+    return np.int32
 
 
 def slab_neighbor_matrix(rows, cols, real, m: int, n: int,
@@ -120,11 +153,14 @@ class DenseOp:
         return b[rows] - self.A[rows] @ x
 
     def row_norms_sq(self) -> jax.Array:
-        return jnp.einsum("mn,mn->m", self.A, self.A)
+        """Per-row ||A_i||² — always f32 (sampling/divisors stay exact)."""
+        A = self.A.astype(jnp.float32)
+        return jnp.einsum("mn,mn->m", A, A)
 
     def rk_update(self, x, r, g, beta):
-        """Kaczmarz row action, exact legacy operation order."""
-        return x + beta * self.A[r][:, None] * g[None, :]
+        """Kaczmarz row action, exact legacy operation order (the row
+        up-casts to f32; identity for f32 storage)."""
+        return x + beta * self.A[r].astype(jnp.float32)[:, None] * g[None, :]
 
     def nnz_cost(self) -> int:
         m, n = self.A.shape
@@ -159,9 +195,14 @@ class BlockBandedOp:
         return cls(*children, bands=aux)
 
     @classmethod
-    def from_dense(cls, A: jax.Array, *, block: int, bands: int) -> "BlockBandedOp":
+    def from_dense(cls, A: jax.Array, *, block: int, bands: int,
+                   storage_dtype=None) -> "BlockBandedOp":
         from repro.kernels.bbmv import dense_to_bands
-        return cls(dense_to_bands(A, bands=bands, block=block), bands=bands)
+        tiles = dense_to_bands(A, bands=bands, block=block)
+        dt = canonical_storage_dtype(storage_dtype)
+        if dt is not None:
+            tiles = tiles.astype(dt)
+        return cls(tiles, bands=bands)
 
     @property
     def nb(self) -> int:
@@ -241,8 +282,11 @@ class BlockBandedOp:
             self.A_bands, b, x, bi, bi, self.nb, self.block, self.bands)
 
     def row_norms_sq(self) -> jax.Array:
-        """Per-row ||A_i||^2 from the tiles, shaped (nb, block)."""
-        return jnp.sum(self.A_bands * self.A_bands, axis=(1, 3))
+        """Per-row ||A_i||^2 from the tiles, shaped (nb, block) — always
+        computed (and returned) in f32 regardless of the tile storage
+        dtype: the sampling distribution and RK divisors stay exact."""
+        t = self.A_bands.astype(jnp.float32)
+        return jnp.sum(t * t, axis=(1, 3))
 
     def nnz_cost(self) -> int:
         return self.nb * self.width * self.block * self.block
@@ -284,9 +328,14 @@ class EllOp:
         return cls(*children)
 
     @classmethod
-    def from_dense(cls, A: jax.Array, *, width: int) -> "EllOp":
+    def from_dense(cls, A: jax.Array, *, width: int,
+                   storage_dtype=None) -> "EllOp":
         from repro.core.spd import ell_from_dense
         vals, cols = ell_from_dense(A, width)
+        dt = canonical_storage_dtype(storage_dtype)
+        if dt is not None:
+            vals = vals.astype(dt)
+            cols = cols.astype(_index_dtype(dt, A.shape[1]))
         return cls(vals, cols)
 
     @property
@@ -312,16 +361,23 @@ class EllOp:
         return ref.spmv_ell_ref(self.vals, self.cols, x)
 
     def row_dot(self, r, x: jax.Array) -> jax.Array:
-        """``A[r] @ x`` in Θ(width): gather the row's columns only."""
-        return jnp.einsum("w,wk->k", self.vals[r], x[self.cols[r]])
+        """``A[r] @ x`` in Θ(width): gather the row's columns only (the
+        value window up-casts to f32; identity for f32 storage)."""
+        return jnp.einsum("w,wk->k", self.vals[r].astype(jnp.float32),
+                          x[self.cols[r]])
 
     def row_norms_sq(self) -> jax.Array:
-        return jnp.einsum("nw,nw->n", self.vals, self.vals)
+        """Per-row ||A_i||² — always f32 (sampling/divisors stay exact)."""
+        v = self.vals.astype(jnp.float32)
+        return jnp.einsum("nw,nw->n", v, v)
 
     def rk_update(self, x, r, g, beta):
         """Kaczmarz row action as a Θ(width) scatter-add (padding cols carry
-        zero values, so duplicate indices contribute nothing)."""
-        return x.at[self.cols[r]].add(beta * self.vals[r][:, None] * g[None, :])
+        zero values, so duplicate indices contribute nothing).  The value
+        window up-casts to f32 so low-precision storage still applies an
+        f32-accumulated update (identity for f32 storage)."""
+        vw = self.vals[r].astype(jnp.float32)
+        return x.at[self.cols[r]].add(beta * vw[:, None] * g[None, :])
 
     def nnz_cost(self) -> int:
         n, w = self.vals.shape
@@ -426,8 +482,13 @@ class CsrOp:
 
     @classmethod
     def from_dense(cls, A: jax.Array, *, rows_per_panel: int = 8,
-                   lane: int = 128) -> "CsrOp":
-        """Exact CSR capture of every nonzero of dense ``A`` (host-side)."""
+                   lane: int = 128, storage_dtype=None) -> "CsrOp":
+        """Exact CSR capture of every nonzero of dense ``A`` (host-side).
+
+        ``storage_dtype`` rounds the captured *values* to a low-precision
+        storage dtype (the pattern is taken from the input dtype first, so
+        the stored sparsity is dtype-independent); column indices narrow
+        to int16 alongside when every id fits (``_index_dtype``)."""
         An = np.asarray(A)
         m, n = An.shape
         nz = An != 0.0
@@ -439,6 +500,9 @@ class CsrOp:
             cj = np.nonzero(nz[r])[0]
             row_vals[r, :cj.size] = An[r, cj]
             row_cols[r, :cj.size] = cj
+        dt = canonical_storage_dtype(storage_dtype)
+        if dt is not None:
+            row_vals = row_vals.astype(dt)
         return cls._assemble(row_vals, row_cols, counts, shape=(m, n),
                              rows_per_panel=rows_per_panel, lane=lane)
 
@@ -466,8 +530,13 @@ class CsrOp:
         W = int(-(-max(int(panel_nnz.max()) if num_panels else 1, 1) // lane)
                 * lane)
         total = num_panels * W + row_cap        # row-window slack at the end
-        data = np.zeros((total,), np.asarray(row_vals).dtype)
-        cols = np.zeros((total,), np.int32)
+        vals_np = np.asarray(row_vals)
+        data = np.zeros((total,), vals_np.dtype)
+        # Low-precision values narrow the column stream too (re-derived
+        # here so re-assembly — e.g. partition.permute_rows — preserves
+        # the compact layout); row_id/row_start stay int32: row_start
+        # addresses the flat layout, whose extent is not bounded by n.
+        cols = np.zeros((total,), _index_dtype(vals_np.dtype, n))
         rows = np.zeros((total,), np.int32)
         row_start = np.zeros((max(m, 1),), np.int32)
         for p in range(num_panels):
@@ -595,9 +664,10 @@ class CsrOp:
         return jnp.where(mask, vw, 0.0), jnp.where(mask, cw, 0)
 
     def row_dot(self, r, x: jax.Array) -> jax.Array:
-        """``A[r] @ x`` in Θ(row_cap): gather the row's columns only."""
+        """``A[r] @ x`` in Θ(row_cap): gather the row's columns only (the
+        value window up-casts to f32; identity for f32 storage)."""
         vw, cw = self._row_window(r)
-        return jnp.einsum("w,wk->k", vw, x[cw])
+        return jnp.einsum("w,wk->k", vw.astype(jnp.float32), x[cw])
 
     def row_panel(self, bi, block: int) -> jax.Array:
         """Dense (block, n) rows of aligned block ``bi`` (block-GS reads)."""
@@ -613,13 +683,17 @@ class CsrOp:
         return b[rows] - dots
 
     def row_norms_sq(self) -> jax.Array:
-        return jax.ops.segment_sum(self.data * self.data, self.row_id,
+        """Per-row ||A_i||² — always f32 (sampling/divisors stay exact)."""
+        d = self.data.astype(jnp.float32)
+        return jax.ops.segment_sum(d * d, self.row_id,
                                    num_segments=self._shape[0])
 
     def rk_update(self, x, r, g, beta):
         """Kaczmarz row action as a Θ(row_cap) scatter-add (masked padding
-        slots carry zero values, so duplicate indices contribute nothing)."""
+        slots carry zero values, so duplicate indices contribute nothing).
+        The value window up-casts to f32 (identity for f32 storage)."""
         vw, cw = self._row_window(r)
+        vw = vw.astype(jnp.float32)
         return x.at[cw].add(beta * vw[:, None] * g[None, :])
 
     def padded_rows(self) -> tuple[jax.Array, jax.Array]:
@@ -689,16 +763,26 @@ class CsrOp:
 
 
 def as_operator(A: jax.Array, format: str = "dense", *, block: int = 128,
-                bands: int = 2, width: int = 32, rows_per_panel: int = 8):
-    """Build an operator of the requested ``format`` from a dense matrix."""
+                bands: int = 2, width: int = 32, rows_per_panel: int = 8,
+                storage_dtype=None):
+    """Build an operator of the requested ``format`` from a dense matrix.
+
+    ``storage_dtype`` ("float32"/"bfloat16"/None) selects the coefficient
+    storage precision for every format; ``None`` keeps the input dtype
+    (the bitwise-pinned default).  The iterate, ``row_norms_sq``, and all
+    kernel accumulators stay f32 regardless.
+    """
+    dt = canonical_storage_dtype(storage_dtype)
     if format == "dense":
-        return DenseOp(A)
+        return DenseOp(A if dt is None else jnp.asarray(A).astype(dt))
     if format == "banded":
-        return BlockBandedOp.from_dense(A, block=block, bands=bands)
+        return BlockBandedOp.from_dense(A, block=block, bands=bands,
+                                        storage_dtype=storage_dtype)
     if format == "ell":
-        return EllOp.from_dense(A, width=width)
+        return EllOp.from_dense(A, width=width, storage_dtype=storage_dtype)
     if format == "csr":
-        return CsrOp.from_dense(A, rows_per_panel=rows_per_panel)
+        return CsrOp.from_dense(A, rows_per_panel=rows_per_panel,
+                                storage_dtype=storage_dtype)
     raise ValueError(f"unknown operator format: {format!r}")
 
 

@@ -192,7 +192,9 @@ def permute_rows(op, rp: RowPermutation, *, symmetric: bool = False):
         vals = op.vals[rp.perm]
         cols = op.cols[rp.perm]
         if symmetric:
-            cols = rp.inv[cols]
+            # relabeling through int32 ``inv`` widens; restore the stored
+            # index dtype (ids are bounded by n, so narrowing is safe)
+            cols = rp.inv[cols].astype(op.cols.dtype)
         return EllOp(vals, cols)
     if isinstance(op, CsrOp):
         vals, cols = map(np.asarray, op.padded_rows())

@@ -220,3 +220,46 @@ def async_rk_factor(A: jax.Array, tau: int, beta: float,
         rho_rk = float(rk_rho(A))
     nu = nu_tau(rho_rk, tau, beta)
     return 1.0 - nu * (s[-1] ** 2) / jnp.sum(s**2)
+
+
+# ---------------------------------------------------------------------------
+# Perturbed rates — what bounded inexactness (quantized payloads, low-
+# precision storage) does to a linear contraction
+# ---------------------------------------------------------------------------
+#
+# The iteration tolerates bounded perturbation at a quantified rate cost
+# (the inexactness/staleness tolerance made explicit in Liu–Wright's
+# asynchronous parallel RK and Chow–Frommer–Szyld's asynchronous Richardson
+# practice): if the exact iteration contracts the error norm by sqrt(factor)
+# per step and each step additionally injects a relative perturbation eps
+# (e.g. the codec's measured ``quantization_error_bound`` over the payload
+# norm), the perturbed iteration still contracts at
+# (sqrt(factor) + eps)^2 per step — worst case, perturbation aligned with
+# the error.  Once sqrt(factor) + eps >= 1 the contraction argument gives
+# nothing (the iterate stalls at an eps-ball floor instead of diverging,
+# but the bound degenerates), hence the min with 1.
+
+def perturbed_factor(factor: float, eps: float) -> float:
+    """Per-iteration contraction of the eps-perturbed iteration:
+    min(1, (sqrt(max(factor, 0)) + eps)^2)."""
+    if eps < 0:
+        raise ValueError(f"perturbation bound must be >= 0, got {eps}")
+    root = math.sqrt(max(float(factor), 0.0)) + float(eps)
+    return min(1.0, root * root)
+
+
+def iteration_inflation(factor: float, eps: float) -> float:
+    """Predicted iterations-to-tolerance ratio (perturbed / exact):
+    log(factor) / log(perturbed_factor(factor, eps)).
+
+    Both factors must be contractions (< 1); a degenerate perturbed factor
+    (>= 1, i.e. eps at least cancels the contraction) returns ``inf`` —
+    the bound predicts no convergence to arbitrary tolerance, only an
+    eps-ball floor."""
+    f = float(factor)
+    if not 0.0 < f < 1.0:
+        raise ValueError(f"exact factor must be in (0, 1), got {factor}")
+    pf = perturbed_factor(f, eps)
+    if pf >= 1.0:
+        return math.inf
+    return math.log(f) / math.log(pf)

@@ -50,7 +50,7 @@ def _panel_body(i, vals_ref, cols_ref, rows_ref, x_ref, o_ref, *,
     """Shared per-panel segment-sum body (panel ``i`` of the grid)."""
     x = x_ref[...]                                   # (n, k) resident in VMEM
     vals = vals_ref[0]                               # (panel_width,)
-    cols = cols_ref[0]
+    cols = cols_ref[0].astype(jnp.int32)             # widen compact indices
     rows = rows_ref[0]
     xr = jnp.take(x, cols, axis=0)                   # (panel_width, k) gather
     contrib = vals[:, None].astype(jnp.float32) * xr.astype(jnp.float32)
@@ -209,7 +209,7 @@ def _sliced_body(vals_ref, cols_ref, x_ref, o_ref):
     """
     x = x_ref[...]                                   # (n, k) resident in VMEM
     vals = vals_ref[...]                             # (tile_rows, width)
-    cols = cols_ref[...]
+    cols = cols_ref[...].astype(jnp.int32)           # widen compact indices
     xr = jnp.take(x, cols.reshape(-1), axis=0)       # (tile_rows*width, k)
     xr = xr.reshape(cols.shape + (x.shape[1],))
     o_ref[...] = jnp.einsum(

@@ -18,7 +18,7 @@ from jax.experimental import pallas as pl
 def _kernel(vals_ref, cols_ref, x_ref, o_ref, *, width: int):
     x = x_ref[...]  # (n, k) resident in VMEM
     vals = vals_ref[...]  # (tile, width)
-    cols = cols_ref[...]  # (tile, width)
+    cols = cols_ref[...].astype(jnp.int32)  # (tile, width) widen compact ids
     acc = jnp.zeros(o_ref.shape, jnp.float32)
     for j in range(width):  # static unroll over ELL width
         xr = jnp.take(x, cols[:, j], axis=0)  # (tile, k) row gather

@@ -59,8 +59,8 @@ def _gs_kernel(idx_ref, base_ref, vals_ref, cols_ref, b_ref, x_ref, o_ref, *,
         o_ref[...] = x_ref[...]
 
     r = base_ref[0] + idx_ref[s]                     # global write row
-    vals = vals_ref[0]                               # (width,)
-    cols = cols_ref[0]
+    vals = vals_ref[0].astype(jnp.float32)           # (width,) f32 accumulate
+    cols = cols_ref[0].astype(jnp.int32)             # widen compact indices
     xg = jnp.take(o_ref[...], cols, axis=0)          # (width, k) gather
     gamma = b_ref[0] - jnp.einsum("w,wk->k", vals, xg)
     cur = o_ref[pl.ds(r, 1), :]
@@ -75,8 +75,8 @@ def _rk_kernel(idx_ref, vals_ref, cols_ref, b_ref, rn_ref, x_ref, o_ref, *,
     def _init():
         o_ref[...] = x_ref[...]
 
-    vals = vals_ref[0]                               # (width,)
-    cols = cols_ref[0]
+    vals = vals_ref[0].astype(jnp.float32)           # (width,) f32 accumulate
+    cols = cols_ref[0].astype(jnp.int32)             # widen compact indices
     xg = jnp.take(o_ref[...], cols, axis=0)          # (width, k) gather
     g = (b_ref[0] - jnp.einsum("w,wk->k", vals, xg)) / rn_ref[0, 0]
     # Scatter A_r^T g back as `width` sequential single-row RMWs in VMEM.
@@ -198,8 +198,8 @@ def _rk_delta_kernel(idx_ref, vals_ref, cols_ref, b_ref, rn_ref, x_ref,
         xo_ref[...] = x_ref[...]
         do_ref[...] = d_ref[...]
 
-    vals = vals_ref[0]                               # (width,)
-    cols = cols_ref[0]
+    vals = vals_ref[0].astype(jnp.float32)           # (width,) f32 accumulate
+    cols = cols_ref[0].astype(jnp.int32)             # widen compact indices
     xg = jnp.take(xo_ref[...], cols, axis=0)         # (width, k) gather
     g = (b_ref[0] - jnp.einsum("w,wk->k", vals, xg)) / rn_ref[0, 0]
     for j in range(width):

@@ -71,6 +71,16 @@ def main(argv=None):
                          "round r (csr format; dense falls back to lockstep "
                          "with a warning), at the cost of one extra round "
                          "of scheduled staleness")
+    ap.add_argument("--storage-dtype", choices=("float32", "bfloat16"),
+                    default=None,
+                    help="precision the operator's coefficients are stored "
+                         "in (row norms, iterate and accumulation stay "
+                         "f32); default keeps the input dtype bitwise")
+    ap.add_argument("--compress", choices=("none", "bf16", "int8_ef"),
+                    default="none",
+                    help="wire format of the distributed RK delta sync "
+                         "(csr format, psum wire; a2a falls back to psum "
+                         "with a warning under compression)")
     ap.add_argument("--workers", type=int, default=0,
                     help="0 = all local devices")
     ap.add_argument("--local-steps", type=int, default=0,
@@ -82,6 +92,9 @@ def main(argv=None):
             ap.error("--rk-sync a2a needs --format csr")
         if args.partition == "balanced":
             ap.error("--partition balanced needs --format csr")
+        if args.compress != "none":
+            ap.error("--compress needs --format csr (the dense delta psum "
+                     "has no compressed wire)")
 
     if args.format == "csr":
         prob = random_sparse_lsq(args.m, args.n, row_nnz=args.row_nnz,
@@ -100,6 +113,7 @@ def main(argv=None):
     iters = args.sweeps * m
     t0 = time.time()
     res = solve(prob, key=jax.random.key(1), format=args.format,
+                storage_dtype=args.storage_dtype,
                 schedule=Schedule(num_iters=iters, record_every=m,
                                   fused=args.fused))
     jax.block_until_ready(res.x)
@@ -112,6 +126,7 @@ def main(argv=None):
     t0 = time.time()
     ares = solve(prob, key=jax.random.key(1), delay_key=jax.random.key(2),
                  beta=beta, format=args.format,
+                 storage_dtype=args.storage_dtype,
                  schedule=Schedule(num_iters=iters, tau=args.tau,
                                    record_every=m))
     jax.block_until_ready(ares.x)
@@ -135,14 +150,18 @@ def main(argv=None):
     t0 = time.time()
     pres = solve(prob, key=jax.random.key(1), mesh=mesh, beta=pbeta,
                  format=args.format, sync=args.rk_sync,
+                 storage_dtype=args.storage_dtype,
                  schedule=Schedule(rounds=rounds, local_steps=local_steps,
                                    partition=args.partition,
-                                   fused=args.fused, overlap=args.overlap))
+                                   fused=args.fused, overlap=args.overlap,
+                                   compress=args.compress))
     jax.block_until_ready(pres.x)
     sampling = "local" if args.format == "csr" else "global-stream"
     print(f"  par RK     : P={workers} tau={ptau} beta~={pbeta:.3f} "
           f"sampling={sampling} sync={args.rk_sync} "
           f"partition={args.partition} overlap={args.overlap} "
+          f"compress={args.compress} "
+          f"({pres.bytes_per_round:.0f} B/round) "
           f"{rounds} rounds, relresid "
           f"{float(jnp.linalg.norm(pres.resid[-1]))/bn:.3e} "
           f"({time.time()-t0:.1f}s)")

@@ -56,6 +56,19 @@ def main(argv=None):
                          "extra round of scheduled staleness (sparse/halo "
                          "strategies; others fall back to lockstep with a "
                          "warning)")
+    ap.add_argument("--storage-dtype", choices=("float32", "bfloat16"),
+                    default=None,
+                    help="precision the operator's coefficients are stored "
+                         "in (row norms, iterate and accumulation stay "
+                         "f32); default keeps the input dtype bitwise")
+    ap.add_argument("--compress", choices=("none", "bf16", "int8_ef"),
+                    default="none",
+                    help="wire format of the distributed sync payload; the "
+                         "GS allgather/a2a exchanges are bitwise-pinned and "
+                         "have no compressed wire, so a non-'none' value "
+                         "falls back to the exact exchange with a warning "
+                         "(the knob compresses the sparse-RK delta psum and "
+                         "banded halo strategies)")
     ap.add_argument("--workers", type=int, default=0,
                     help="0 = all local devices")
     ap.add_argument("--local-steps", type=int, default=0,
@@ -90,7 +103,7 @@ def main(argv=None):
     iters = args.sweeps * n
     t0 = time.time()
     res = solve(prob, key=jax.random.key(1), format=args.format,
-                width=args.ell_width,
+                width=args.ell_width, storage_dtype=args.storage_dtype,
                 schedule=Schedule(num_iters=iters, record_every=n,
                                   fused=args.fused))
     jax.block_until_ready(res.x)
@@ -107,13 +120,18 @@ def main(argv=None):
     t0 = time.time()
     pres = solve(prob, key=jax.random.key(2), mesh=mesh, beta=beta,
                  format=args.format, width=args.ell_width, sync=args.sync,
+                 storage_dtype=args.storage_dtype,
                  schedule=Schedule(rounds=rounds, local_steps=local_steps,
                                    partition=args.partition,
-                                   fused=args.fused, overlap=args.overlap))
+                                   fused=args.fused, overlap=args.overlap,
+                                   compress=args.compress))
     jax.block_until_ready(pres.x)
+    bpr = ("" if pres.bytes_per_round is None
+           else f"({pres.bytes_per_round:.0f} B/round) ")
     print(f"  async RGS  : P={workers} tau={tau} beta~={beta:.3f} "
           f"format={args.format} sync={args.sync} "
           f"partition={args.partition} overlap={args.overlap} "
+          f"compress={args.compress} {bpr}"
           f"{rounds} rounds, resid {float(pres.resid[-1,0]):.3e} "
           f"({time.time()-t0:.1f}s)")
     if pres.lag is not None:

@@ -1,10 +1,17 @@
-"""Gradient compression codec: int8 quantization with per-block scales.
+"""Gradient/delta compression codec: int8 quantization with per-block scales.
 
-Used as an optional wire format for the cross-pod gradient exchange (the
-"pod" axis rides DCN, ~25x slower than ICI): quantize -> all-reduce in low
-precision -> dequantize.  The codec is error-feedback-free but unbiased-ish
-(symmetric stochastic-free rounding); an error-feedback accumulator is
-provided for drift-free long runs.
+Used as an optional wire format for two exchanges:
+
+* the cross-pod gradient all-reduce (the "pod" axis rides DCN, ~25x slower
+  than ICI): quantize -> all-reduce in low precision -> dequantize;
+* the solver engine's compressed collective payloads
+  (``core.engine.Schedule(compress=...)``): the RK round delta and the
+  banded halo edges travel the wire as int8 blocks + f32 scales (or as a
+  plain bf16 round) via the per-array helpers below.
+
+The codec is error-feedback-free but unbiased-ish (symmetric
+stochastic-free rounding); an error-feedback accumulator is provided for
+drift-free long runs.
 
 Under pjit we expose the codec as a pair of pure functions applied around
 the gradient all-reduce point; the roundtrip is also used by tests to bound
@@ -30,17 +37,24 @@ def _pad_len(n: int) -> int:
     return -(-n // BLOCK) * BLOCK
 
 
-def quantize(tree) -> Compressed:
-    def leaf(g):
-        flat = g.astype(jnp.float32).reshape(-1)
-        pad = _pad_len(flat.size)
-        flat = jnp.pad(flat, (0, pad - flat.size)).reshape(-1, BLOCK)
-        scale = jnp.max(jnp.abs(flat), axis=1, keepdims=True) / 127.0
-        q = jnp.round(flat / jnp.maximum(scale, 1e-12)).astype(jnp.int8)
-        return q, scale[:, 0]
+def _quantize_leaf(g):
+    """(q, scales) of one array: int8 blocks of BLOCK with f32 scales."""
+    flat = g.astype(jnp.float32).reshape(-1)
+    pad = _pad_len(flat.size)
+    flat = jnp.pad(flat, (0, pad - flat.size)).reshape(-1, BLOCK)
+    scale = jnp.max(jnp.abs(flat), axis=1, keepdims=True) / 127.0
+    q = jnp.round(flat / jnp.maximum(scale, 1e-12)).astype(jnp.int8)
+    return q, scale[:, 0]
 
-    qs = jax.tree.map(lambda g: leaf(g)[0], tree)
-    ss = jax.tree.map(lambda g: leaf(g)[1], tree)
+
+def quantize(tree) -> Compressed:
+    """One pass per leaf: q and scales come out of a single ``tree.map``
+    (the old two-``tree.map`` form ran ``_quantize_leaf`` twice per leaf,
+    doubling the quantization work)."""
+    leaves, treedef = jax.tree.flatten(tree)
+    pairs = [_quantize_leaf(g) for g in leaves]
+    qs = jax.tree.unflatten(treedef, [q for q, _ in pairs])
+    ss = jax.tree.unflatten(treedef, [s for _, s in pairs])
     shapes = jax.tree.map(lambda g: g.shape, tree)
     return Compressed(q=qs, scales=ss, shapes=shapes)
 
@@ -56,6 +70,47 @@ def dequantize(c: Compressed, like):
 def roundtrip(tree):
     """quantize -> dequantize (what the wire does to a gradient)."""
     return dequantize(quantize(tree), tree)
+
+
+# ---------------------------------------------------------------------------
+# Per-array helpers — the engine's compressed-sync wire format
+# ---------------------------------------------------------------------------
+# The distributed engine compresses a single (rows, k) payload inside a jit
+# region; these are the single-leaf forms of the codec above (same BLOCK,
+# same scale rule) plus the measured error bound theory.py consumes.
+
+def quantize_array(g: jax.Array) -> tuple[jax.Array, jax.Array]:
+    """int8 blocks + f32 per-block scales of one array."""
+    return _quantize_leaf(g)
+
+
+def dequantize_array(q: jax.Array, scales: jax.Array, *, shape,
+                     dtype=jnp.float32) -> jax.Array:
+    flat = q.astype(jnp.float32) * scales[:, None]
+    size = 1
+    for d in shape:
+        size *= d
+    return flat.reshape(-1)[:size].reshape(shape).astype(dtype)
+
+
+def roundtrip_array(g: jax.Array) -> jax.Array:
+    """What the int8 wire does to one array (quantize -> dequantize)."""
+    q, s = _quantize_leaf(g)
+    return dequantize_array(q, s, shape=g.shape, dtype=g.dtype)
+
+
+def bf16_roundtrip_array(g: jax.Array) -> jax.Array:
+    """What a bf16 wire does to one array (round to bf16, widen back)."""
+    return g.astype(jnp.bfloat16).astype(g.dtype)
+
+
+def quantization_error_bound(g: jax.Array) -> jax.Array:
+    """Elementwise worst-case int8 roundtrip error of ``g``: half the
+    largest per-block scale (|dequant(quant(g)) - g| <= scale/2).  This is
+    the measured bound ``theory.perturbed_factor`` turns into a predicted
+    rate penalty."""
+    _, scales = _quantize_leaf(g)
+    return jnp.max(scales) * 0.5
 
 
 class ErrorFeedback(NamedTuple):

@@ -49,7 +49,14 @@ def _dense_slab_graph(An, num_workers):
 
 
 def check_conformance(op, A, *, rtol=1e-4, atol=1e-4):
-    """Assert the full operator protocol against the dense oracle ``A``."""
+    """Assert the full operator protocol against the dense oracle ``A``.
+
+    For a low-precision ``storage_dtype`` operator the caller passes the
+    ROUNDED dense oracle (``f32(bf16(A))``): the operator's coefficients
+    are exactly the rounded values, so every value comparison stays tight
+    — only accumulation order separates the two sides — while
+    ``row_norms_sq`` must come back f32 regardless of storage.
+    """
     An = np.asarray(A)
     m, n = An.shape
     assert op.shape == (m, n)
@@ -65,21 +72,25 @@ def check_conformance(op, A, *, rtol=1e-4, atol=1e-4):
         np.testing.assert_allclose(np.asarray(op.matvec_ref(x)), want,
                                    rtol=rtol, atol=atol)
 
-    # row_norms_sq: non-negative, matches the dense rows
-    rn = np.asarray(op.row_norms_sq()).reshape(-1)
+    # row_norms_sq: f32 whatever the storage dtype (sampling distributions
+    # and RK divisors never degrade), non-negative, matches the dense rows
+    rn_arr = op.row_norms_sq()
+    assert rn_arr.dtype == jnp.float32
+    rn = np.asarray(rn_arr).reshape(-1)
     assert rn.shape == (m,) and (rn >= 0).all()
     np.testing.assert_allclose(rn, (An * An).sum(axis=1), rtol=1e-4,
                                atol=1e-5)
 
     # ...and consistent with row_panel reads where the format has them
+    # (panels come back in storage dtype; square in f32 like the operator)
     if isinstance(op, BlockBandedOp):
-        panel = np.asarray(op.row_panel(0))            # (block, n) dense rows
+        panel = np.asarray(op.row_panel(0)).astype(np.float32)
         np.testing.assert_allclose((panel * panel).sum(axis=1),
                                    rn[:op.block], rtol=1e-4, atol=1e-5)
     elif hasattr(op, "row_panel"):
         block = max(m // 8, 1)
         if m % block == 0:
-            panel = np.asarray(op.row_panel(1, block))
+            panel = np.asarray(op.row_panel(1, block)).astype(np.float32)
             np.testing.assert_allclose((panel * panel).sum(axis=1),
                                        rn[block:2 * block], rtol=1e-4,
                                        atol=1e-5)
@@ -120,7 +131,8 @@ def check_conformance(op, A, *, rtol=1e-4, atol=1e-4):
         assert vals.shape == cols.shape and vals.shape[0] == m
         recon = jnp.zeros((m, n), vals.dtype).at[
             jnp.arange(m)[:, None], cols].add(vals)
-        np.testing.assert_allclose(np.asarray(recon), An, atol=1e-6)
+        np.testing.assert_allclose(
+            np.asarray(recon).astype(np.float32), An, atol=1e-6)
 
     # slab_neighbors IS the slab graph of the dense pattern — this
     # subsumes in-bounds shape/dtype and symmetry-when-the-pattern-is
@@ -151,7 +163,8 @@ def check_conformance(op, A, *, rtol=1e-4, atol=1e-4):
         assert op.halo_width is None
 
     # to_dense reconstructs the stored values
-    np.testing.assert_allclose(np.asarray(op.to_dense()), An, atol=1e-6)
+    np.testing.assert_allclose(
+        np.asarray(op.to_dense()).astype(np.float32), An, atol=1e-6)
 
 
 # ---------------------------------------------------------------------------
@@ -171,12 +184,18 @@ def _case(fmt, spec):
     if spec.get("zero_rows"):
         A = jnp.asarray(np.array(A) * (np.arange(A.shape[0]) % 3 != 0
                                        )[:, None].astype(np.float32))
-    kw = {}
+    kw = {"storage_dtype": spec.get("storage_dtype")}
     if fmt == "banded":
-        kw = dict(block=spec["block"], bands=spec["bands"])
+        kw.update(block=spec["block"], bands=spec["bands"])
     elif fmt == "ell":
-        kw = dict(width=spec["width"])
-    return as_operator(A, fmt, **kw), A
+        kw.update(width=spec["width"])
+    op = as_operator(A, fmt, **kw)
+    if kw["storage_dtype"] is not None:
+        # Low-precision storage: the oracle is the ROUNDED dense matrix —
+        # the operator holds exactly those values, so the conformance
+        # tolerances need no loosening.
+        A = jnp.asarray(A).astype(kw["storage_dtype"]).astype(jnp.float32)
+    return op, A
 
 
 GRID = [
@@ -191,6 +210,17 @@ GRID = [
     ("csr", dict(kind="lsq", m=96, n=32, row_nnz=5, seed=7)),
     ("csr", dict(kind="lsq", m=64, n=16, row_nnz=3, seed=8,
                  zero_rows=True)),
+    # mixed-precision storage: same protocol vs the bf16-rounded oracle
+    ("dense", dict(kind="spd", n=64, row_nnz=6, seed=0,
+                   storage_dtype="bfloat16")),
+    ("banded", dict(kind="banded", n=128, block=16, bands=1, seed=2,
+                    storage_dtype="bfloat16")),
+    ("ell", dict(kind="spd", n=64, row_nnz=6, width=32, seed=4,
+                 storage_dtype="bfloat16")),
+    ("csr", dict(kind="spd", n=64, row_nnz=6, seed=6,
+                 storage_dtype="bfloat16")),
+    ("csr", dict(kind="lsq", m=96, n=32, row_nnz=5, seed=7,
+                 storage_dtype="bfloat16")),
 ]
 
 
@@ -265,6 +295,42 @@ def test_as_operator_dispatch(sparse_prob):
     assert isinstance(as_operator(sparse_prob.A, "csr"), CsrOp)
     with pytest.raises(ValueError):
         as_operator(sparse_prob.A, "coo")
+
+
+def test_storage_dtype_layout(sparse_prob):
+    """Mixed-precision storage invariants the conformance grid cannot see:
+
+    * ``storage_dtype=None`` is byte-identical to the pre-parameter layout
+      (the bitwise-compatibility contract of DESIGN.md);
+    * bf16 storage narrows the column-index stream to int16 when every
+      global column id fits (n <= int16 max) — the pairing that makes the
+      A-stream 2+2 bytes/slot instead of 4+4;
+    * row bookkeeping (row_id/row_start/row_nnz) stays int32, and the
+      pytree leaf counts are unchanged (dtype rides in the leaves, not
+      the aux data).
+    """
+    A = sparse_prob.A
+    base = CsrOp.from_dense(A)
+    same = CsrOp.from_dense(A, storage_dtype=None)
+    for lb, ls in zip(jax.tree_util.tree_leaves(base),
+                      jax.tree_util.tree_leaves(same)):
+        assert lb.dtype == ls.dtype
+        np.testing.assert_array_equal(np.asarray(lb), np.asarray(ls))
+
+    lp = CsrOp.from_dense(A, storage_dtype="bfloat16")
+    assert lp.data.dtype == jnp.bfloat16
+    assert lp.indices.dtype == jnp.int16          # n=256 fits int16
+    assert lp.row_id.dtype == jnp.int32
+    assert lp.row_start.dtype == jnp.int32 and lp.row_nnz.dtype == jnp.int32
+    assert len(jax.tree_util.tree_leaves(lp)) == 5
+    assert lp.nnz == base.nnz and lp.row_cap == base.row_cap
+
+    elp = EllOp.from_dense(A, width=16, storage_dtype="bfloat16")
+    assert elp.vals.dtype == jnp.bfloat16 and elp.cols.dtype == jnp.int16
+    assert len(jax.tree_util.tree_leaves(elp)) == 2
+
+    with pytest.raises(ValueError):
+        as_operator(A, "csr", storage_dtype="float16")
 
 
 def test_shard_specs_and_structure(banded_prob, sparse_prob):

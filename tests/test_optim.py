@@ -123,6 +123,70 @@ def test_compression_preserves_shape_dtype():
         assert out[k].shape == g[k].shape and out[k].dtype == g[k].dtype
 
 
+@given(st.integers(0, 10**6), st.integers(1, 700))
+def test_quantize_elementwise_scale_bound(seed, size):
+    """ELEMENTWISE |dequant(quant(g)) - g| <= scale/2 against the actual
+    per-block scales the codec emitted (the tree-level test above only
+    bounds via the global max).  Also pins ``quantization_error_bound`` as
+    exactly half the largest scale — the eps ``theory.perturbed_factor``
+    consumes."""
+    rng = np.random.default_rng(seed)
+    g = jnp.asarray(rng.standard_normal((size,)) *
+                    rng.lognormal(size=(size,)), jnp.float32)
+    q, scales = compression.quantize_array(g)
+    out = compression.dequantize_array(q, scales, shape=g.shape)
+    err = np.abs(np.asarray(out) - np.asarray(g))
+    # err lives in the padded/blocked frame: block i covers elements
+    # [i*BLOCK, (i+1)*BLOCK) and must obey that block's own scale.
+    s = np.asarray(scales)
+    for i in range(len(s)):
+        blk = err[i * compression.BLOCK:(i + 1) * compression.BLOCK]
+        assert blk.max() <= s[i] * 0.5 * (1 + 1e-6) + 1e-12, (i, s[i])
+    bound = float(compression.quantization_error_bound(g))
+    np.testing.assert_allclose(bound, s.max() * 0.5, rtol=1e-6)
+    assert err.max() <= bound * (1 + 1e-6) + 1e-12
+
+
+def test_roundtrip_array_matches_tree_codec():
+    """The per-array helpers (the engine's in-graph wire format) are the
+    single-leaf forms of the tree codec — same blocks, same scales."""
+    rng = np.random.default_rng(3)
+    g = jnp.asarray(rng.standard_normal((37, 5)), jnp.float32)
+    via_tree = compression.roundtrip({"g": g})["g"]
+    via_array = compression.roundtrip_array(g)
+    np.testing.assert_array_equal(np.asarray(via_tree), np.asarray(via_array))
+    bf = compression.bf16_roundtrip_array(g)
+    assert bf.dtype == g.dtype
+    np.testing.assert_array_equal(
+        np.asarray(bf), np.asarray(g.astype(jnp.bfloat16).astype(g.dtype)))
+
+
+def test_error_feedback_drift_free_vs_naive():
+    """A signal far below one quantization step: naive int8 rounds it to
+    zero EVERY round (unbounded drift of the accumulated error), while the
+    error-feedback residual accumulates until it crosses a step and fires —
+    cumulative delivered mass tracks the truth to within one step."""
+    rounds, n = 200, 64
+    base = jnp.linspace(-1.0, 1.0, n)          # sets the block scale
+    tiny = 1e-4                                 # << scale/127
+    sig = base * 0 + tiny
+    ef = compression.init_error_feedback({"w": jnp.zeros(n)})
+    naive_sum = np.zeros(n)
+    ef_sum = np.zeros(n)
+    for _ in range(rounds):
+        payload = {"w": base + sig}
+        naive_sum += np.asarray(compression.roundtrip(payload)["w"])
+        sent, ef = compression.compress_with_feedback(payload, ef)
+        ef_sum += np.asarray(sent["w"])
+    true_sum = np.asarray(base + sig) * rounds
+    step = 2.0 / 127.0                          # one quantization step
+    naive_err = np.abs(naive_sum - true_sum).max()
+    ef_err = np.abs(ef_sum - true_sum).max()
+    assert ef_err <= step * 1.5, ef_err          # bounded by ~one step
+    assert naive_err >= rounds * tiny * 0.9      # drifts linearly in rounds
+    assert ef_err < naive_err / 5
+
+
 def test_error_feedback_reduces_bias():
     """With error feedback, the long-run mean of transmitted gradients equals
     the true mean (drift-free), unlike plain quantization of a tiny signal."""

@@ -16,8 +16,7 @@ def main():
     args = ap.parse_args()
 
     from benchmarks import (bench_kernels, fig1_residual, fig2_scaling,
-                            fig3_async_penalty, roofline_report,
-                            theory_validation)
+                            fig3_async_penalty, theory_validation)
 
     jobs = [
         ("fig1_residual", lambda: fig1_residual.run(
@@ -33,7 +32,6 @@ def main():
             n=256 if args.fast else 512, seeds=4 if args.fast else 8)),
         ("bench_kernels", lambda: bench_kernels.run(
             n=512 if args.fast else 1024)),
-        ("roofline_report", roofline_report.run),
     ]
     for name, fn in jobs:
         if args.only and args.only not in name:

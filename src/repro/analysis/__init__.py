@@ -1,0 +1,27 @@
+"""repro-lint: solver-aware static analysis for the engine's contracts.
+
+Seven PRs in, the engine's correctness rests on conventions — f32
+accumulation inside every Pallas kernel, exhaustive strategy-table
+coverage, pytree aux-data purity, trace safety inside jitted regions,
+"bitwise-pinned" test claims — that used to be enforced only by review.
+This package checks them mechanically (DESIGN.md §8):
+
+* ``repro.analysis.lint``          — the runner (``python -m
+  repro.analysis.lint``), baseline handling, ``--fail-on-new`` CI gate;
+* ``repro.analysis.kernel_precision`` — kernel accumulation contract;
+* ``repro.analysis.dispatch``      — strategy-table exhaustiveness and
+  single-source-of-truth capability sets;
+* ``repro.analysis.pytree_purity`` — registered-pytree aux-data purity;
+* ``repro.analysis.trace_safety``  — no host time / host RNG / Python
+  branches on traced values inside jitted or shard_mapped code;
+* ``repro.analysis.bitwise_pin``   — tests claiming "bitwise" must
+  compare exactly, not via ``allclose``;
+* ``repro.analysis.dead_modules``  — modules unreachable from the solver
+  entry points.
+
+The checkers are pure-AST (no jax import, no code execution), so the
+pass runs anywhere Python runs — including the bare CI lint job.
+"""
+from repro.analysis.common import Finding
+
+__all__ = ["Finding"]

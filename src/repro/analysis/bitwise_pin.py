@@ -1,0 +1,123 @@
+"""Checker BP — the bitwise-pin contract.
+
+The engine's refactors are routinely *pinned bitwise* against a
+reference implementation (fused sweep vs scan engine, overlap vs plain
+sync, a2a vs psum).  A test that says "bitwise" but compares with
+``allclose`` would silently keep passing after the pin is broken —
+precisely the drift the pin exists to catch:
+
+* BP1 — a test whose name or docstring claims "bitwise" calls
+  ``allclose`` / ``assert_allclose`` with nonzero tolerances (no
+  ``rtol=0, atol=0``);
+* BP2 — a bitwise-claiming test with no exact comparison at all (no
+  ``array_equal`` / ``assert_array_equal`` / ``==``-on-arrays reduction
+  anywhere, including inside embedded subprocess script strings).
+
+Tolerance-zero ``allclose(..., rtol=0, atol=0)`` is accepted: it *is*
+exact equality (modulo NaN, which the pinned paths never produce).
+"""
+from __future__ import annotations
+
+import ast
+import re
+
+from repro.analysis.common import Finding, call_name
+
+NAME = "bitwise-pin"
+
+BITWISE = re.compile(r"bitwise|bit-for-bit|bit_for_bit", re.IGNORECASE)
+EXACT_CALLS = {"array_equal", "assert_array_equal", "array_equiv"}
+CLOSE_CALLS = {"allclose", "assert_allclose", "isclose"}
+EXACT_TEXT = re.compile(
+    r"array_equal|assert_array_equal|rtol=0[^.]|atol=0[^.]|\)\s*==\s*|==\s*\(")
+
+
+def _claims_bitwise(fn: ast.FunctionDef) -> bool:
+    if BITWISE.search(fn.name):
+        return True
+    doc = ast.get_docstring(fn)
+    return bool(doc and BITWISE.search(doc))
+
+
+def _zero_tolerances(call: ast.Call) -> bool:
+    tol = {kw.arg: kw.value for kw in call.keywords
+           if kw.arg in ("rtol", "atol")}
+    if not tol:
+        return False
+    return all(isinstance(v, ast.Constant) and v.value == 0
+               for v in tol.values())
+
+
+def _module_strings(tree: ast.AST) -> dict[str, tuple[str, int]]:
+    """Module-level ``NAME = \"...\"`` script constants (forced-device
+    tests keep their subprocess body in one): name -> (text, line)."""
+    out = {}
+    for node in tree.body if isinstance(tree, ast.Module) else []:
+        if isinstance(node, ast.Assign) and len(node.targets) == 1 \
+                and isinstance(node.targets[0], ast.Name) \
+                and isinstance(node.value, ast.Constant) \
+                and isinstance(node.value.value, str) \
+                and len(node.value.value) > 40:
+            out[node.targets[0].id] = (node.value.value, node.lineno)
+    return out
+
+
+def check_file(path: str, tree: ast.AST, source: str) -> list[Finding]:
+    findings: list[Finding] = []
+    scripts = _module_strings(tree)
+    for fn in ast.walk(tree):
+        if not isinstance(fn, ast.FunctionDef):
+            continue
+        if not (fn.name.startswith("test") and _claims_bitwise(fn)):
+            continue
+        exact_seen = False
+        for node in ast.walk(fn):
+            if isinstance(node, ast.Name) and node.id in scripts:
+                text, line = scripts[node.id]
+                if EXACT_TEXT.search(text):
+                    exact_seen = True
+                if re.search(r"(?<!_)allclose\(", text) \
+                        and "rtol=0" not in text:
+                    findings.append(Finding(
+                        code="BP1", path=path, line=line, symbol=fn.name,
+                        message=(f"allclose inside the {node.id} subprocess "
+                                 "script of a test claiming 'bitwise' — "
+                                 "pin with array_equal")))
+            if isinstance(node, ast.Call):
+                cn = (call_name(node) or "").split(".")[-1]
+                if cn in EXACT_CALLS:
+                    exact_seen = True
+                elif cn in CLOSE_CALLS:
+                    if _zero_tolerances(node):
+                        exact_seen = True
+                    else:
+                        findings.append(Finding(
+                            code="BP1", path=path, line=node.lineno,
+                            symbol=fn.name,
+                            message=(f"{cn} with nonzero tolerances in a "
+                                     "test claiming 'bitwise' — pin with "
+                                     "array_equal (or rtol=0, atol=0)")))
+            elif isinstance(node, ast.Compare) \
+                    and any(isinstance(op, ast.Eq) for op in node.ops):
+                exact_seen = True
+            elif isinstance(node, ast.Constant) \
+                    and isinstance(node.value, str) and len(node.value) > 40:
+                # forced-device tests embed their body as a subprocess
+                # script string — scan its text for the same signals
+                if EXACT_TEXT.search(node.value):
+                    exact_seen = True
+                if re.search(r"(?<!_)allclose\(", node.value) \
+                        and "rtol=0" not in node.value:
+                    findings.append(Finding(
+                        code="BP1", path=path, line=node.lineno,
+                        symbol=fn.name,
+                        message=("allclose inside the embedded subprocess "
+                                 "script of a test claiming 'bitwise' — "
+                                 "pin with array_equal")))
+        if not exact_seen:
+            findings.append(Finding(
+                code="BP2", path=path, line=fn.lineno, symbol=fn.name,
+                message=("test claims 'bitwise' but performs no exact "
+                         "comparison (array_equal / == / zero-tolerance "
+                         "allclose)")))
+    return findings

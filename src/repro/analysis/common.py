@@ -1,0 +1,151 @@
+"""Shared infrastructure for the repro-lint checkers.
+
+A checker is a module exposing
+
+* ``NAME``   — the checker's slug (finding codes are ``<NAME><digit>``);
+* ``check_file(path, tree, source) -> list[Finding]`` for per-file
+  checkers, and/or ``check_repo(root) -> list[Finding]`` for whole-tree
+  checkers (import graphs, cross-file table consistency);
+
+and a :class:`Finding` is one violation.  Findings carry a *stable key*
+(checker code + path + symbol, no line numbers) so the checked-in
+baseline survives unrelated edits to the same file.
+
+Everything here is stdlib-only on purpose: the lint pass must run in the
+bare CI lint job (no jax), and importing the solver would defeat the
+point of analyzing it statically.
+"""
+from __future__ import annotations
+
+import ast
+import dataclasses
+import os
+
+
+@dataclasses.dataclass(frozen=True)
+class Finding:
+    """One contract violation.
+
+    ``symbol`` names the offending definition (function, class, module,
+    table entry) — together with ``code`` and ``path`` it forms the
+    baseline key, deliberately excluding line numbers so a baseline entry
+    survives edits elsewhere in the file.
+    """
+    code: str        # e.g. "KP1"
+    path: str        # repo-relative, forward slashes
+    line: int        # 1-based, for display only (not part of the key)
+    symbol: str      # owning function/class/module
+    message: str
+
+    @property
+    def key(self) -> str:
+        return f"{self.code}:{self.path}:{self.symbol}"
+
+    def render(self) -> str:
+        return f"{self.path}:{self.line}: {self.code} [{self.symbol}] {self.message}"
+
+
+def repo_root(start: str | None = None) -> str:
+    """The repository root: the nearest ancestor holding ``src/repro``.
+
+    Walks up from ``start`` (default: this file's location), so the lint
+    pass finds its tree whether invoked from the repo root, from ``src``,
+    or as an installed module in a checkout.
+    """
+    d = os.path.abspath(start or os.path.dirname(__file__))
+    while True:
+        if os.path.isdir(os.path.join(d, "src", "repro")):
+            return d
+        parent = os.path.dirname(d)
+        if parent == d:
+            raise FileNotFoundError(
+                "could not locate the repository root (no src/repro above "
+                f"{start or os.path.dirname(__file__)!r})")
+        d = parent
+
+
+def rel(root: str, path: str) -> str:
+    return os.path.relpath(path, root).replace(os.sep, "/")
+
+
+def iter_py_files(*dirs: str) -> list[str]:
+    """All ``.py`` files under the given directories, sorted, skipping
+    caches and hidden directories."""
+    out = []
+    for d in dirs:
+        for base, subdirs, files in os.walk(d):
+            subdirs[:] = sorted(s for s in subdirs
+                                if s != "__pycache__" and not s.startswith("."))
+            out.extend(os.path.join(base, f) for f in sorted(files)
+                       if f.endswith(".py"))
+    return out
+
+
+def parse_file(path: str) -> tuple[ast.AST, str]:
+    with open(path, encoding="utf-8") as f:
+        source = f.read()
+    return ast.parse(source, filename=path), source
+
+
+def dotted_name(node: ast.AST) -> str | None:
+    """``a.b.c`` for a Name/Attribute chain, else None."""
+    parts = []
+    while isinstance(node, ast.Attribute):
+        parts.append(node.attr)
+        node = node.value
+    if isinstance(node, ast.Name):
+        parts.append(node.id)
+        return ".".join(reversed(parts))
+    return None
+
+
+def call_name(node: ast.Call) -> str | None:
+    return dotted_name(node.func)
+
+
+def const_str_tuple(node: ast.AST) -> tuple[str, ...] | None:
+    """The value of a tuple/list/set display of string constants, or a
+    ``frozenset({...})`` / ``frozenset((...))`` call around one."""
+    if (isinstance(node, ast.Call) and call_name(node) == "frozenset"
+            and len(node.args) == 1):
+        node = node.args[0]
+    if isinstance(node, (ast.Tuple, ast.List, ast.Set)):
+        vals = []
+        for elt in node.elts:
+            if not (isinstance(elt, ast.Constant) and isinstance(elt.value, str)):
+                return None
+            vals.append(elt.value)
+        return tuple(vals)
+    return None
+
+
+def module_name_for(root: str, path: str) -> str | None:
+    """Dotted module name of a file under ``<root>/src``."""
+    r = rel(root, path)
+    if not r.startswith("src/"):
+        return None
+    mod = r[len("src/"):-len(".py")].replace("/", ".")
+    if mod.endswith(".__init__"):
+        mod = mod[: -len(".__init__")]
+    return mod
+
+
+def direct_imports(tree: ast.AST, package_prefix: str = "repro") -> set[str]:
+    """Every ``package_prefix``-rooted module a tree imports.
+
+    ``from repro.x import y`` contributes ``repro.x`` and — because ``y``
+    may itself be a submodule — ``repro.x.y``; the graph consumer keeps
+    only names that exist as modules.
+    """
+    found: set[str] = set()
+    for node in ast.walk(tree):
+        if isinstance(node, ast.Import):
+            for alias in node.names:
+                if alias.name.split(".")[0] == package_prefix:
+                    found.add(alias.name)
+        elif isinstance(node, ast.ImportFrom):
+            if node.module and node.module.split(".")[0] == package_prefix:
+                found.add(node.module)
+                for alias in node.names:
+                    found.add(f"{node.module}.{alias.name}")
+    return found

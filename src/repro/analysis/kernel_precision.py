@@ -1,0 +1,283 @@
+"""Checker KP — the kernel accumulation contract (DESIGN.md §7).
+
+The mixed-precision storage axis (PR 7) holds operator coefficient panels
+in bf16 and gather indices in int16, while the iterate, RHS, row norms and
+**every accumulator stay f32**.  Inside a Pallas kernel that contract is a
+set of local conventions this checker enforces mechanically:
+
+* KP1 — a load from a *coefficient* ref (``vals_ref``/``a_ref``/
+  ``tiles_ref``/``data_ref``/``ab_ref``: the possibly-bf16 operand
+  stream) reaches arithmetic (``+``/``-``/``*``/``/``/``@``,
+  ``jnp.einsum``) without an ``.astype(jnp.float32)`` upcast;
+* KP2 — ``jnp.dot`` inside a kernel body without
+  ``preferred_element_type=jnp.float32`` (the MXU accumulates in the
+  operand dtype otherwise — silent bf16 accumulation);
+* KP3 — an explicit low-precision accumulator: ``.astype`` to
+  bf16/f16, or ``jnp.zeros(...)`` with a low-precision dtype, written
+  into an output ref or used in arithmetic (``.astype(o_ref.dtype)``
+  stays legal: the final write-back cast to the iterate's dtype);
+* KP4 — a load from an *index* ref (``cols_ref``/``indices_ref``: the
+  possibly-int16 column stream) used as a gather index (subscript or
+  ``jnp.take``) without an ``.astype(jnp.int32)`` widen.
+
+A "kernel body" is any function passed (directly or through
+``functools.partial``) to ``pl.pallas_call`` in the same module, plus the
+``pl.when``-decorated closures nested inside it.
+"""
+from __future__ import annotations
+
+import ast
+import re
+
+from repro.analysis.common import Finding, call_name, dotted_name
+
+NAME = "kernel-precision"
+
+COEFF_REF = re.compile(r"^(a|ab|vals?|tiles?|data)_ref$")
+INDEX_REF = re.compile(r"^(cols?|indices)_ref$")
+LOW_FLOAT_DTYPES = {"jnp.bfloat16", "jnp.float16", "np.float16"}
+F32_DTYPES = {"jnp.float32", "np.float32"}
+I32_DTYPES = {"jnp.int32", "np.int32"}
+
+# Value tags for the local abstract interpretation.
+F32, I32, TAINT_VAL, TAINT_IDX, LOWP, OTHER = (
+    "f32", "i32", "taint-val", "taint-idx", "lowp", "other")
+
+
+def _kernel_functions(tree: ast.AST) -> list[ast.FunctionDef]:
+    """Functions handed to ``pl.pallas_call`` in this module.
+
+    Handles the repo's two idioms: ``pl.pallas_call(kernel, ...)`` and
+    ``pl.pallas_call(functools.partial(kernel, ...), ...)``.
+    """
+    names: set[str] = set()
+    for node in ast.walk(tree):
+        if not (isinstance(node, ast.Call)
+                and call_name(node) in ("pl.pallas_call", "pallas_call")):
+            continue
+        if not node.args:
+            continue
+        fn = node.args[0]
+        if (isinstance(fn, ast.Call)
+                and call_name(fn) in ("functools.partial", "partial")
+                and fn.args):
+            fn = fn.args[0]
+        name = dotted_name(fn)
+        if name:
+            names.add(name.split(".")[-1])
+    return [n for n in ast.walk(tree)
+            if isinstance(n, ast.FunctionDef) and n.name in names]
+
+
+def _astype_dtype(node: ast.Call) -> str | None:
+    """The dotted dtype of an ``<expr>.astype(dtype)`` call, else None."""
+    if (isinstance(node.func, ast.Attribute) and node.func.attr == "astype"
+            and len(node.args) == 1):
+        return dotted_name(node.args[0]) or "<dynamic>"
+    return None
+
+
+class _KernelChecker(ast.NodeVisitor):
+    def __init__(self, path: str, fn: ast.FunctionDef):
+        self.path = path
+        self.fn = fn
+        self.findings: list[Finding] = []
+        self.env: dict[str, str] = {}
+        args = fn.args
+        for a in (args.posonlyargs + args.args + args.kwonlyargs):
+            if COEFF_REF.match(a.arg):
+                self.env[a.arg] = TAINT_VAL
+            elif INDEX_REF.match(a.arg):
+                self.env[a.arg] = TAINT_IDX
+
+    def report(self, code: str, node: ast.AST, message: str) -> None:
+        self.findings.append(Finding(
+            code=code, path=self.path, line=getattr(node, "lineno", 0),
+            symbol=self.fn.name, message=message))
+
+    # -- expression tagging --------------------------------------------
+    def tag(self, node: ast.AST) -> str:
+        if isinstance(node, ast.Name):
+            return self.env.get(node.id, OTHER)
+        if isinstance(node, ast.Call):
+            dt = _astype_dtype(node)
+            if dt is not None:
+                # .astype() overrides whatever is inside — but still walk
+                # the inner expression for independent violations.
+                self.tag_operand_uses(node.func.value)
+                if dt in F32_DTYPES:
+                    return F32
+                if dt in I32_DTYPES:
+                    return I32
+                if dt in LOW_FLOAT_DTYPES:
+                    return LOWP
+                return OTHER  # symbolic (o_ref.dtype) — the write-back cast
+            return self.visit_call(node)
+        if isinstance(node, ast.Subscript):
+            # vals[:, None] keeps vals' taint; ref[...] loads the ref's tag.
+            base = self.tag(node.value)
+            self.check_index(node.slice, node)
+            return base
+        if isinstance(node, ast.BinOp):
+            return self.tag_binop(node)
+        if isinstance(node, ast.UnaryOp):
+            return self.tag(node.operand)
+        if isinstance(node, ast.Compare):
+            for c in (node.left, *node.comparators):
+                self.tag(c)
+            return OTHER
+        if isinstance(node, ast.Constant):
+            return OTHER
+        if isinstance(node, (ast.Tuple, ast.List)):
+            for e in node.elts:
+                self.tag(e)
+            return OTHER
+        return OTHER
+
+    def tag_operand_uses(self, node: ast.AST) -> None:
+        """Visit an expression for side findings without consuming it as
+        an arithmetic operand."""
+        if isinstance(node, ast.Subscript):
+            self.tag(node)
+        elif isinstance(node, (ast.Call, ast.BinOp)):
+            self.tag(node)
+
+    def tag_binop(self, node: ast.BinOp) -> str:
+        lt, rt = self.tag(node.left), self.tag(node.right)
+        for side, t in ((node.left, lt), (node.right, rt)):
+            if t == TAINT_VAL:
+                self.report(
+                    "KP1", side,
+                    "coefficient-ref value reaches arithmetic without "
+                    ".astype(jnp.float32) — bf16 storage would accumulate "
+                    "in bf16")
+            if t == LOWP:
+                self.report(
+                    "KP3", side,
+                    "explicitly low-precision value used in arithmetic — "
+                    "kernel accumulators must stay f32")
+        if LOWP in (lt, rt):
+            return LOWP
+        if F32 in (lt, rt):
+            return F32
+        return OTHER
+
+    def check_index(self, index_expr: ast.AST, ctx: ast.AST) -> None:
+        for sub in ast.walk(index_expr if isinstance(index_expr, ast.AST)
+                            else ast.Constant(value=None)):
+            if isinstance(sub, ast.Name) and self.env.get(sub.id) == TAINT_IDX:
+                self.report(
+                    "KP4", ctx,
+                    f"index-ref value {sub.id!r} used as a gather index "
+                    "without .astype(jnp.int32) — int16 storage must widen "
+                    "before indexing")
+
+    def visit_call(self, node: ast.Call) -> str:
+        name = call_name(node)
+        if name in ("jnp.dot", "jax.numpy.dot"):
+            pet = next((kw.value for kw in node.keywords
+                        if kw.arg == "preferred_element_type"), None)
+            if pet is None or dotted_name(pet) not in F32_DTYPES:
+                self.report(
+                    "KP2", node,
+                    "jnp.dot inside a kernel without preferred_element_type="
+                    "jnp.float32 — the MXU would accumulate in the operand "
+                    "dtype")
+            for a in node.args:
+                t = self.tag(a)
+                if t == LOWP:
+                    self.report("KP3", a,
+                                "explicitly low-precision jnp.dot operand")
+            return F32
+        if name in ("jnp.einsum", "jax.numpy.einsum"):
+            for a in node.args[1:]:
+                if self.tag(a) == TAINT_VAL:
+                    self.report(
+                        "KP1", a,
+                        "coefficient-ref value reaches jnp.einsum without "
+                        ".astype(jnp.float32)")
+            return F32
+        if name in ("jnp.take", "jax.numpy.take"):
+            if node.args:
+                self.tag(node.args[0])
+            if len(node.args) > 1:
+                self.check_index(node.args[1], node)
+                self.tag(node.args[1])
+            return OTHER
+        if name in ("jnp.zeros", "jnp.full", "jnp.ones", "jnp.empty"):
+            dts = [dotted_name(kw.value) for kw in node.keywords
+                   if kw.arg == "dtype"]
+            dts += [dotted_name(a) for a in node.args[1:]]
+            if any(dt in LOW_FLOAT_DTYPES for dt in dts):
+                return LOWP
+            return OTHER
+        for a in (*node.args, *(kw.value for kw in node.keywords)):
+            self.tag(a)
+        return OTHER
+
+    # -- statements ----------------------------------------------------
+    def run(self) -> list[Finding]:
+        self.block(self.fn.body)
+        return self.findings
+
+    def block(self, stmts: list[ast.stmt]) -> None:
+        for st in stmts:
+            self.stmt(st)
+
+    def stmt(self, st: ast.stmt) -> None:
+        if isinstance(st, ast.Assign) and len(st.targets) == 1 \
+                and isinstance(st.targets[0], ast.Name):
+            self.env[st.targets[0].id] = self.tag(st.value)
+        elif isinstance(st, ast.Assign) and len(st.targets) == 1 \
+                and isinstance(st.targets[0], ast.Subscript):
+            self.assign_subscript(st.targets[0], st.value)
+        elif isinstance(st, ast.AugAssign):
+            t = self.tag(st.value)
+            if isinstance(st.target, ast.Name):
+                cur = self.env.get(st.target.id, OTHER)
+                if TAINT_VAL in (cur, t):
+                    self.report(
+                        "KP1", st,
+                        "augmented accumulate with a coefficient-ref operand "
+                        "lacking .astype(jnp.float32)")
+                if LOWP in (cur, t):
+                    self.report("KP3", st,
+                                "augmented accumulate on a low-precision value")
+            elif isinstance(st.target, ast.Subscript):
+                self.assign_subscript(st.target, st.value)
+        elif isinstance(st, ast.For):
+            self.tag(st.iter)
+            self.block(st.body)
+        elif isinstance(st, (ast.If, ast.While)):
+            self.tag(st.test)
+            self.block(st.body)
+            self.block(st.orelse)
+        elif isinstance(st, ast.FunctionDef):
+            # pl.when closures share the enclosing env.
+            self.block(st.body)
+        elif isinstance(st, ast.Expr):
+            self.tag(st.value)
+        elif isinstance(st, ast.Return) and st.value is not None:
+            self.tag(st.value)
+
+    def assign_subscript(self, target: ast.Subscript, value: ast.AST) -> None:
+        t = self.tag(value)
+        self.check_index(target.slice, target)
+        if t == LOWP:
+            self.report(
+                "KP3", target,
+                "write of an explicitly low-precision value into a kernel "
+                "output ref — accumulators and outputs must stay f32 (cast "
+                "with .astype(o_ref.dtype) only)")
+        if t == TAINT_VAL:
+            self.report(
+                "KP1", target,
+                "raw coefficient-ref value written to an output ref without "
+                ".astype(jnp.float32)")
+
+
+def check_file(path: str, tree: ast.AST, source: str) -> list[Finding]:
+    findings: list[Finding] = []
+    for fn in _kernel_functions(tree):
+        findings.extend(_KernelChecker(path, fn).run())
+    return findings

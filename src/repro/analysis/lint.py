@@ -1,0 +1,166 @@
+"""repro-lint runner: ``python -m repro.analysis.lint``.
+
+Runs every checker over ``src/repro/**`` (the bitwise-pin checker also
+covers ``tests/``), diffs the findings against the checked-in baseline
+(``lint-baseline.json`` at the repo root), and reports.
+
+Modes
+-----
+* default            — print every finding (baselined ones marked), exit 0;
+* ``--fail-on-new``  — the CI gate: exit 1 iff a finding's key is not in
+  the baseline.  Keys are ``code:path:symbol`` (no line numbers), so the
+  baseline survives unrelated edits;
+* ``--write-baseline`` — regenerate the baseline from the current tree
+  (use after fixing findings, to shrink it — never to bury new ones);
+* ``--json``         — machine-readable finding dump.
+
+The baseline is for *grandfathered* findings only; each entry carries a
+justification string that must explain why the finding is accepted.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import sys
+
+from repro.analysis import (
+    bitwise_pin, dead_modules, dispatch, kernel_precision, pytree_purity,
+    trace_safety)
+from repro.analysis.common import (
+    Finding, iter_py_files, parse_file, rel, repo_root)
+
+#: per-file checkers and the top-level directories they walk
+FILE_CHECKERS = (
+    (kernel_precision, ("src",)),
+    (trace_safety, ("src",)),
+    (pytree_purity, ("src",)),
+    (bitwise_pin, ("src", "tests")),
+)
+#: whole-tree checkers (import graphs, cross-file table consistency)
+REPO_CHECKERS = (dispatch, dead_modules)
+
+BASELINE_FILE = "lint-baseline.json"
+
+
+def parse_tree(root: str) -> dict[str, dict[str, tuple]]:
+    """``{"src": {relpath: (tree, source)}, "tests": {...}}``."""
+    out: dict[str, dict[str, tuple]] = {}
+    for top, sub in (("src", os.path.join("src", "repro")), ("tests", "tests")):
+        files: dict[str, tuple] = {}
+        full = os.path.join(root, sub)
+        if os.path.isdir(full):
+            for path in iter_py_files(full):
+                r = rel(root, path)
+                try:
+                    files[r] = parse_file(path)
+                except SyntaxError as e:  # a syntax error is a finding, not a crash
+                    files[r] = (None, "")
+                    print(f"repro-lint: cannot parse {r}: {e}", file=sys.stderr)
+        out[top] = files
+    return out
+
+
+def run_checkers(root: str) -> list[Finding]:
+    trees = parse_tree(root)
+    findings: list[Finding] = []
+    for checker, scopes in FILE_CHECKERS:
+        for scope in scopes:
+            for path, (tree, source) in sorted(trees[scope].items()):
+                if tree is None:
+                    continue
+                findings.extend(checker.check_file(path, tree, source))
+    src_parsed = {p: ts for p, ts in trees["src"].items() if ts[0] is not None}
+    for checker in REPO_CHECKERS:
+        findings.extend(checker.check_repo(root, src_parsed))
+    findings.sort(key=lambda f: (f.path, f.line, f.code, f.symbol))
+    return findings
+
+
+def load_baseline(path: str) -> dict[str, str]:
+    """key -> justification."""
+    if not os.path.exists(path):
+        return {}
+    with open(path, encoding="utf-8") as f:
+        data = json.load(f)
+    return {e["key"]: e.get("justification", "") for e in data["findings"]}
+
+
+def write_baseline(path: str, findings: list[Finding],
+                   old: dict[str, str]) -> None:
+    entries = []
+    seen = set()
+    for f in findings:
+        if f.key in seen:
+            continue
+        seen.add(f.key)
+        entries.append({
+            "key": f.key,
+            "justification": old.get(f.key, "TODO: justify or fix"),
+            "message": f.message,
+        })
+    with open(path, "w", encoding="utf-8") as fh:
+        json.dump({"findings": sorted(entries, key=lambda e: e["key"])},
+                  fh, indent=2, sort_keys=True)
+        fh.write("\n")
+
+
+def main(argv: list[str] | None = None) -> int:
+    ap = argparse.ArgumentParser(
+        prog="python -m repro.analysis.lint",
+        description="solver-aware static analysis for the repro engine")
+    ap.add_argument("--root", default=None,
+                    help="repository root (default: auto-detected)")
+    ap.add_argument("--baseline", default=None,
+                    help=f"baseline path (default: <root>/{BASELINE_FILE})")
+    ap.add_argument("--fail-on-new", action="store_true",
+                    help="exit 1 if any finding is not in the baseline")
+    ap.add_argument("--write-baseline", action="store_true",
+                    help="regenerate the baseline from the current tree")
+    ap.add_argument("--json", action="store_true", dest="as_json",
+                    help="emit findings as JSON")
+    args = ap.parse_args(argv)
+
+    root = os.path.abspath(args.root) if args.root else repo_root()
+    baseline_path = args.baseline or os.path.join(root, BASELINE_FILE)
+    baseline = load_baseline(baseline_path)
+
+    findings = run_checkers(root)
+
+    if args.write_baseline:
+        write_baseline(baseline_path, findings, baseline)
+        print(f"repro-lint: wrote {len({f.key for f in findings})} baseline "
+              f"entries to {rel(root, baseline_path)}")
+        return 0
+
+    if args.as_json:
+        print(json.dumps([{
+            "code": f.code, "path": f.path, "line": f.line,
+            "symbol": f.symbol, "message": f.message, "key": f.key,
+            "baselined": f.key in baseline,
+        } for f in findings], indent=2))
+    else:
+        for f in findings:
+            mark = " [baselined]" if f.key in baseline else ""
+            print(f.render() + mark)
+
+    new = [f for f in findings if f.key not in baseline]
+    stale = sorted(set(baseline) - {f.key for f in findings})
+    if not args.as_json:
+        print(f"repro-lint: {len(findings)} finding(s), {len(new)} new, "
+              f"{len(findings) - len(new)} baselined, "
+              f"{len(stale)} stale baseline entr(y/ies)")
+        for key in stale:
+            print(f"repro-lint: stale baseline entry (no longer fires, "
+                  f"remove it): {key}")
+
+    if args.fail_on_new and new:
+        print(f"repro-lint: FAIL — {len(new)} new finding(s) not in "
+              f"{rel(root, baseline_path)}; fix them or (with justification) "
+              "baseline them", file=sys.stderr)
+        return 1
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,0 +1,166 @@
+"""Checker PT — registered-pytree aux-data purity.
+
+jax hashes a pytree's aux_data to decide whether two trees share a
+treedef (and hence whether a jitted call hits the compile cache).  The
+operator classes therefore must keep *static* metadata (shapes, band
+offsets, panel geometry) in aux_data and *array* payloads in the leaves
+— never the other way around:
+
+* PT1 — a class decorated with ``@register_pytree_node_class`` missing
+  ``tree_flatten`` or ``tree_unflatten`` (or a class defining both but
+  never registered);
+* PT2 — an unhashable literal (list / dict / set display) in the
+  aux_data position of ``tree_flatten``'s return;
+* PT3 — an array constructor (``jnp.*`` / ``np.array`` / ``np.asarray``
+  / ``np.zeros`` …) feeding aux_data: arrays are unhashable, and a
+  traced value there leaks tracers out of jit;
+* PT4 — the same ``self.<attr>`` appearing in both the leaves and the
+  aux_data of one ``tree_flatten`` (double-counted state: unflatten
+  cannot round-trip it consistently).
+"""
+from __future__ import annotations
+
+import ast
+
+from repro.analysis.common import Finding, call_name, dotted_name
+
+NAME = "pytree-purity"
+
+ARRAY_CALL_PREFIXES = ("jnp.", "jax.numpy.", "jax.")
+ARRAY_NP_CALLS = {
+    "np.array", "np.asarray", "np.zeros", "np.ones", "np.full", "np.empty",
+    "np.arange", "numpy.array", "numpy.asarray",
+}
+
+
+def _registered_classes(tree: ast.AST) -> tuple[list[ast.ClassDef], list[ast.ClassDef]]:
+    """(registered, defines-flatten-but-unregistered) class defs."""
+    registered, unregistered = [], []
+    explicit: set[str] = set()
+    for node in ast.walk(tree):
+        if isinstance(node, ast.Call) \
+                and call_name(node) in ("register_pytree_node",
+                                        "jax.tree_util.register_pytree_node",
+                                        "tree_util.register_pytree_node") \
+                and node.args:
+            name = dotted_name(node.args[0])
+            if name:
+                explicit.add(name.split(".")[-1])
+    for node in ast.walk(tree):
+        if not isinstance(node, ast.ClassDef):
+            continue
+        decos = {dotted_name(d) for d in node.decorator_list}
+        decos |= {call_name(d) for d in node.decorator_list
+                  if isinstance(d, ast.Call)}
+        is_reg = bool(decos & {"register_pytree_node_class",
+                               "jax.tree_util.register_pytree_node_class",
+                               "tree_util.register_pytree_node_class"}) \
+            or node.name in explicit
+        has_flatten = any(isinstance(m, ast.FunctionDef)
+                          and m.name == "tree_flatten" for m in node.body)
+        if is_reg:
+            registered.append(node)
+        elif has_flatten:
+            unregistered.append(node)
+    return registered, unregistered
+
+
+def _self_attrs(node: ast.AST) -> set[str]:
+    out = set()
+    for sub in ast.walk(node):
+        if isinstance(sub, ast.Attribute) \
+                and isinstance(sub.value, ast.Name) and sub.value.id == "self":
+            out.add(sub.attr)
+    return out
+
+
+def _resolve(name_node: ast.AST, env: dict[str, ast.AST]) -> ast.AST:
+    seen = set()
+    while isinstance(name_node, ast.Name) and name_node.id in env \
+            and name_node.id not in seen:
+        seen.add(name_node.id)
+        name_node = env[name_node.id]
+    return name_node
+
+
+class _FlattenChecker:
+    def __init__(self, path: str, cls: ast.ClassDef, fn: ast.FunctionDef):
+        self.path, self.cls, self.fn = path, cls, fn
+        self.findings: list[Finding] = []
+
+    def report(self, code: str, node: ast.AST, message: str) -> None:
+        self.findings.append(Finding(
+            code=code, path=self.path, line=getattr(node, "lineno", 0),
+            symbol=f"{self.cls.name}.tree_flatten", message=message))
+
+    def run(self) -> list[Finding]:
+        env: dict[str, ast.AST] = {}
+        returns: list[ast.Return] = []
+        for st in ast.walk(self.fn):
+            if isinstance(st, ast.Assign) and len(st.targets) == 1 \
+                    and isinstance(st.targets[0], ast.Name):
+                env[st.targets[0].id] = st.value
+            elif isinstance(st, ast.Return) and st.value is not None:
+                returns.append(st)
+        for ret in returns:
+            val = _resolve(ret.value, env)
+            if not (isinstance(val, ast.Tuple) and len(val.elts) == 2):
+                continue
+            leaves = _resolve(val.elts[0], env)
+            aux = _resolve(val.elts[1], env)
+            self.check_aux(aux, env)
+            both = _self_attrs(leaves) & _self_attrs(aux)
+            for attr in sorted(both):
+                self.report(
+                    "PT4", ret,
+                    f"self.{attr} appears in both the leaves and the "
+                    "aux_data — unflatten cannot round-trip double-counted "
+                    "state")
+        return self.findings
+
+    def check_aux(self, aux: ast.AST, env: dict[str, ast.AST]) -> None:
+        nodes = [aux]
+        if isinstance(aux, ast.Tuple):
+            nodes = [_resolve(e, env) for e in aux.elts]
+        for el in nodes:
+            for sub in ast.walk(el):
+                if isinstance(sub, (ast.List, ast.Dict, ast.Set)):
+                    self.report(
+                        "PT2", sub,
+                        "unhashable literal (list/dict/set) in aux_data — "
+                        "jax hashes aux_data for treedef equality and the "
+                        "jit cache; use tuples")
+                elif isinstance(sub, ast.Call):
+                    cn = call_name(sub) or ""
+                    if cn in ARRAY_NP_CALLS or any(
+                            cn.startswith(p) for p in ARRAY_CALL_PREFIXES):
+                        self.report(
+                            "PT3", sub,
+                            f"array constructor {cn}() feeding aux_data — "
+                            "arrays are unhashable and traced values there "
+                            "leak tracers; arrays belong in the leaves")
+
+
+def check_file(path: str, tree: ast.AST, source: str) -> list[Finding]:
+    findings: list[Finding] = []
+    registered, unregistered = _registered_classes(tree)
+    for cls in registered:
+        methods = {m.name: m for m in cls.body
+                   if isinstance(m, ast.FunctionDef)}
+        missing = [m for m in ("tree_flatten", "tree_unflatten")
+                   if m not in methods]
+        if missing:
+            findings.append(Finding(
+                code="PT1", path=path, line=cls.lineno, symbol=cls.name,
+                message=("registered pytree class is missing "
+                         + " and ".join(missing))))
+        if "tree_flatten" in methods:
+            findings.extend(
+                _FlattenChecker(path, cls, methods["tree_flatten"]).run())
+    for cls in unregistered:
+        findings.append(Finding(
+            code="PT1", path=path, line=cls.lineno, symbol=cls.name,
+            message=("class defines tree_flatten but is never registered "
+                     "(missing @register_pytree_node_class?) — jit would "
+                     "treat instances as static leaves")))
+    return findings

@@ -1,0 +1,278 @@
+"""Checker TS — trace safety inside jitted / shard_mapped regions.
+
+A "traced region" is any function that jax will trace: decorated with
+``@jax.jit`` / ``@partial(jax.jit, ...)``, passed to ``jax.jit(...)`` or
+``shard_map(...)``, or handed to a ``lax`` control-flow combinator
+(``scan`` / ``fori_loop`` / ``while_loop`` / ``cond`` / ``switch``) —
+plus every function nested inside one (workers, scan bodies).
+
+* TS1 — host clock inside a traced region (``time.time()``,
+  ``time.perf_counter()``, ``datetime.now()`` …): the value is burned in
+  at trace time and silently constant afterwards;
+* TS2 — host RNG inside a traced region (legacy global ``np.random.*``
+  or an unseeded ``np.random.default_rng()``): same burn-in problem,
+  plus nondeterminism across processes — solvers must thread
+  ``jax.random`` keys or seeded host generators built *outside* jit;
+* TS3 — a Python ``if``/``while`` on a traced value: the branch is
+  resolved once at trace time.  Values are *static* when they derive
+  from ``static_argnames`` parameters, module constants, shape/dtype
+  attributes, ``is None`` / ``isinstance`` / ``hasattr`` / ``len`` /
+  ``callable`` tests, or literals; everything reachable from a
+  non-static parameter is traced.
+
+TS3 deliberately whitelists the engine's established static patterns
+(``if xs_full is not None``, ``if have_xs``, ``isinstance(op, EllOp)``)
+by propagating staticness through local assignments.
+"""
+from __future__ import annotations
+
+import ast
+
+from repro.analysis.common import Finding, call_name, dotted_name
+
+NAME = "trace-safety"
+
+CLOCK_CALLS = {
+    "time.time", "time.perf_counter", "time.monotonic", "time.process_time",
+    "time.time_ns", "time.perf_counter_ns", "time.monotonic_ns",
+    "datetime.now", "datetime.datetime.now", "datetime.utcnow",
+    "datetime.datetime.utcnow",
+}
+JIT_NAMES = {"jax.jit", "jit", "pjit", "jax.pjit"}
+SHARD_MAP_NAMES = {"shard_map", "jax.experimental.shard_map.shard_map"}
+LAX_BODY_TAKERS = {
+    "lax.scan": (0,), "jax.lax.scan": (0,),
+    "lax.fori_loop": (2,), "jax.lax.fori_loop": (2,),
+    "lax.while_loop": (0, 1), "jax.lax.while_loop": (0, 1),
+    "lax.cond": (1, 2), "jax.lax.cond": (1, 2),
+    "lax.switch": (1,), "jax.lax.switch": (1,),
+    "lax.map": (0,), "jax.lax.map": (0,),
+}
+# Tests on a value that are static even when the value is traced.
+STATIC_TESTS = {"isinstance", "hasattr", "len", "callable", "type", "getattr"}
+STATIC_ATTRS = {"shape", "ndim", "dtype", "size", "at"}
+
+
+def _module_str_tuples(tree: ast.AST) -> dict[str, set[str]]:
+    """Module-level ``NAME = ("a", "b", ...)`` constants (jit wrappers
+    share static_argnames through them)."""
+    out: dict[str, set[str]] = {}
+    for node in tree.body if isinstance(tree, ast.Module) else []:
+        if isinstance(node, ast.Assign) and len(node.targets) == 1 \
+                and isinstance(node.targets[0], ast.Name) \
+                and isinstance(node.value, (ast.Tuple, ast.List)):
+            vals = {e.value for e in node.value.elts
+                    if isinstance(e, ast.Constant) and isinstance(e.value, str)}
+            if vals:
+                out[node.targets[0].id] = vals
+    return out
+
+
+def _static_argnames(deco: ast.Call, consts: dict[str, set[str]]) -> set[str]:
+    for kw in deco.keywords:
+        if kw.arg in ("static_argnames", "static_argnums"):
+            v = kw.value
+            if isinstance(v, ast.Name):
+                return set(consts.get(v.id, ()))
+            names: set[str] = set()
+            elts = v.elts if isinstance(v, (ast.Tuple, ast.List)) else [v]
+            for e in elts:
+                if isinstance(e, ast.Constant) and isinstance(e.value, str):
+                    names.add(e.value)
+            return names
+    return set()
+
+
+def _jit_regions(tree: ast.AST) -> list[tuple[ast.FunctionDef, set[str]]]:
+    """(function, static-param-names) for every traced-region root."""
+    regions: dict[str, tuple[ast.FunctionDef, set[str]]] = {}
+    consts = _module_str_tuples(tree)
+    by_name = {n.name: n for n in ast.walk(tree)
+               if isinstance(n, ast.FunctionDef)}
+
+    for fn in by_name.values():
+        for deco in fn.decorator_list:
+            d = dotted_name(deco)
+            if d in JIT_NAMES:
+                regions[fn.name] = (fn, set())
+            elif isinstance(deco, ast.Call):
+                cd = call_name(deco)
+                if cd in JIT_NAMES:
+                    regions[fn.name] = (fn, _static_argnames(deco, consts))
+                elif cd in ("functools.partial", "partial") and deco.args \
+                        and dotted_name(deco.args[0]) in JIT_NAMES:
+                    regions[fn.name] = (fn, _static_argnames(deco, consts))
+
+    for node in ast.walk(tree):
+        if not isinstance(node, ast.Call):
+            continue
+        cn = call_name(node)
+        if cn in JIT_NAMES and node.args:
+            target = dotted_name(node.args[0])
+            if target in by_name:
+                regions[target] = (by_name[target],
+                                   _static_argnames(node, consts))
+        elif cn in SHARD_MAP_NAMES and node.args:
+            target = dotted_name(node.args[0])
+            if target in by_name:
+                regions[target] = (by_name[target], set())
+        elif cn in LAX_BODY_TAKERS:
+            for i in LAX_BODY_TAKERS[cn]:
+                if i < len(node.args):
+                    target = dotted_name(node.args[i])
+                    if target in by_name:
+                        regions[target] = (by_name[target], set())
+    return list(regions.values())
+
+
+class _RegionChecker(ast.NodeVisitor):
+    """Walks one traced-region function (and everything nested in it)."""
+
+    def __init__(self, path: str, fn: ast.FunctionDef, static: set[str]):
+        self.path = path
+        self.fn = fn
+        self.findings: list[Finding] = []
+        args = fn.args
+        params = [a.arg for a in
+                  (args.posonlyargs + args.args + args.kwonlyargs)]
+        self.traced: set[str] = {p for p in params if p not in static}
+
+    def report(self, code: str, node: ast.AST, message: str) -> None:
+        self.findings.append(Finding(
+            code=code, path=self.path, line=getattr(node, "lineno", 0),
+            symbol=self.fn.name, message=message))
+
+    # -- staticness ----------------------------------------------------
+    def is_static(self, node: ast.AST) -> bool:
+        if isinstance(node, ast.Name):
+            return node.id not in self.traced
+        if isinstance(node, ast.Constant):
+            return True
+        if isinstance(node, ast.Compare):
+            if any(isinstance(op, (ast.Is, ast.IsNot)) for op in node.ops):
+                return True  # `x is None` is a trace-time structural test
+            return all(self.is_static(n)
+                       for n in (node.left, *node.comparators))
+        if isinstance(node, ast.BoolOp):
+            return all(self.is_static(v) for v in node.values)
+        if isinstance(node, ast.UnaryOp):
+            return self.is_static(node.operand)
+        if isinstance(node, ast.BinOp):
+            return self.is_static(node.left) and self.is_static(node.right)
+        if isinstance(node, ast.Attribute):
+            return node.attr in STATIC_ATTRS or self.is_static(node.value)
+        if isinstance(node, ast.Subscript):
+            return self.is_static(node.value)
+        if isinstance(node, ast.Call):
+            cn = call_name(node)
+            if cn is None:
+                return False
+            if cn.split(".")[-1] in STATIC_TESTS:
+                return True
+            # a method call on a traced object (x.sum(), x.any()) is traced
+            # no matter its arguments
+            if isinstance(node.func, ast.Attribute) \
+                    and not self.is_static(node.func.value):
+                return False
+            return all(self.is_static(a) for a in node.args)
+        if isinstance(node, (ast.Tuple, ast.List)):
+            return all(self.is_static(e) for e in node.elts)
+        return False
+
+    # -- traversal -----------------------------------------------------
+    def run(self) -> list[Finding]:
+        self.block(self.fn.body)
+        return self.findings
+
+    def block(self, stmts: list[ast.stmt]) -> None:
+        for st in stmts:
+            self.stmt(st)
+
+    def stmt(self, st: ast.stmt) -> None:
+        self.scan_calls(st)
+        if isinstance(st, ast.Assign):
+            static = self.is_static(st.value)
+            for tgt in st.targets:
+                for n in ast.walk(tgt):
+                    if isinstance(n, ast.Name):
+                        if static:
+                            self.traced.discard(n.id)
+                        else:
+                            self.traced.add(n.id)
+        elif isinstance(st, (ast.AugAssign, ast.AnnAssign)):
+            if st.value is not None and isinstance(st.target, ast.Name) \
+                    and not self.is_static(st.value):
+                self.traced.add(st.target.id)
+        elif isinstance(st, (ast.If, ast.While)):
+            if not self.is_static(st.test):
+                kind = "while" if isinstance(st, ast.While) else "if"
+                self.report(
+                    "TS3", st,
+                    f"Python `{kind}` on a traced value inside a traced "
+                    "region — the branch is resolved once at trace time; "
+                    "use lax.cond/jnp.where or hoist the decision to a "
+                    "static argument")
+            self.block(st.body)
+            self.block(st.orelse)
+        elif isinstance(st, ast.For):
+            # Python loops over traced values fail loudly in jax; loops
+            # over ranges are static unrolls.  Only recurse.
+            self.block(st.body)
+        elif isinstance(st, ast.FunctionDef):
+            for a in (st.args.posonlyargs + st.args.args
+                      + st.args.kwonlyargs):
+                self.traced.add(a.arg)  # nested fns get traced operands
+            self.block(st.body)
+        elif isinstance(st, (ast.With,)):
+            self.block(st.body)
+        elif isinstance(st, ast.Try):
+            self.block(st.body)
+            for h in st.handlers:
+                self.block(h.body)
+            self.block(st.orelse)
+            self.block(st.finalbody)
+
+    def scan_calls(self, st: ast.stmt) -> None:
+        if isinstance(st, (ast.If, ast.While, ast.For, ast.FunctionDef,
+                           ast.With, ast.Try)):
+            # bodies handled by recursion; only look at the header expr
+            headers: list[ast.AST] = []
+            if isinstance(st, (ast.If, ast.While)):
+                headers = [st.test]
+            elif isinstance(st, ast.For):
+                headers = [st.iter]
+            elif isinstance(st, ast.With):
+                headers = [it.context_expr for it in st.items]
+            nodes: list[ast.AST] = []
+            for h in headers:
+                nodes.extend(ast.walk(h))
+        else:
+            nodes = list(ast.walk(st))
+        for node in nodes:
+            if not isinstance(node, ast.Call):
+                continue
+            cn = call_name(node)
+            if cn in CLOCK_CALLS:
+                self.report(
+                    "TS1", node,
+                    f"host clock {cn}() inside a traced region — the value "
+                    "is captured once at trace time; time outside jit and "
+                    "pass it in")
+            elif cn and cn.startswith("np.random.") or \
+                    cn and cn.startswith("numpy.random."):
+                fn_leaf = cn.split(".")[-1]
+                if fn_leaf == "default_rng" and node.args:
+                    continue  # seeded generator construction is fine
+                self.report(
+                    "TS2", node,
+                    f"host RNG {cn}() inside a traced region — burned in "
+                    "at trace time and nondeterministic across processes; "
+                    "thread a jax.random key (or a seeded Generator built "
+                    "outside jit)")
+
+
+def check_file(path: str, tree: ast.AST, source: str) -> list[Finding]:
+    findings: list[Finding] = []
+    for fn, static in _jit_regions(tree):
+        findings.extend(_RegionChecker(path, fn, static).run())
+    return findings

@@ -52,6 +52,33 @@ from repro.optim import compression
 
 
 # ---------------------------------------------------------------------------
+# Capability vocabularies — the single source every validation error, CLI
+# ``choices=``, and repro-lint's dispatch checker (DX4) read from.  The
+# strategy-level capability sets (_FUSED_/_OVERLAP_/_COMPRESS_STRATEGIES)
+# live next to _DISTRIBUTED_STRATEGIES below.
+# ---------------------------------------------------------------------------
+
+#: distributed slab-assignment policies understood by ``Schedule.partition``
+PARTITIONS = ("contiguous", "balanced")
+
+#: wire codecs understood by ``Schedule.compress`` (error-feedback int8 and
+#: round-to-nearest bf16; "none" is the exact f32 wire)
+COMPRESS_MODES = ("none", "bf16", "int8_ef")
+
+
+def supported_syncs(action, formats=None):
+    """Sync modes ``_DISTRIBUTED_STRATEGIES`` has a row for.
+
+    ``formats`` (operator class names) narrows the answer to the formats a
+    caller can actually build — launchers use this for ``choices=`` so the
+    CLI surface can never drift from the dispatch table.
+    """
+    return tuple(sorted({
+        s for (a, f, s) in _DISTRIBUTED_STRATEGIES
+        if a == action and (formats is None or f in formats)}))
+
+
+# ---------------------------------------------------------------------------
 # Result types (re-exported by repro.core.rgs / repro.core.parallel_rgs)
 # ---------------------------------------------------------------------------
 
@@ -205,14 +232,14 @@ class Schedule(NamedTuple):
         if self.distributed and self.local_steps <= 0:
             raise ValueError(
                 f"a distributed Schedule needs local_steps > 0 (got {self})")
-        if self.partition not in ("contiguous", "balanced"):
+        if self.partition not in PARTITIONS:
             raise ValueError(
-                f"unknown partition: {self.partition!r} (expected "
-                "'contiguous' or 'balanced')")
-        if self.compress not in ("none", "bf16", "int8_ef"):
+                f"unknown partition: {self.partition!r} (expected one of "
+                f"{PARTITIONS})")
+        if self.compress not in COMPRESS_MODES:
             raise ValueError(
-                f"unknown compress: {self.compress!r} (expected 'none', "
-                "'bf16' or 'int8_ef')")
+                f"unknown compress: {self.compress!r} (expected one of "
+                f"{COMPRESS_MODES})")
         if not self.distributed:
             if self.num_iters <= 0:
                 raise ValueError(
@@ -781,8 +808,8 @@ def solve_distributed(
             op, b, x0, x_star, action=action, num_slabs=num_workers)
     elif partition != "contiguous":
         raise ValueError(
-            f"unknown partition: {partition!r} (expected 'contiguous' or "
-            "'balanced')")
+            f"unknown partition: {partition!r} (expected one of "
+            f"{PARTITIONS})")
 
     if sync == "auto":
         if action == "rk":
@@ -818,10 +845,10 @@ def solve_distributed(
     if overlap and kind not in _OVERLAP_STRATEGIES:
         _warn_overlap_fallback(op, action, kind)
         overlap = False
-    if compress not in ("none", "bf16", "int8_ef"):
+    if compress not in COMPRESS_MODES:
         raise ValueError(
-            f"unknown compress: {compress!r} (expected 'none', 'bf16' or "
-            "'int8_ef')")
+            f"unknown compress: {compress!r} (expected one of "
+            f"{COMPRESS_MODES})")
     if compress != "none" and kind not in _COMPRESS_STRATEGIES:
         _warn_compress_fallback(op, action, kind, compress)
         compress = "none"

@@ -52,7 +52,7 @@ __all__ = [
 # low-precision while row_norms_sq, sampling scales, and the iterate stay
 # f32 — the kernels up-cast tiles on load and accumulate in f32.  ``None``
 # keeps the input dtype untouched (the pre-existing behavior, bitwise).
-_STORAGE_DTYPES = ("float32", "bfloat16")
+STORAGE_DTYPES = ("float32", "bfloat16")
 
 
 def canonical_storage_dtype(storage_dtype):
@@ -64,10 +64,10 @@ def canonical_storage_dtype(storage_dtype):
         return None
     name = (storage_dtype if isinstance(storage_dtype, str)
             else jnp.dtype(storage_dtype).name)
-    if name not in _STORAGE_DTYPES:
+    if name not in STORAGE_DTYPES:
         raise ValueError(
             f"unknown storage_dtype: {storage_dtype!r} "
-            f"(choose from {_STORAGE_DTYPES})")
+            f"(choose from {STORAGE_DTYPES})")
     return jnp.dtype(name)
 
 

@@ -4,7 +4,6 @@ block_gs          - randomized block Gauss-Seidel sweep (the paper's Alg. 1,
                     TPU-adapted: block granularity, VMEM-resident iterate)
 bbmv              - block-banded SPD matvec (TPU-native sparse layout)
 spmv_ell          - ELLPACK SpMV (GPU-style gather port, kept for contrast)
-decode_attention  - flash-decode for the serving path (decode_32k/long_500k)
 
 Use repro.kernels.ops for the jit'd wrappers and repro.kernels.ref for the
 pure-jnp oracles the tests compare against.

@@ -48,8 +48,11 @@ def _kernel(idx_ref, a_ref, b_ref, x_ref, o_ref, *, block: int, bands: int,
     o_ref[rows, :] = o_ref[rows, :] + beta * acc.astype(o_ref.dtype)
 
 
-@functools.partial(jax.jit,
-                   static_argnames=("block", "bands", "beta", "interpret"))
+#: the sweep wrappers share one jit signature: geometry + step size static
+_STATIC_ARGS = ("block", "bands", "beta", "interpret")
+
+
+@functools.partial(jax.jit, static_argnames=_STATIC_ARGS)
 def banded_gs_sweep(
     A_bands: jax.Array,
     b: jax.Array,
@@ -130,8 +133,7 @@ def _rk_kernel(idx_ref, gate_ref, a_ref, b_ref, rn_ref, x_ref, d_ref,
         do_ref[rows, :] = do_ref[rows, :] + contrib
 
 
-@functools.partial(
-    jax.jit, static_argnames=("block", "bands", "beta", "interpret"))
+@functools.partial(jax.jit, static_argnames=_STATIC_ARGS)
 def banded_rk_sweep(
     A_bands: jax.Array,
     b: jax.Array,

@@ -14,7 +14,6 @@ from repro.kernels.banded_gs import (banded_gs_sweep as _banded_gs_sweep,
                                      banded_rk_sweep as _banded_rk_sweep)
 from repro.kernels.bbmv import bbmv as _bbmv, dense_to_bands
 from repro.kernels.block_gs import block_gs_sweep as _block_gs_sweep
-from repro.kernels.decode_attention import decode_attention as _decode_attention
 from repro.kernels.spmv_csr import (
     spmv_csr as _spmv_csr,
     spmv_csr_prefetch as _spmv_csr_prefetch,
@@ -154,20 +153,11 @@ def sweep_ell_rk_delta(vals, cols, b, rn, x, d, picks, *, beta=1.0,
                                interpret=_interp(interpret))
 
 
-def decode_attention(q, k_cache, v_cache, lengths, *, chunk=512, interpret=None):
-    if k_cache.shape[1] % chunk != 0:
-        return ref.decode_attention_ref(q, k_cache, v_cache, lengths)
-    return _decode_attention(
-        q, k_cache, v_cache, lengths, chunk=chunk, interpret=_interp(interpret)
-    )
-
-
 __all__ = [
     "banded_gs_sweep",
     "banded_rk_sweep",
     "bbmv",
     "block_gs_sweep",
-    "decode_attention",
     "dense_to_bands",
     "spmv_csr",
     "spmv_csr_prefetch",

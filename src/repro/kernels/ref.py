@@ -41,18 +41,3 @@ def spmv_csr_ref(data, indices, row_id, x, *, m):
     return jax.ops.segment_sum(contrib, row_id,
                                num_segments=m).astype(x.dtype)
 
-
-def decode_attention_ref(q, k_cache, v_cache, lengths):
-    """Single-token GQA attention, full-precision softmax."""
-    B, H, D = q.shape
-    _, S, KV, _ = k_cache.shape
-    G = H // KV
-    qg = q.reshape(B, KV, G, D).astype(jnp.float32)
-    k = k_cache.astype(jnp.float32)
-    v = v_cache.astype(jnp.float32)
-    scores = jnp.einsum("bhgd,bshd->bhgs", qg, k) / (D ** 0.5)
-    mask = jnp.arange(S)[None, None, None, :] < lengths[:, None, None, None]
-    scores = jnp.where(mask, scores, -jnp.inf)
-    p = jax.nn.softmax(scores, axis=-1)
-    out = jnp.einsum("bhgs,bshd->bhgd", p, v)
-    return out.reshape(B, H, D).astype(q.dtype)

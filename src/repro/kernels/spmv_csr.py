@@ -89,9 +89,11 @@ def _kernel_skip(nnz_ref, vals_ref, cols_ref, rows_ref, x_ref, o_ref, *,
         o_ref[...] = jnp.zeros_like(o_ref)
 
 
-@functools.partial(
-    jax.jit,
-    static_argnames=("m", "rows_per_panel", "panel_width", "interpret"))
+#: both matvec wrappers share one jit signature: panel geometry static
+_STATIC_ARGS = ("m", "rows_per_panel", "panel_width", "interpret")
+
+
+@functools.partial(jax.jit, static_argnames=_STATIC_ARGS)
 def spmv_csr(
     data: jax.Array,
     indices: jax.Array,
@@ -134,9 +136,7 @@ def spmv_csr(
     return y[:m]
 
 
-@functools.partial(
-    jax.jit,
-    static_argnames=("m", "rows_per_panel", "panel_width", "interpret"))
+@functools.partial(jax.jit, static_argnames=_STATIC_ARGS)
 def spmv_csr_prefetch(
     data: jax.Array,
     indices: jax.Array,

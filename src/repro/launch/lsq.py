@@ -25,8 +25,14 @@ import jax.numpy as jnp
 
 from repro.core import (Schedule, cg_solve, random_lsq, random_sparse_lsq,
                         solve, theory, to_unit_diagonal)
-from repro.core.engine import scheduled_tau
+from repro.core.engine import (COMPRESS_MODES, PARTITIONS, scheduled_tau,
+                               supported_syncs)
+from repro.core.operators import STORAGE_DTYPES
 from repro.launch.mesh import make_host_mesh
+
+#: operator class names this CLI can build (--format dense/csr); the
+#: --rk-sync choices are derived from the dispatch table narrowed to these
+_CLI_FORMATS = ("DenseOp", "CsrOp")
 
 
 def main(argv=None):
@@ -47,13 +53,14 @@ def main(argv=None):
     ap.add_argument("--sweeps", type=int, default=6)
     ap.add_argument("--tau", type=int, default=32,
                     help="delay bound for the async simulator")
-    ap.add_argument("--rk-sync", choices=("auto", "psum", "a2a"),
+    ap.add_argument("--rk-sync",
+                    choices=("auto", *supported_syncs("rk", _CLI_FORMATS)),
                     default="auto",
                     help="distributed RK delta sync: a2a = two-phase "
                          "exchange over the column-slab neighbor graph "
                          "(csr format; bitwise-identical to psum, falls "
                          "back when the graph is dense)")
-    ap.add_argument("--partition", choices=("contiguous", "balanced"),
+    ap.add_argument("--partition", choices=PARTITIONS,
                     default="contiguous",
                     help="distributed slab assignment: 'balanced' bin-packs "
                          "rows by norm mass and nnz into the P slabs via a "
@@ -71,12 +78,12 @@ def main(argv=None):
                          "round r (csr format; dense falls back to lockstep "
                          "with a warning), at the cost of one extra round "
                          "of scheduled staleness")
-    ap.add_argument("--storage-dtype", choices=("float32", "bfloat16"),
+    ap.add_argument("--storage-dtype", choices=STORAGE_DTYPES,
                     default=None,
                     help="precision the operator's coefficients are stored "
                          "in (row norms, iterate and accumulation stay "
                          "f32); default keeps the input dtype bitwise")
-    ap.add_argument("--compress", choices=("none", "bf16", "int8_ef"),
+    ap.add_argument("--compress", choices=COMPRESS_MODES,
                     default="none",
                     help="wire format of the distributed RK delta sync "
                          "(csr format, psum wire; a2a falls back to psum "

@@ -18,8 +18,14 @@ import jax
 import jax.numpy as jnp
 
 from repro.core import (Schedule, cg_solve, random_sparse_spd, solve, theory)
-from repro.core.engine import scheduled_tau
+from repro.core.engine import (COMPRESS_MODES, PARTITIONS, scheduled_tau,
+                               supported_syncs)
+from repro.core.operators import STORAGE_DTYPES
 from repro.launch.mesh import make_host_mesh
+
+#: operator class names this CLI can build (--format dense/ell/csr); the
+#: --sync choices are derived from the dispatch table narrowed to these
+_CLI_FORMATS = ("DenseOp", "EllOp", "CsrOp")
 
 
 def main(argv=None):
@@ -33,13 +39,14 @@ def main(argv=None):
                     default="dense",
                     help="operator format (sequential AND distributed)")
     ap.add_argument("--ell-width", type=int, default=64)
-    ap.add_argument("--sync", choices=("auto", "allgather", "a2a"),
+    ap.add_argument("--sync",
+                    choices=("auto", *supported_syncs("gs", _CLI_FORMATS)),
                     default="auto",
                     help="distributed sync strategy (a2a = sparsity-derived "
                          "neighbor all-to-all, CSR/ELL formats; the halo "
                          "strategy belongs to the banded format, which this "
                          "CLI does not build)")
-    ap.add_argument("--partition", choices=("contiguous", "balanced"),
+    ap.add_argument("--partition", choices=PARTITIONS,
                     default="contiguous",
                     help="distributed slab assignment: 'balanced' bin-packs "
                          "rows by norm mass and nnz into the P slabs via a "
@@ -56,12 +63,12 @@ def main(argv=None):
                          "extra round of scheduled staleness (sparse/halo "
                          "strategies; others fall back to lockstep with a "
                          "warning)")
-    ap.add_argument("--storage-dtype", choices=("float32", "bfloat16"),
+    ap.add_argument("--storage-dtype", choices=STORAGE_DTYPES,
                     default=None,
                     help="precision the operator's coefficients are stored "
                          "in (row norms, iterate and accumulation stay "
                          "f32); default keeps the input dtype bitwise")
-    ap.add_argument("--compress", choices=("none", "bf16", "int8_ef"),
+    ap.add_argument("--compress", choices=COMPRESS_MODES,
                     default="none",
                     help="wire format of the distributed sync payload; the "
                          "GS allgather/a2a exchanges are bitwise-pinned and "

@@ -1,26 +1,12 @@
-"""Optimizers + the paper's bounded-staleness asynchronous update."""
-from repro.optim.adamw import (
-    AdamWState,
-    AdafactorState,
-    Optimizer,
-    adafactor,
-    adamw,
-    clip_by_global_norm,
-    global_norm,
-    warmup_cosine,
-)
-from repro.optim.async_update import (
-    AsyncGradState,
-    async_state_specs,
-    init_async_grads,
-    push_pop,
-    staleness_beta,
-)
+"""Wire codecs for the distributed solver's sync payloads.
+
+``compression`` holds the block-wise int8 quantizer (+ error feedback)
+and bf16 round-to-nearest codec behind ``Schedule.compress``.  The
+LLM-template optimizers (adamw/adafactor) and the trainer-level
+bounded-staleness gradient ring that used to live here were pruned in
+PR 8 — they were unreachable from the solver entry points (see
+DESIGN.md "Invariants & static analysis", checker DM1).
+"""
 from repro.optim import compression
 
-__all__ = [
-    "AdamWState", "AdafactorState", "Optimizer", "adafactor", "adamw",
-    "clip_by_global_norm", "global_norm", "warmup_cosine",
-    "AsyncGradState", "async_state_specs", "init_async_grads", "push_pop",
-    "staleness_beta", "compression",
-]
+__all__ = ["compression"]

@@ -37,7 +37,7 @@ def test_tau0_matches_sync(prob):
     b = async_rgs_solve(prob.A, prob.b, jnp.zeros_like(prob.x_star),
                         prob.x_star, key=k, delay_key=jax.random.key(4),
                         num_iters=300, tau=0)
-    np.testing.assert_allclose(np.asarray(a.x), np.asarray(b.x), atol=1e-6)
+    np.testing.assert_array_equal(np.asarray(a.x), np.asarray(b.x))
 
 
 @pytest.mark.parametrize("delay_mode", ["fixed", "uniform", "cyclic"])

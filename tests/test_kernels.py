@@ -59,43 +59,6 @@ def test_spmv_ell(n, width, k):
                                atol=1e-4, rtol=1e-4)
 
 
-@pytest.mark.parametrize("B,H,KV,D,S,chunk", [
-    (2, 8, 2, 64, 1024, 256),
-    (1, 4, 1, 128, 512, 128),
-    (3, 12, 4, 64, 512, 512),
-])
-@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
-def test_decode_attention(B, H, KV, D, S, chunk, dtype):
-    ks = jax.random.split(jax.random.key(3), 4)
-    q = jax.random.normal(ks[0], (B, H, D), dtype)
-    kc = jax.random.normal(ks[1], (B, S, KV, D), dtype)
-    vc = jax.random.normal(ks[2], (B, S, KV, D), dtype)
-    lengths = jax.random.randint(ks[3], (B,), 1, S + 1)
-    out = ops.decode_attention(q, kc, vc, lengths, chunk=chunk)
-    want = ref.decode_attention_ref(q, kc, vc, lengths)
-    tol = 1e-4 if dtype == jnp.float32 else 3e-2
-    np.testing.assert_allclose(np.asarray(out, np.float32),
-                               np.asarray(want, np.float32), atol=tol, rtol=tol)
-
-
-def test_decode_attention_masked_tail():
-    """Everything past ``lengths`` must be ignored: poisoning the invalid
-    tail of the cache cannot change the output."""
-    B, H, KV, D, S = 2, 4, 2, 64, 512
-    ks = jax.random.split(jax.random.key(4), 3)
-    q = jax.random.normal(ks[0], (B, H, D))
-    kc = jax.random.normal(ks[1], (B, S, KV, D))
-    vc = jax.random.normal(ks[2], (B, S, KV, D))
-    lengths = jnp.array([100, 317])
-    base = ops.decode_attention(q, kc, vc, lengths, chunk=128)
-    mask = jnp.arange(S)[None, :, None, None] >= lengths[:, None, None, None]
-    kc2 = jnp.where(mask, 1e6, kc)
-    vc2 = jnp.where(mask, -1e6, vc)
-    poisoned = ops.decode_attention(q, kc2, vc2, lengths, chunk=128)
-    np.testing.assert_allclose(np.asarray(base), np.asarray(poisoned),
-                               atol=1e-5)
-
-
 # ---------------------------------------------------------------------------
 # Sparse matvec kernels on ragged/degenerate shapes (ISSUE 4 satellite)
 # ---------------------------------------------------------------------------

@@ -1,0 +1,358 @@
+"""Meta-suite for repro-lint (src/repro/analysis): every checker must fire
+on its known-bad fixture snippet and stay silent on the clean twin, and
+the repo itself must pass ``--fail-on-new`` against the checked-in
+baseline.  The fixtures are the contract: if a checker is loosened until
+it misses its bad snippet, this suite — not a future regression — fails.
+"""
+import ast
+import textwrap
+
+from repro.analysis import (bitwise_pin, dead_modules, dispatch,
+                            kernel_precision, lint, pytree_purity,
+                            trace_safety)
+
+
+def _codes(checker, source, path="src/repro/fixture.py"):
+    tree = ast.parse(textwrap.dedent(source))
+    return [f.code for f in checker.check_file(path, tree, source)]
+
+
+def _repo_codes(checker, files, root="/nonexistent-fixture-root"):
+    parsed = {p: (ast.parse(textwrap.dedent(s)), s) for p, s in files.items()}
+    return [(f.code, f.symbol) for f in checker.check_repo(root, parsed)]
+
+
+# -- kernel accumulation contract (KP) --------------------------------------
+
+BAD_KERNEL = """
+    import functools
+    import jax.numpy as jnp
+    from jax.experimental import pallas as pl
+
+    def _bad_kernel(vals_ref, cols_ref, x_ref, o_ref, *, beta):
+        vals = vals_ref[0]                       # bf16 panel, no upcast
+        cols = cols_ref[0]                       # int16 panel, no widen
+        contrib = vals * x_ref[cols]             # KP1 + KP4
+        prod = jnp.dot(vals, x_ref[...])         # KP2 (no pet) [+KP1 arg]
+        acc = jnp.zeros((8,), dtype=jnp.bfloat16)
+        o_ref[0] = acc + contrib                 # KP3: bf16 accumulator
+
+    def run(vals, cols, x):
+        return pl.pallas_call(functools.partial(_bad_kernel, beta=1.0),
+                              out_shape=x)(vals, cols, x)
+"""
+
+CLEAN_KERNEL = """
+    import functools
+    import jax.numpy as jnp
+    from jax.experimental import pallas as pl
+
+    def _kernel(vals_ref, cols_ref, b_ref, x_ref, o_ref, *, beta):
+        vals = vals_ref[0].astype(jnp.float32)   # f32 accumulate
+        cols = cols_ref[0].astype(jnp.int32)     # widen compact indices
+        acc = vals * x_ref[cols] + b_ref[...]
+        prod = jnp.dot(vals, x_ref[...],
+                       preferred_element_type=jnp.float32)
+        o_ref[0] = (beta * (acc + prod)).astype(o_ref.dtype)
+
+    def run(vals, cols, b, x):
+        return pl.pallas_call(_kernel, out_shape=x)(vals, cols, b, x)
+"""
+
+
+def test_kernel_precision_catches_bad_kernel():
+    codes = _codes(kernel_precision, BAD_KERNEL)
+    assert "KP1" in codes, codes       # raw coefficient reaches arithmetic
+    assert "KP2" in codes, codes       # jnp.dot without pet=f32
+    assert "KP3" in codes, codes       # explicit bf16 accumulator
+    assert "KP4" in codes, codes       # raw int16 gather index
+
+
+def test_kernel_precision_clean_kernel_is_silent():
+    assert _codes(kernel_precision, CLEAN_KERNEL) == []
+
+
+def test_kernel_precision_allows_symbolic_writeback_cast():
+    src = """
+        from jax.experimental import pallas as pl
+        import jax.numpy as jnp
+
+        def _kernel(a_ref, o_ref):
+            acc = a_ref[0].astype(jnp.float32) * 2.0
+            o_ref[0] = acc.astype(o_ref.dtype)
+
+        def run(a, o):
+            return pl.pallas_call(_kernel, out_shape=o)(a)
+    """
+    assert _codes(kernel_precision, src) == []
+
+
+# -- dispatch exhaustiveness (DX) -------------------------------------------
+
+BAD_ENGINE = """
+    _DISTRIBUTED_STRATEGIES = {
+        ("gs", "DenseOp", "allgather"): "dense_gs",
+        ("gs", "EllOp", "allgather"): "sparse_gs",
+        ("rk", "DenseOp", "psum"): "dense_rk",
+    }
+    _FUSED_STRATEGIES = frozenset({"sparse_gs", "banded_gs"})
+
+    def solve_distributed(op, action, sync, fused):
+        kind = _DISTRIBUTED_STRATEGIES.get((action, type(op).__name__, sync))
+        if kind is None:
+            raise NotImplementedError("gs/rk on dense or ell")
+        return kind
+"""
+
+
+def test_dispatch_catches_hole_stale_member_missing_guard():
+    found = _repo_codes(dispatch, {"src/repro/core/engine.py": BAD_ENGINE})
+    codes = [c for c, _ in found]
+    # ("rk", "EllOp") has no row although both appear -> the PR-3 hole shape
+    assert ("DX2", "_DISTRIBUTED_STRATEGIES[rk,EllOp]") in found, found
+    # "banded_gs" is not a kind the table produces
+    assert "DX1" in codes, found
+    # no `fused and kind not in _FUSED_STRATEGIES` warn-guard
+    assert "DX3" in codes, found
+    # the miss path never enumerates sorted(_DISTRIBUTED_STRATEGIES)
+    assert "DX5" in codes, found
+
+
+def test_dispatch_catches_duplicated_capability_literal():
+    engine = """
+        _DISTRIBUTED_STRATEGIES = {
+            ("gs", "DenseOp", "allgather"): "dense_gs",
+        }
+        COMPRESS_MODES = ("none", "bf16", "int8_ef")
+    """
+    cli = """
+        def main(ap):
+            ap.add_argument("--compress", choices=("none", "bf16", "int8_ef"))
+    """
+    found = _repo_codes(dispatch, {"src/repro/core/engine.py": engine,
+                                   "src/repro/launch/solve.py": cli})
+    assert ("DX4", "literal==COMPRESS_MODES") in found, found
+    # exactly one site: the defining assignment itself must not be flagged
+    assert [f for f in found if f[0] == "DX4"] == [
+        ("DX4", "literal==COMPRESS_MODES")], found
+
+
+def test_dispatch_real_engine_is_single_sourced():
+    """The shipped engine passes the dispatch checker outright — every
+    capability set is live, guarded, and single-sourced."""
+    root = lint.repo_root()
+    parsed = {p: ts for p, ts in lint.parse_tree(root)["src"].items()
+              if ts[0] is not None}
+    assert dispatch.check_repo(root, parsed) == []
+
+
+# -- pytree purity (PT) -----------------------------------------------------
+
+BAD_PYTREE = """
+    import jax.numpy as jnp
+    from jax.tree_util import register_pytree_node_class
+
+    @register_pytree_node_class
+    class BadOp:
+        def tree_flatten(self):
+            aux = (self.shape, [1, 2], jnp.asarray(self.scale), self.vals)
+            return (self.vals,), aux
+
+        def tree_unflatten(cls, aux, leaves):
+            return cls()
+
+    @register_pytree_node_class
+    class HalfOp:
+        def tree_flatten(self):
+            return (self.x,), None
+"""
+
+
+def test_pytree_purity_catches_bad_aux():
+    codes = _codes(pytree_purity, BAD_PYTREE)
+    assert "PT2" in codes, codes    # unhashable [1, 2] literal in aux
+    assert "PT3" in codes, codes    # jnp.asarray(...) feeding aux
+    assert "PT4" in codes, codes    # self.vals in both leaves and aux
+    assert "PT1" in codes, codes    # HalfOp missing tree_unflatten
+
+
+def test_pytree_purity_unregistered_flatten_flagged():
+    src = """
+        class Ghost:
+            def tree_flatten(self):
+                return (self.x,), None
+
+            def tree_unflatten(cls, aux, leaves):
+                return cls()
+    """
+    assert _codes(pytree_purity, src) == ["PT1"]
+
+
+def test_pytree_purity_real_operators_are_clean():
+    import os
+    root = lint.repo_root()
+    path = os.path.join(root, "src", "repro", "core", "operators.py")
+    tree, src = lint.parse_file(path)
+    assert pytree_purity.check_file("src/repro/core/operators.py",
+                                    tree, src) == []
+
+
+# -- trace safety (TS) ------------------------------------------------------
+
+BAD_TRACED = """
+    import functools
+    import time
+    import jax
+    import numpy as np
+
+    @functools.partial(jax.jit, static_argnames=("flag",))
+    def impl(x, y, flag):
+        t0 = time.time()                    # TS1
+        noise = np.random.rand(4)           # TS2
+        if x.sum() > 0:                     # TS3: branch on traced value
+            y = y + noise
+        if flag:                            # static_argnames: fine
+            y = y * 2
+        if x is not None:                   # structural: fine
+            y = y + 1
+        return y + t0
+"""
+
+
+def test_trace_safety_catches_bad_region():
+    codes = _codes(trace_safety, BAD_TRACED)
+    assert codes.count("TS3") == 1, codes   # only the traced `if`, not flag
+    assert "TS1" in codes, codes
+    assert "TS2" in codes, codes
+
+
+def test_trace_safety_static_patterns_are_silent():
+    src = """
+        import functools
+        import jax
+
+        @functools.partial(jax.jit, static_argnames=("action", "block"))
+        def impl(op, xs_full, action, block):
+            if xs_full is not None:
+                y = xs_full
+            if action == "gs" and block > 1:
+                y = y + 1
+            if isinstance(op, tuple):
+                y = y * 2
+            if op.shape[0] > 4:
+                y = y - 1
+            return y
+    """
+    assert _codes(trace_safety, src) == []
+
+
+def test_trace_safety_nested_worker_params_are_traced():
+    src = """
+        import jax
+        from repro.compat import shard_map
+
+        def solve(op, mesh):
+            def worker(x_slab, b_slab):
+                if x_slab.sum() > 0:        # TS3 inside the worker
+                    b_slab = b_slab + 1
+                return b_slab
+            return shard_map(worker, mesh=mesh)(op, op)
+    """
+    assert _codes(trace_safety, src) == ["TS3"]
+
+
+# -- bitwise pin (BP) -------------------------------------------------------
+
+def test_bitwise_pin_catches_allclose_under_bitwise_name():
+    src = """
+        import numpy as np
+
+        def test_overlap_bitwise_vs_lockstep():
+            a, b = make()
+            np.testing.assert_allclose(a, b, rtol=1e-5)
+    """
+    assert _codes(bitwise_pin, src, "tests/test_fixture.py") == ["BP1", "BP2"]
+
+
+def test_bitwise_pin_catches_docstring_claim_without_exact_compare():
+    src = """
+        def test_overlap_matches():
+            '''overlap=True is bitwise-identical to the lockstep sync.'''
+            a, b = make()
+            assert abs(a - b).max() < 1e-6
+    """
+    assert _codes(bitwise_pin, src, "tests/test_fixture.py") == ["BP2"]
+
+
+def test_bitwise_pin_accepts_exact_and_zero_tolerance():
+    src = """
+        import numpy as np
+
+        def test_a2a_bitwise_identical():
+            a, b = make()
+            np.testing.assert_array_equal(a, b)
+
+        def test_halo_bitwise_pin():
+            a, b = make()
+            np.testing.assert_allclose(a, b, rtol=0, atol=0)
+    """
+    assert _codes(bitwise_pin, src, "tests/test_fixture.py") == []
+
+
+def test_bitwise_pin_reads_module_level_subprocess_scripts():
+    src = '''
+    SCRIPT = """
+    import jax.numpy as jnp
+    ra, rp = run_both()
+    assert bool(jnp.array_equal(ra.x, rp.x))
+    print("OK")
+    """
+
+    def test_rk_bitwise_forced_devices():
+        run_forced_device_script(SCRIPT, marker="OK")
+    '''
+    assert _codes(bitwise_pin, src, "tests/test_fixture.py") == []
+
+
+# -- dead modules (DM) ------------------------------------------------------
+
+def test_dead_modules_flags_unreachable_template():
+    files = {
+        "src/repro/__init__.py": "",
+        "src/repro/core/__init__.py": "from repro.core import engine",
+        "src/repro/core/engine.py": "",
+        "src/repro/models/__init__.py": "from repro.models import transformer",
+        "src/repro/models/transformer.py": "",
+    }
+    found = _repo_codes(dead_modules, files)
+    symbols = {s for _c, s in found}
+    assert "repro.models" in symbols, found
+    assert "repro.models.transformer" in symbols, found
+    assert "repro.core.engine" not in symbols, found
+
+
+def test_dead_modules_repo_has_only_baselined_survivors():
+    """After the PR-8 prune, the only unreachable src module is the
+    baselined banded test oracle."""
+    assert dead_modules.unreachable_modules() == ["repro.kernels.ref_banded"]
+
+
+# -- runner / baseline ------------------------------------------------------
+
+def test_finding_key_excludes_line_numbers():
+    from repro.analysis.common import Finding
+    a = Finding(code="KP1", path="src/x.py", line=10, symbol="f", message="m")
+    b = Finding(code="KP1", path="src/x.py", line=99, symbol="f", message="m")
+    assert a.key == b.key
+
+
+def test_repo_passes_fail_on_new_against_checked_in_baseline():
+    assert lint.main(["--fail-on-new"]) == 0
+
+
+def test_fail_on_new_rejects_unbaselined_findings(tmp_path):
+    empty = tmp_path / "baseline.json"
+    empty.write_text('{"findings": []}')
+    # the repo currently carries (exactly) the baselined findings, so an
+    # empty baseline must fail the gate
+    assert lint.main(["--fail-on-new", "--baseline", str(empty)]) == 1

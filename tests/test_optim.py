@@ -1,108 +1,15 @@
-"""Optimizers, the bounded-staleness async update (the paper's trainer-level
-technique) and the int8 gradient codec."""
-import jax
+"""The int8 (+error-feedback) and bf16 wire codecs behind
+``Schedule.compress``.  The optimizer/async-gradient tests that used to
+live here went with the pruned LLM-template ``optim.adamw`` /
+``optim.async_update`` modules (PR 8)."""
 import jax.numpy as jnp
 import numpy as np
 import pytest
 pytest.importorskip("hypothesis")  # optional dev dep; see requirements-dev.txt
 from hypothesis import given, strategies as st
 
-from repro.optim import (adafactor, adamw, async_state_specs,
-                         clip_by_global_norm, compression, global_norm,
-                         init_async_grads, push_pop, staleness_beta,
-                         warmup_cosine)
+from repro.optim import compression
 
-
-def _quadratic():
-    A = jnp.diag(jnp.array([1.0, 4.0, 9.0]))
-    b = jnp.array([1.0, -2.0, 3.0])
-
-    def loss(p):
-        return 0.5 * p @ A @ p - b @ p
-    x_star = jnp.linalg.solve(A, b)
-    return loss, x_star
-
-
-@pytest.mark.parametrize("make", [lambda: adamw(weight_decay=0.0),
-                                  lambda: adafactor(weight_decay=0.0,
-                                                    momentum_dtype=jnp.float32)])
-def test_optimizer_minimizes_quadratic(make):
-    loss, x_star = _quadratic()
-    opt = make()
-    params = {"p": jnp.zeros(3)}
-    state = opt.init(params)
-    for _ in range(400):
-        g = jax.grad(lambda pp: loss(pp["p"]))(params)
-        params, state = opt.update(g, state, params, 0.05)
-    np.testing.assert_allclose(np.asarray(params["p"]), np.asarray(x_star),
-                               atol=0.05)
-
-
-def test_adamw_state_structure_matches_params():
-    opt = adamw()
-    params = {"a": jnp.ones((4, 4)), "nested": ({"b": jnp.ones(3)},)}
-    st_ = opt.init(params)
-    assert jax.tree.structure(st_.m) == jax.tree.structure(params)
-    g = jax.tree.map(jnp.ones_like, params)
-    p2, st2 = opt.update(g, st_, params, 1e-2)
-    assert jax.tree.structure(p2) == jax.tree.structure(params)
-    assert int(st2.count) == 1
-
-
-def test_adafactor_factored_state_shapes():
-    opt = adafactor()
-    params = {"w": jnp.ones((64, 32)), "b": jnp.ones((32,))}
-    s = opt.init(params)
-    assert s.vr["w"].shape == (64,)
-    assert s.vc["w"].shape == (32,)
-    assert s.v["w"].shape == (0,)          # factored leaf: no full moment
-    assert s.v["b"].shape == (32,)         # vector leaf: unfactored
-
-
-def test_clip_by_global_norm():
-    tree = {"a": jnp.full((10,), 3.0)}
-    clipped, n = clip_by_global_norm(tree, 1.0)
-    np.testing.assert_allclose(float(global_norm(clipped)), 1.0, rtol=1e-5)
-    np.testing.assert_allclose(float(n), np.sqrt(90.0), rtol=1e-5)
-
-
-def test_warmup_cosine_schedule():
-    s = warmup_cosine(1e-3, warmup=10, total=110)
-    assert float(s(jnp.array(0))) == 0.0
-    np.testing.assert_allclose(float(s(jnp.array(10))), 1e-3, rtol=1e-5)
-    assert float(s(jnp.array(110))) <= 1.01 * 1e-4 + 1e-9 + 1e-4
-
-
-# -- the paper's bounded-staleness update -----------------------------------
-
-def test_staleness_beta_is_papers_formula():
-    # beta~ = 1/(1 + 2 rho tau) with rho_hat = 0.5 -> 1/(1+tau)
-    assert staleness_beta(0) == 1.0
-    assert staleness_beta(3) == pytest.approx(1.0 / 4.0)
-    assert staleness_beta(2, rho_hat=0.25) == pytest.approx(1.0 / 2.0)
-
-
-def test_push_pop_delays_exactly_tau_steps():
-    tau = 3
-    params = {"w": jnp.zeros(2)}
-    state = init_async_grads(params, tau)
-    popped_seq = []
-    for t in range(8):
-        g = {"w": jnp.full(2, float(t + 1))}
-        popped, state = push_pop(state, g)
-        popped_seq.append(float(popped["w"][0]))
-    # cold start: tau zeros, then gradients delayed by exactly tau
-    assert popped_seq == [0.0, 0.0, 0.0, 1.0, 2.0, 3.0, 4.0, 5.0]
-
-
-def test_async_state_specs_shapes():
-    from jax.sharding import PartitionSpec as P
-    specs = {"w": P("data", "model")}
-    s = async_state_specs(specs, tau=2)
-    assert s.ring["w"] == P(None, "data", "model")
-
-
-# -- int8 gradient codec -----------------------------------------------------
 
 @given(st.integers(0, 10**6), st.floats(0.1, 100.0))
 def test_compression_roundtrip_error_bound(seed, scale):
@@ -194,7 +101,7 @@ def test_error_feedback_reduces_bias():
     true = jnp.full((64,), 1e-4)   # far below one quantization step of noise
     base = jnp.linspace(-1.0, 1.0, 64)
     sent_sum = jnp.zeros(64)
-    for i in range(50):
+    for _ in range(50):
         g = {"w": base * 0 + true}
         sent, ef = compression.compress_with_feedback(g, ef)
         sent_sum = sent_sum + sent["w"]

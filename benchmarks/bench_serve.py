@@ -1,0 +1,128 @@
+"""Serving-layer benchmark: queries/sec + p50/p99 latency under a
+synthetic open-loop load, persisted as ``BENCH_serve.json``.
+
+This is a new BENCH axis beyond per-kernel wall time: the quantity the
+serving layer exists to improve is request throughput at bounded tail
+latency, and the quantity that proves continuous batching works is the
+ratio against a one-request-at-a-time baseline (``max_batch=1``, same
+request stream, same tolerances).  Both runs replay the identical
+deterministic arrival plan, and because the service's pick stream is
+fixed per problem and RHS columns are independent, each request reaches
+tolerance in the SAME number of record chunks in both modes — equal
+convergence, so the speedup is pure batching, not slack accuracy.
+"""
+from __future__ import annotations
+
+import argparse
+import sys
+from pathlib import Path
+
+sys.path.insert(0, str(Path(__file__).resolve().parent.parent))
+
+import jax  # noqa: E402
+
+from benchmarks.common import emit, write_json  # noqa: E402
+from repro.core import random_sparse_spd  # noqa: E402
+from repro.serve import (  # noqa: E402
+    RHS_BUCKETS, SolverService, bucket_rhs, open_loop_load)
+
+
+def warm_buckets(args, serial: bool) -> tuple:
+    """Every RHS bucket the mode can encounter, for pre-compilation.
+
+    Warmup happens at registration, BEFORE the measured window opens —
+    the steady-state numbers must measure the warm executable cache, not
+    first-touch compilation (same discipline as ``common.timed``).
+    Serial batches carry one request; batched batches anything up to
+    ``max_batch`` requests of the widest shape.
+    """
+    caps = {bucket_rhs(w) for w in args.rhs_widths}
+    if not serial:
+        cap = min(args.max_batch, args.requests) * max(args.rhs_widths)
+        caps |= {b for b in RHS_BUCKETS if b <= cap} | {bucket_rhs(cap)}
+    return tuple(sorted(caps))
+
+
+def run_mode(prob, *, serial: bool, args):
+    svc = SolverService(
+        num_iters=args.max_iters, record_every=args.record_every,
+        max_batch=1 if serial else args.max_batch,
+        batch_window_s=0.0 if serial else args.batch_window_ms * 1e-3)
+    svc.register("bench", prob.A, action="gs", format=args.format,
+                 seed=args.seed, warmup_buckets=warm_buckets(args, serial))
+    with svc:
+        report = open_loop_load(
+            svc, "bench", requests=args.requests, rate_hz=args.rate,
+            rhs_widths=tuple(args.rhs_widths), rtol=args.rtol,
+            seed=args.seed)
+    mode = "serial" if serial else "batched"
+    emit(f"serve_{mode}", qps=round(report.qps, 2),
+         p50_ms=round(report.p50_ms, 2), p99_ms=round(report.p99_ms, 2),
+         converged=report.converged, batches=svc.stats.batches,
+         chunk_launches=svc.stats.chunk_launches)
+    return {
+        "qps": report.qps,
+        "p50_ms": report.p50_ms,
+        "p99_ms": report.p99_ms,
+        "mean_ms": report.mean_ms,
+        "makespan_s": report.makespan_s,
+        "requests": report.requests,
+        "converged": report.converged,
+        "rounds_per_request": report.rounds_per_request,
+        "batches": svc.stats.batches,
+        "chunk_launches": svc.stats.chunk_launches,
+        "batch_widths": svc.stats.batch_widths,
+        "executor_cache": svc.executors.stats(),
+    }
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--n", type=int, default=256)
+    ap.add_argument("--row-nnz", type=int, default=8)
+    ap.add_argument("--format", choices=("dense", "ell", "csr"),
+                    default="csr")
+    ap.add_argument("--requests", type=int, default=24)
+    ap.add_argument("--rate", type=float, default=200.0)
+    ap.add_argument("--rhs-widths", type=int, nargs="+", default=[1, 2, 4])
+    ap.add_argument("--rtol", type=float, default=1e-3)
+    ap.add_argument("--max-iters", type=int, default=4096)
+    ap.add_argument("--record-every", type=int, default=64)
+    ap.add_argument("--max-batch", type=int, default=32)
+    ap.add_argument("--batch-window-ms", type=float, default=5.0)
+    ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--no-write", action="store_true")
+    args = ap.parse_args(argv)
+
+    prob = random_sparse_spd(args.n, row_nnz=args.row_nnz, n_rhs=1,
+                             seed=args.seed)
+    batched = run_mode(prob, serial=False, args=args)
+    serial = run_mode(prob, serial=True, args=args)
+
+    equal_convergence = (
+        batched["converged"] == serial["converged"]
+        and batched["rounds_per_request"] == serial["rounds_per_request"])
+    payload = {
+        "config": {
+            "n": args.n, "row_nnz": args.row_nnz, "format": args.format,
+            "requests": args.requests, "rate_hz": args.rate,
+            "rhs_widths": args.rhs_widths, "rtol": args.rtol,
+            "max_iters": args.max_iters, "record_every": args.record_every,
+            "max_batch": args.max_batch,
+            "batch_window_ms": args.batch_window_ms, "seed": args.seed,
+            "backend": jax.default_backend(),
+        },
+        "batched": batched,
+        "serial": serial,
+        "speedup_qps": batched["qps"] / serial["qps"],
+        "equal_convergence": equal_convergence,
+    }
+    emit("serve_summary", speedup_qps=round(payload["speedup_qps"], 2),
+         equal_convergence=equal_convergence)
+    if not args.no_write:
+        write_json("serve", payload)
+    return payload
+
+
+if __name__ == "__main__":
+    main()

@@ -11,7 +11,8 @@ Reachability is computed over the ``repro.*`` import graph:
 
 * roots — the solver surface (``repro.core``, ``repro.kernels``,
   ``repro.launch.solve``, ``repro.launch.lsq``, ``repro.launch.mesh``,
-  ``repro.optim``, ``repro.compat``, ``repro.analysis.lint``) **plus**
+  ``repro.launch.serve``, ``repro.serve``, ``repro.optim``,
+  ``repro.compat``, ``repro.analysis.lint``) **plus**
   every ``repro.*`` module imported by ``benchmarks/`` or ``examples/``
   scripts — including imports inside their embedded subprocess-script
   strings (the product surface keeps a module alive; tests do *not* —
@@ -39,6 +40,8 @@ ROOT_MODULES = (
     "repro.launch.solve",
     "repro.launch.lsq",
     "repro.launch.mesh",
+    "repro.launch.serve",
+    "repro.serve",
     "repro.optim",
     "repro.compat",
     "repro.analysis.lint",

@@ -34,6 +34,7 @@ from typing import NamedTuple
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 from jax.sharding import PartitionSpec as P
 
 from repro.compat import pvary, shard_map
@@ -258,6 +259,12 @@ class Schedule(NamedTuple):
                     "overlap=True is a distributed-schedule option (the "
                     "double-buffered sync needs rounds/local_steps) — got "
                     f"{self}")
+            if self.fused and self.tau > 0:
+                raise ValueError(
+                    "fused=True cannot run the bounded-delay simulator "
+                    "(its ring-buffer stale reads are inherently per-step; "
+                    "there is no fused sweep path to fall back from) — use "
+                    f"fused=False or a different schedule mode; got {self}")
             if self.compress != "none":
                 raise ValueError(
                     "compress is a distributed-schedule option (there is no "
@@ -286,16 +293,64 @@ def record_metrics(op, b, x, x_star, *, norm: str):
     ``norm="A"``: ||x - x*||_A^2 (the SPD family's Lyapunov function);
     ``norm="euclid"``: ||x - x*||_2^2 (rectangular systems have no A-norm).
     ``resid`` is always ||b - A x||_2.
+
+    ``x_star=None`` (a real workload: nobody knows the solution) yields
+    NaN ``err_sq`` and the finite residual — the same convention the
+    distributed strategies adopted in the PR-6 crash sweep.
     """
-    mv = getattr(op, "matvec_ref", op.matvec)
-    e = x - x_star
-    if norm == "A":
-        err = jnp.einsum("nk,nk->k", e, mv(e))
-    elif norm == "euclid":
-        err = jnp.einsum("nk,nk->k", e, e)
-    else:
+    if norm not in ("A", "euclid"):
         raise ValueError(norm)
+    mv = getattr(op, "matvec_ref", op.matvec)
+    if x_star is None:
+        err = jnp.full((x.shape[1],), jnp.nan, jnp.float32)
+    else:
+        e = x - x_star
+        if norm == "A":
+            err = jnp.einsum("nk,nk->k", e, mv(e))
+        else:
+            err = jnp.einsum("nk,nk->k", e, e)
     return err, jnp.linalg.norm(b - mv(x), axis=0)
+
+
+def resolve_record_every(num_iters: int, record_every: int) -> int:
+    """The effective record-chunk length, validated in ONE place.
+
+    ``record_every == 0`` means "record once, at the end".  The
+    divisibility error used to exist in four near-identical copies across
+    the sequential / fused / simulator bodies; the serving layer's
+    deadline / early-exit logic reuses this same check for its chunk math,
+    so the message can never drift between the library and the service.
+    """
+    rec = record_every or num_iters
+    if num_iters % rec != 0:
+        raise ValueError(
+            f"num_iters ({num_iters}) must be divisible by record_every "
+            f"({rec})")
+    return rec
+
+
+def draw_picks(op, action: str, key: jax.Array, num_iters: int, *,
+               block: int = 1) -> jax.Array:
+    """The sequential engine's direction stream, as one shared definition.
+
+    GS picks are uniform over the action's direction count (block rows for
+    ``BlockBandedOp``, coordinates at ``block == 1``, aligned panels
+    otherwise); RK rows are sampled ∝ ||A_i||^2 via ``sample_rows``.  Both
+    the one-shot sequential impls and the chunked batched entry
+    (``solve_batched``) draw from here, which is what makes a chunked run
+    bitwise-reproduce the one-shot pick stream.
+    """
+    if action == "gs":
+        if isinstance(op, BlockBandedOp):
+            hi = op.nb
+        elif block == 1:
+            hi = op.shape[0]
+        else:
+            hi = op.shape[0] // block
+        return jax.random.randint(key, (num_iters,), 0, hi)
+    if action == "rk":
+        return sample_rows(key, op.row_norms_sq(), num_iters)
+    raise ValueError(f"unknown action: {action!r}")
 
 
 def sample_rows(key: jax.Array, rn: jax.Array, num: int) -> jax.Array:
@@ -412,10 +467,13 @@ def _sequential_fused_impl(
     beta: float = 1.0,
     block: int = 1,
     record_every: int = 0,
+    picks: jax.Array | None = None,
 ) -> SolveResult:
     """Fused-sweep twin of ``_sequential_scan_impl``: identical pick
     streams and record points, but each record chunk runs as a single
-    Pallas launch.
+    Pallas launch.  ``picks`` overrides the internally drawn direction
+    stream (the chunked ``solve_batched`` entry feeds pre-drawn slices so
+    a chunked run replays the one-shot stream bitwise).
 
     ``beta`` is DELIBERATELY static here (its scan twin traces it): the
     sweep kernels bake the step size into the kernel body as a
@@ -427,25 +485,20 @@ def _sequential_fused_impl(
     contract is pinned by a compile-count test
     (tests/test_engine_overlap.py::test_fused_beta_static_recompiles).
     """
-    rec = record_every or num_iters
-    if num_iters % rec != 0:
-        raise ValueError(
-            f"num_iters ({num_iters}) must be divisible by record_every "
-            f"({rec})")
+    rec = resolve_record_every(num_iters, record_every)
 
     if action == "gs":
         norm = "A"
-        if isinstance(op, BlockBandedOp):
-            picks = jax.random.randint(key, (num_iters,), 0, op.nb)
-        else:
-            picks = jax.random.randint(key, (num_iters,), 0, op.shape[0])
+        if picks is None:
+            picks = draw_picks(op, action, key, num_iters, block=block)
 
         def sweep(x, ps):
             return op.gs_sweep(b, x, ps, beta=beta)
     elif action == "rk":
         norm = "euclid"
         rn = op.row_norms_sq()
-        picks = sample_rows(key, rn, num_iters)
+        if picks is None:
+            picks = draw_picks(op, action, key, num_iters, block=block)
 
         def sweep(x, ps):
             return op.rk_sweep(b, rn, x, ps, beta=beta)
@@ -480,14 +533,13 @@ def _sequential_scan_impl(
     beta: float = 1.0,
     block: int = 1,
     record_every: int = 0,
+    picks: jax.Array | None = None,
 ) -> SolveResult:
-    """The per-step scan engine (the pre-PR-5 ``solve_sequential`` body,
-    unchanged — the legacy bit-identity contract lives here)."""
-    rec = record_every or num_iters
-    if num_iters % rec != 0:
-        raise ValueError(
-            f"num_iters ({num_iters}) must be divisible by record_every "
-            f"({rec})")
+    """The per-step scan engine (the pre-PR-5 ``solve_sequential`` body —
+    the legacy bit-identity contract lives here; the pick draws now route
+    through ``draw_picks``, same streams bitwise).  ``picks`` overrides
+    the drawn stream — see ``_sequential_fused_impl``."""
+    rec = resolve_record_every(num_iters, record_every)
 
     if action == "gs":
         norm = "A"
@@ -495,7 +547,6 @@ def _sequential_scan_impl(
             # Θ(nnz) block-GS on the banded format (new capability: the
             # sequential twin of the banded distributed path).
             bsz = op.block
-            picks = jax.random.randint(key, (num_iters,), 0, op.nb)
 
             def step(x, bi):
                 g = op.residual_panel(b, x, bi)
@@ -503,8 +554,6 @@ def _sequential_scan_impl(
                 return jax.lax.dynamic_update_slice_in_dim(
                     x, cur + beta * g, bi * bsz, 0), None
         elif block == 1:
-            picks = jax.random.randint(key, (num_iters,), 0, op.shape[0])
-
             def step(x, r):
                 gamma = b[r] - op.row_dot(r, x)
                 return x.at[r].add(beta * gamma), None
@@ -513,8 +562,6 @@ def _sequential_scan_impl(
                 raise NotImplementedError(
                     "block GS with block > 1 needs aligned row panels "
                     "(DenseOp/CsrOp) or BlockBandedOp")
-            nb = op.shape[0] // block
-            picks = jax.random.randint(key, (num_iters,), 0, nb)
 
             def step(x, bi):
                 rows = bi * block + jnp.arange(block)
@@ -528,13 +575,15 @@ def _sequential_scan_impl(
                 "the banded Kaczmarz path runs through solve_distributed")
         norm = "euclid"
         rn = op.row_norms_sq()
-        picks = sample_rows(key, rn, num_iters)
 
         def step(x, r):
             g = (b[r] - op.row_dot(r, x)) / rn[r]
             return op.rk_update(x, r, g, beta), None
     else:
         raise ValueError(f"unknown action: {action!r}")
+
+    if picks is None:
+        picks = draw_picks(op, action, key, num_iters, block=block)
 
     def chunk(x, ps):
         x, _ = jax.lax.scan(step, x, ps)
@@ -632,11 +681,7 @@ def _async_sim_impl(
 ) -> SolveResult:
     A = op.A
     k = b.shape[1]
-    rec = record_every or num_iters
-    if num_iters % rec != 0:
-        raise ValueError(
-            f"num_iters ({num_iters}) must be divisible by record_every "
-            f"({rec})")
+    rec = resolve_record_every(num_iters, record_every)
     t_buf = max(tau, 1)
 
     if action == "gs":
@@ -2061,6 +2106,112 @@ def _sparse_rk(op, b, x0, xs, key, *, mesh, axis, rounds, local_steps, beta,
 
 
 # ---------------------------------------------------------------------------
+# Batched-RHS chunked entry (the serving layer's engine surface)
+# ---------------------------------------------------------------------------
+
+class BatchedSolveResult(NamedTuple):
+    x: jax.Array          # (n, k) iterate after the last executed chunk
+    resid: jax.Array      # (k,) ||b - A x||_2 at exit, per RHS column
+    #: (k,) int32: record chunks each column needed to reach ITS tolerance
+    #: (columns that never reached it report the chunks actually run)
+    rounds: jax.Array
+    converged: jax.Array  # (k,) bool, resid <= tol at some record point
+    iters_run: int        # iterations actually executed (<= num_iters)
+
+
+def sequential_chunk(op, b, x, picks, *, action: str, beta: float = 1.0,
+                     block: int = 1, fused: bool = False):
+    """One record chunk of the sequential engine: ``picks.shape[0]`` steps
+    from iterate ``x``; returns ``(x_next, resid)`` with ``resid`` the
+    per-column ``||b - A x_next||_2``.
+
+    This is the unit the serving layer's executor cache compiles once and
+    re-launches per record point: the same (operator layout, k bucket,
+    chunk length, statics) always maps to the same executable.  The
+    arithmetic is the one-shot impls' own — they are invoked with the
+    pre-drawn pick slice — so chaining chunks over consecutive
+    ``draw_picks`` slices bitwise-reproduces ``solve_sequential``.
+    """
+    impl = _sequential_scan_impl
+    if fused and _fused_sweep_supported(op, action, block):
+        impl = _sequential_fused_impl
+    res = impl(op, b, x, None, action=action, key=jax.random.key(0),
+               num_iters=picks.shape[0], beta=beta, block=block,
+               record_every=0, picks=picks)
+    return res.x, res.resid[-1]
+
+
+def solve_batched(
+    op,
+    b: jax.Array,
+    x0: jax.Array | None = None,
+    *,
+    action: str,
+    key: jax.Array,
+    num_iters: int,
+    tol,
+    record_every: int = 0,
+    beta: float = 1.0,
+    block: int = 1,
+    fused: bool = False,
+    chunk_fn=None,
+    on_record=None,
+) -> BatchedSolveResult:
+    """Sequential solve over the multi-RHS axis with HETEROGENEOUS
+    per-column tolerances and per-column round counts.
+
+    ``tol`` is an absolute residual target — a scalar or a ``(k,)`` array,
+    one entry per RHS column (the serving layer batches independent
+    tenants' requests onto the columns, each with its own tolerance).
+    The solve runs record chunk by record chunk (``record_every``
+    iterations per chunk, validated by ``resolve_record_every``) and exits
+    early once EVERY column has met its tolerance; a column's ``rounds``
+    entry is the number of chunks it needed.  Columns are independent
+    under both actions (the update ``gamma`` is computed per column), so
+    each column's trajectory is bitwise the trajectory it would have had
+    in any other batch with the same key — the property that makes
+    cross-tenant batching safe.
+
+    ``on_record(chunk_idx, x, resid, converged) -> bool`` is invoked at
+    every record point (serving uses it to stream partial iterates and to
+    enforce per-request deadlines); returning False stops the solve after
+    that chunk.  ``chunk_fn`` overrides the chunk executor (the serving
+    layer passes its cached executable); the default builds
+    ``sequential_chunk`` with this call's statics.
+    """
+    if num_iters <= 0:
+        raise ValueError(f"num_iters must be > 0 (got {num_iters})")
+    rec = resolve_record_every(num_iters, record_every)
+    chunks = num_iters // rec
+    k = b.shape[1]
+    if x0 is None:
+        n_x = op.shape[0] if action == "gs" else op.shape[1]
+        x0 = jnp.zeros((n_x, k), b.dtype)
+    tol_np = np.broadcast_to(np.asarray(tol, np.float32), (k,))
+    picks = draw_picks(op, action, key, num_iters, block=block)
+    if chunk_fn is None:
+        chunk_fn = functools.partial(sequential_chunk, action=action,
+                                     beta=beta, block=block, fused=fused)
+    x, resid = x0, None
+    rounds = np.zeros((k,), np.int32)
+    conv = np.zeros((k,), bool)
+    ran = 0
+    for c in range(chunks):
+        x, resid = chunk_fn(op, b, x, picks[c * rec:(c + 1) * rec])
+        ran = c + 1
+        newly = ~conv & (np.asarray(resid) <= tol_np)
+        rounds[newly] = ran
+        conv |= newly
+        go = on_record is None or bool(on_record(c, x, resid, conv.copy()))
+        if conv.all() or not go:
+            break
+    rounds = np.where(conv, rounds, ran).astype(np.int32)
+    return BatchedSolveResult(
+        x=x, resid=resid, rounds=jnp.asarray(rounds),
+        converged=jnp.asarray(conv), iters_run=ran * rec)
+
+
+# ---------------------------------------------------------------------------
 # Unified entry point: solve(problem, format=..., schedule=...)
 # ---------------------------------------------------------------------------
 
@@ -2108,13 +2259,23 @@ def solve(
     """
     if action is None:
         action = "rk" if hasattr(problem, "sigma_min") else "gs"
+    # Validate the EFFECTIVE configuration, once: the ``fused`` keyword
+    # override is folded into the schedule BEFORE ``validate()``, so an
+    # invalid effective combination (e.g. ``fused=True`` forced onto the
+    # bounded-delay simulator) fails here with a schedule-level error
+    # instead of surviving to a late warning path.
+    schedule = schedule if fused is None else schedule._replace(fused=fused)
     schedule.validate()
-    use_fused = schedule.fused if fused is None else fused
+    use_fused = schedule.fused
     op = as_operator(problem.A, format, block=block, bands=bands, width=width,
                      rows_per_panel=rows_per_panel,
                      storage_dtype=storage_dtype)
     if x0 is None:
-        x0 = jnp.zeros_like(problem.x_star)
+        # Shape/dtype from b and the operator, NOT from x_star: real
+        # workloads carry x_star=None (nobody knows the solution), and
+        # the RK iterate lives in column space while b lives in row space.
+        n_x = op.shape[0] if action == "gs" else op.shape[1]
+        x0 = jnp.zeros((n_x, problem.b.shape[1]), problem.b.dtype)
 
     if schedule.distributed:
         if mesh is None:
@@ -2129,12 +2290,6 @@ def solve(
     if schedule.tau > 0:
         if delay_key is None:
             raise ValueError("the bounded-delay simulator needs a delay_key")
-        if use_fused:
-            warnings.warn(
-                "fused=True: the bounded-delay simulator has no fused "
-                "sweep path (its ring-buffer stale reads are inherently "
-                "per-step); running the scan simulator", UserWarning,
-                stacklevel=2)
         return solve_async_sim(
             op, problem.b, x0, problem.x_star, action=action, key=key,
             delay_key=delay_key, num_iters=schedule.num_iters,
@@ -2148,6 +2303,7 @@ def solve(
 
 
 __all__ = [
+    "BatchedSolveResult",
     "BlockBandedOp",
     "CsrOp",
     "DenseOp",
@@ -2156,11 +2312,15 @@ __all__ = [
     "Schedule",
     "SolveResult",
     "as_operator",
+    "draw_picks",
     "record_metrics",
+    "resolve_record_every",
     "sample_rows",
     "scheduled_tau",
+    "sequential_chunk",
     "solve",
     "solve_async_sim",
+    "solve_batched",
     "solve_distributed",
     "solve_sequential",
 ]

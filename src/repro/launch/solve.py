@@ -27,6 +27,10 @@ from repro.launch.mesh import make_host_mesh
 #: --sync choices are derived from the dispatch table narrowed to these
 _CLI_FORMATS = ("DenseOp", "EllOp", "CsrOp")
 
+#: the --format flag values, shared with the serve launcher so the two
+#: CLIs' choices cannot drift
+FORMAT_CHOICES = ("dense", "ell", "csr")
+
 
 def main(argv=None):
     ap = argparse.ArgumentParser()
@@ -35,7 +39,7 @@ def main(argv=None):
     ap.add_argument("--row-nnz", type=int, default=16)
     ap.add_argument("--offdiag", type=float, default=0.9)
     ap.add_argument("--sweeps", type=int, default=10)
-    ap.add_argument("--format", choices=("dense", "ell", "csr"),
+    ap.add_argument("--format", choices=FORMAT_CHOICES,
                     default="dense",
                     help="operator format (sequential AND distributed)")
     ap.add_argument("--ell-width", type=int, default=64)

@@ -1,0 +1,38 @@
+"""Solver-as-a-service: the persistent serving layer over ``core.engine``
+(DESIGN.md §8).
+
+``SolverService`` wraps the engine's chunked batched entry
+(``solve_batched``) behind a thread-safe request queue: concurrent
+tenants' RHS columns are batched onto the engine's multi-RHS axis, padded
+to shape buckets so the warm ``ExecutorCache`` reuses compiled chunk
+executables, solved with heterogeneous per-column tolerances, and
+un-padded on exit — with per-request deadlines, early exit at record
+points, and streamed partial iterates.
+"""
+from repro.serve.bucketing import (
+    RHS_BUCKETS, bucket_rhs, pad_columns, unpad_columns)
+from repro.serve.executor import ExecKey, ExecutorCache
+from repro.serve.loadgen import LoadReport, open_loop_load, percentile
+from repro.serve.queue import (
+    Partial, Request, RequestQueue, RequestResult, Ticket)
+from repro.serve.service import RegisteredProblem, ServiceStats, SolverService
+
+__all__ = [
+    "ExecKey",
+    "ExecutorCache",
+    "LoadReport",
+    "Partial",
+    "RHS_BUCKETS",
+    "RegisteredProblem",
+    "Request",
+    "RequestQueue",
+    "RequestResult",
+    "ServiceStats",
+    "SolverService",
+    "Ticket",
+    "bucket_rhs",
+    "open_loop_load",
+    "pad_columns",
+    "percentile",
+    "unpad_columns",
+]

@@ -1,0 +1,50 @@
+"""Shape buckets for the serving layer (DESIGN.md §8).
+
+The engine's compiled executables are shape-specialized: a solve over a
+``(n, k)`` RHS block compiles once per distinct ``k``.  A service that
+launched one executable per observed request-batch width would recompile
+constantly under mixed traffic, so batches are padded up to a small set of
+RHS-width buckets — the compiled-executable cache is keyed by the bucket,
+not the raw width, and the padding is stripped again on exit.
+
+Zero-padding the RHS axis is EXACT for both engine actions: columns are
+independent (every update's ``gamma`` is computed per column), and a zero
+column solves ``A x = 0`` from ``x0 = 0`` — every update is exactly zero,
+so padded columns stay identically zero and never perturb real columns.
+A request's columns therefore take bitwise the trajectory they would have
+taken unpadded, which tests/test_serve.py pins.
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+#: RHS-width buckets: powers of two up to the default max batch.  Widths
+#: beyond the top bucket round up to a multiple of it.
+RHS_BUCKETS = (1, 2, 4, 8, 16, 32, 64)
+
+
+def bucket_rhs(k: int, buckets=RHS_BUCKETS) -> int:
+    """Smallest bucket >= ``k`` (beyond the top: next multiple of it)."""
+    if k <= 0:
+        raise ValueError(f"k must be > 0 (got {k})")
+    for cap in buckets:
+        if k <= cap:
+            return cap
+    top = buckets[-1]
+    return -(-k // top) * top
+
+
+def pad_columns(b, k_bucket: int):
+    """Zero-pad ``b``'s RHS axis ``(n, k) -> (n, k_bucket)``."""
+    n, k = b.shape
+    if k > k_bucket:
+        raise ValueError(f"cannot pad {k} columns into a {k_bucket} bucket")
+    if k == k_bucket:
+        return b
+    return jnp.concatenate(
+        [b, jnp.zeros((n, k_bucket - k), b.dtype)], axis=1)
+
+
+def unpad_columns(x, k: int):
+    """Strip bucket padding: the first ``k`` columns are the real ones."""
+    return x[:, :k]

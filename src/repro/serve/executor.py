@@ -1,0 +1,61 @@
+"""The warm compiled-executable cache of the serving layer (DESIGN.md §8).
+
+An executor is the callable the service launches once per record point:
+``chunk_fn(op, b, x, picks) -> (x_next, resid)`` — the engine's
+``sequential_chunk`` with the batch's statics bound.  Two batches with the
+same ``ExecKey`` reuse the same executor object, and therefore the same
+underlying jit executable: the key carries exactly the attributes that
+feed a static argument or an array shape, nothing else.
+
+The cache is a service-level object (not jax's internal jit cache) so the
+service can *count* — the hit/miss counters are how tests prove that N
+concurrent tenants produced one compiled batch pipeline, and how the
+benchmark separates warmup cost from steady-state latency.
+"""
+from __future__ import annotations
+
+import threading
+from typing import NamedTuple
+
+
+class ExecKey(NamedTuple):
+    """Everything that selects a distinct compiled chunk executable."""
+
+    format: str              # operator class name ("CsrOp", "DenseOp", ...)
+    action: str              # "gs" | "rk"
+    shape: tuple             # operator (rows, cols) — the padded shape bucket
+    k_bucket: int            # padded RHS width (bucketing.bucket_rhs)
+    storage_dtype: str | None
+    compress: str            # wire codec ("none" for the sequential service)
+    record_every: int        # chunk length (static in the chunk executable)
+    fused: bool
+
+
+class ExecutorCache:
+    """Thread-safe ``ExecKey -> chunk_fn`` cache with hit/miss counters."""
+
+    def __init__(self):
+        self._lock = threading.Lock()
+        self._fns: dict[ExecKey, object] = {}
+        self.hits = 0
+        self.misses = 0
+
+    def get(self, key: ExecKey, builder):
+        """The cached executor for ``key``, building it on first use."""
+        with self._lock:
+            fn = self._fns.get(key)
+            if fn is None:
+                self.misses += 1
+                fn = self._fns[key] = builder()
+            else:
+                self.hits += 1
+            return fn
+
+    def __len__(self) -> int:
+        with self._lock:
+            return len(self._fns)
+
+    def stats(self) -> dict:
+        with self._lock:
+            return {"hits": self.hits, "misses": self.misses,
+                    "entries": len(self._fns)}

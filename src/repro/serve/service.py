@@ -1,0 +1,296 @@
+"""The persistent solver service (DESIGN.md §8): continuous batching of
+concurrent tenants' RHS columns onto the engine's multi-RHS axis.
+
+The paper's premise is throughput under concurrency — processors make
+progress without waiting on each other.  The serving layer applies the
+same idea one level up: independent in-flight *requests* share the
+iterate machinery the way independent workers share the iterate.  Columns
+of a batched solve are independent under both engine actions, so packing
+N tenants' RHS columns into one ``(n, k)`` block and running ONE chunked
+solve gives every tenant bitwise the trajectory of a solo solve — at one
+launch's cost per record point instead of N.
+
+Mechanics per batch: drain the queue (admission window ``batch_window_s``),
+group by registered problem, concatenate columns, pad to the RHS bucket
+(``serve.bucketing``), fetch the warm chunk executable from the
+``ExecutorCache``, and drive ``core.engine.solve_batched`` with
+heterogeneous per-column tolerances.  At every record point the service
+streams partial iterates to in-flight tickets, completes tenants whose
+columns converged (their round count is theirs alone — a loose-tolerance
+tenant exits early while the batch keeps iterating for the others), and
+enforces per-request deadlines (a past-deadline tenant gets its partial
+iterate, marked unconverged).  Joins happen at batch boundaries, leaves
+at record points, so the tail latency a tenant pays for batching is
+bounded by ``record_every`` iterations plus the admission window.
+"""
+from __future__ import annotations
+
+import functools
+import threading
+import time
+from dataclasses import dataclass, field
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.engine import (
+    draw_picks, resolve_record_every, sequential_chunk, solve_batched)
+from repro.core.operators import as_operator
+from repro.serve.bucketing import bucket_rhs, pad_columns, unpad_columns
+from repro.serve.executor import ExecKey, ExecutorCache
+from repro.serve.queue import (
+    Partial, Request, RequestQueue, RequestResult, Ticket)
+
+
+@dataclass
+class RegisteredProblem:
+    """A named operator tenants can submit RHS against."""
+
+    name: str
+    op: object
+    action: str
+    format: str
+    storage_dtype: str | None
+    key: jax.Array        # pick-stream key, fixed per problem (deterministic)
+    beta: float
+    num_iters: int
+    record_every: int
+
+
+@dataclass
+class ServiceStats:
+    requests: int = 0
+    batches: int = 0
+    chunk_launches: int = 0
+    deadline_expired: int = 0
+    #: per-batch RHS widths (real columns, before bucket padding)
+    batch_widths: list = field(default_factory=list)
+
+
+class SolverService:
+    """A persistent solver wrapping ``solve_batched`` behind a queue.
+
+    Use as a context manager (``with SolverService(...) as svc``) or call
+    ``start()`` / ``stop()`` explicitly.  ``max_batch`` caps how many
+    requests one batch admits; ``batch_window_s`` is how long the loop
+    lingers after the first arrival so concurrent tenants share a launch.
+    """
+
+    def __init__(self, *, num_iters: int = 4096, record_every: int = 64,
+                 max_batch: int = 32, batch_window_s: float = 0.002,
+                 fused: bool = False, cache: ExecutorCache | None = None):
+        resolve_record_every(num_iters, record_every)  # fail fast, once
+        self.num_iters = num_iters
+        self.record_every = record_every
+        self.max_batch = max_batch
+        self.batch_window_s = batch_window_s
+        self.fused = fused
+        self.executors = cache if cache is not None else ExecutorCache()
+        self.stats = ServiceStats()
+        self._queue = RequestQueue()
+        self._problems: dict[str, RegisteredProblem] = {}
+        self._stop = threading.Event()
+        self._thread: threading.Thread | None = None
+
+    # -- registration -------------------------------------------------------
+
+    def register(self, name: str, A, *, action: str = "gs",
+                 format: str = "dense", storage_dtype=None, seed: int = 0,
+                 beta: float = 1.0, num_iters: int | None = None,
+                 record_every: int | None = None, warmup_buckets=(),
+                 **op_kwargs) -> RegisteredProblem:
+        """Register operator ``A`` under ``name`` (built once, kept warm).
+
+        The pick-stream key derives from ``seed`` alone, so every batch
+        against this problem replays the same direction stream — a
+        tenant's result is a pure function of its RHS and tolerance,
+        independent of which batch it landed in.  ``warmup_buckets``
+        pre-compiles the chunk executable for the given RHS buckets.
+        """
+        num_iters = self.num_iters if num_iters is None else num_iters
+        record_every = (self.record_every if record_every is None
+                        else record_every)
+        resolve_record_every(num_iters, record_every)
+        op = as_operator(A, format, storage_dtype=storage_dtype, **op_kwargs)
+        reg = RegisteredProblem(
+            name=name, op=op, action=action, format=format,
+            storage_dtype=storage_dtype, key=jax.random.key(seed), beta=beta,
+            num_iters=num_iters, record_every=record_every)
+        self._problems[name] = reg
+        for kb in warmup_buckets:
+            chunk_fn = self._executor(reg, bucket_rhs(kb))
+            n_b = op.shape[0]
+            zeros_b = jnp.zeros((n_b, bucket_rhs(kb)), jnp.float32)
+            n_x = op.shape[0] if action == "gs" else op.shape[1]
+            picks = jnp.zeros((reg.record_every,), jnp.int32)
+            jax.block_until_ready(chunk_fn(
+                op, zeros_b, jnp.zeros((n_x, bucket_rhs(kb)), jnp.float32),
+                picks))
+        if warmup_buckets:
+            # The full pick stream is drawn once per batch; its sampler
+            # compiles per (num_iters, format) — pull that compile out of
+            # the first batch's measured latency too.
+            jax.block_until_ready(
+                draw_picks(op, action, reg.key, reg.num_iters))
+        return reg
+
+    # -- submission ---------------------------------------------------------
+
+    def submit(self, name: str, b, *, tol=None, rtol: float | None = None,
+               deadline_s: float | None = None,
+               on_progress=None) -> Ticket:
+        """Enqueue RHS ``b`` (``(n,)`` or ``(n, c)``) against ``name``.
+
+        ``tol`` is an absolute per-column residual target (scalar or
+        ``(c,)``); ``rtol`` instead scales each column's ``||b||_2``
+        (default ``rtol=1e-3`` when neither is given).  ``deadline_s`` is
+        a relative wall-clock budget: a request past its deadline is
+        completed with its current partial iterate, ``converged=False``.
+        """
+        reg = self._problems[name]
+        b = jnp.asarray(b)
+        if b.ndim == 1:
+            b = b[:, None]
+        if b.shape[0] != reg.op.shape[0]:
+            raise ValueError(
+                f"RHS has {b.shape[0]} rows; problem {name!r} expects "
+                f"{reg.op.shape[0]}")
+        if tol is None:
+            rtol = 1e-3 if rtol is None else rtol
+            tol = rtol * np.linalg.norm(np.asarray(b), axis=0)
+        tol = np.broadcast_to(
+            np.asarray(tol, np.float32), (b.shape[1],)).copy()
+        deadline = (None if deadline_s is None
+                    else time.monotonic() + deadline_s)
+        req = Request(problem=name, b=b, tol=tol, deadline=deadline,
+                      on_progress=on_progress)
+        return self._queue.submit(req)
+
+    # -- lifecycle ----------------------------------------------------------
+
+    def start(self) -> "SolverService":
+        if self._thread is not None:
+            raise RuntimeError("service already started")
+        self._stop.clear()
+        self._thread = threading.Thread(
+            target=self._loop, name="solver-service", daemon=True)
+        self._thread.start()
+        return self
+
+    def stop(self) -> None:
+        self._stop.set()
+        if self._thread is not None:
+            self._thread.join()
+            self._thread = None
+
+    def __enter__(self) -> "SolverService":
+        return self.start()
+
+    def __exit__(self, *exc) -> None:
+        self.stop()
+
+    def _loop(self) -> None:
+        while not self._stop.is_set():
+            batch = self._queue.drain(self.max_batch, wait_s=0.05,
+                                      window_s=self.batch_window_s)
+            if not batch:
+                continue
+            by_problem: dict[str, list] = {}
+            for pair in batch:
+                by_problem.setdefault(pair[0].problem, []).append(pair)
+            for name, items in by_problem.items():
+                self._execute(self._problems[name], items)
+
+    # -- batch execution ----------------------------------------------------
+
+    def _executor(self, reg: RegisteredProblem, k_bucket: int):
+        exec_key = ExecKey(
+            format=type(reg.op).__name__, action=reg.action,
+            shape=tuple(reg.op.shape), k_bucket=k_bucket,
+            storage_dtype=reg.storage_dtype, compress="none",
+            record_every=reg.record_every, fused=self.fused)
+        return self.executors.get(exec_key, lambda: functools.partial(
+            sequential_chunk, action=reg.action, beta=reg.beta, block=1,
+            fused=self.fused))
+
+    def _execute(self, reg: RegisteredProblem, items: list) -> None:
+        """One continuous batch: concat -> pad -> chunked solve -> unpad."""
+        rec = reg.record_every
+        spans, cols, tols = [], [], []
+        start = 0
+        for req, _ in items:
+            c = req.b.shape[1]
+            spans.append(slice(start, start + c))
+            cols.append(req.b)
+            tols.append(req.tol)
+            start += c
+        k = start
+        kb = bucket_rhs(k)
+        B = pad_columns(jnp.concatenate(cols, axis=1).astype(jnp.float32), kb)
+        # Padded columns get +inf tolerance: their residual is exactly 0
+        # (zero column, zero iterate), so they never gate the early exit.
+        tol_full = np.full((kb,), np.inf, np.float32)
+        tol_full[:k] = np.concatenate(tols)
+        chunk_fn = self._executor(reg, kb)
+
+        active = [True] * len(items)
+        first_chunk = np.zeros((kb,), np.int32)
+
+        def finish(i, x_np, resid_np, conv_cols, chunks_done):
+            req, ticket = items[i]
+            s = spans[i]
+            rounds = np.where(first_chunk[s] > 0, first_chunk[s],
+                              chunks_done).astype(np.int32)
+            # Un-pad on exit: a request's columns live inside the real
+            # [0, k) region of the bucket, so its span slice IS the unpad.
+            ticket.complete(RequestResult(
+                x=unpad_columns(x_np, k)[:, s],
+                resid=resid_np[s].copy(), rounds=rounds,
+                converged=conv_cols.copy(), iters_run=chunks_done * rec,
+                latency_s=time.monotonic() - req.submitted))
+            active[i] = False
+
+        def on_record(ci, x, resid, conv):
+            self.stats.chunk_launches += 1
+            newly = conv & (first_chunk == 0)
+            first_chunk[newly] = ci + 1
+            now = time.monotonic()
+            x_np = resid_np = None
+            for i, (req, ticket) in enumerate(items):
+                if not active[i]:
+                    continue
+                if x_np is None:
+                    x_np, resid_np = np.asarray(x), np.asarray(resid)
+                s = spans[i]
+                conv_cols = conv[s]
+                expired = req.deadline is not None and now >= req.deadline
+                if conv_cols.all() or expired:
+                    if expired and not conv_cols.all():
+                        self.stats.deadline_expired += 1
+                    finish(i, x_np, resid_np, conv_cols, ci + 1)
+                else:
+                    ticket.push_partial(Partial(
+                        iters=(ci + 1) * rec, x=x_np[:, s].copy(),
+                        resid=resid_np[s].copy()))
+            return any(active)
+
+        res = solve_batched(
+            reg.op, B, action=reg.action, key=reg.key,
+            num_iters=reg.num_iters, record_every=rec, tol=tol_full,
+            beta=reg.beta, fused=self.fused, chunk_fn=chunk_fn,
+            on_record=on_record)
+
+        # Anyone still active hit the iteration cap: complete with finals.
+        if any(active):
+            x_np = np.asarray(res.x)
+            resid_np = np.asarray(res.resid)
+            conv_np = np.asarray(res.converged)
+            chunks_done = res.iters_run // rec
+            for i in range(len(items)):
+                if active[i]:
+                    finish(i, x_np, resid_np, conv_np[spans[i]], chunks_done)
+
+        self.stats.requests += len(items)
+        self.stats.batches += 1
+        self.stats.batch_widths.append(k)

@@ -1,0 +1,280 @@
+"""Serving-layer tests (ISSUE 9): the x_star=None front-door sweep, the
+effective-configuration validation, the single-sourced record_every check,
+and the continuous-batching service — concurrent tenants share one batched
+launch (executor-cache counters prove it), bucket padding round-trips
+bitwise against an unpadded solo solve, per-request tolerances exit early
+inside a shared batch, and deadlines complete with partial iterates."""
+import threading
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import Schedule, random_sparse_lsq, random_sparse_spd, solve
+from repro.core.engine import resolve_record_every, solve_batched
+from repro.core.operators import as_operator
+from repro.launch.mesh import make_host_mesh
+from repro.serve import (
+    ExecutorCache, SolverService, bucket_rhs, open_loop_load, pad_columns)
+
+
+@pytest.fixture(scope="module")
+def prob():
+    return random_sparse_spd(64, row_nnz=6, n_rhs=2, seed=0)
+
+
+# -- satellite: x_star=None through every solve() path ----------------------
+
+def _assert_blind_result(res, prob):
+    """x_star=None: err is NaN (unknowable), resid is finite and real."""
+    assert bool(jnp.isnan(res.err_sq).all())
+    resid = np.asarray(res.resid)
+    assert np.isfinite(resid).all()
+    # the iterate genuinely converges toward A x = b, not just "no crash"
+    final = np.linalg.norm(
+        np.asarray(prob.b - prob.A @ res.x), axis=0)
+    b_norm = np.linalg.norm(np.asarray(prob.b), axis=0)
+    assert (final < 0.2 * b_norm).all()
+
+
+def test_x_star_none_sequential(prob):
+    blind = prob._replace(x_star=None)
+    res = solve(blind, key=jax.random.key(0),
+                schedule=Schedule(num_iters=2048, record_every=256))
+    _assert_blind_result(res, prob)
+
+
+def test_x_star_none_async_sim(prob):
+    blind = prob._replace(x_star=None)
+    res = solve(blind, key=jax.random.key(0),
+                delay_key=jax.random.key(1),
+                schedule=Schedule(num_iters=2048, tau=4, record_every=256))
+    _assert_blind_result(res, prob)
+
+
+def test_x_star_none_distributed(prob):
+    blind = prob._replace(x_star=None)
+    res = solve(blind, key=jax.random.key(0), format="csr",
+                mesh=make_host_mesh(1),
+                schedule=Schedule(rounds=8, local_steps=128))
+    _assert_blind_result(res, prob)
+
+
+def test_x_star_none_rk_path():
+    lsq = random_sparse_lsq(96, 48, row_nnz=6, n_rhs=1, seed=1)
+    res = solve(lsq._replace(x_star=None), key=jax.random.key(0),
+                schedule=Schedule(num_iters=4096, record_every=512))
+    assert bool(jnp.isnan(res.err_sq).all())
+    assert np.isfinite(np.asarray(res.resid)).all()
+    # RK iterate lives in column space — the x0 derivation must use
+    # op.shape[1], not b's row count
+    assert res.x.shape == (48, 1)
+
+
+# -- satellite: effective-config validation + single-sourced record check ---
+
+def test_fused_override_validated_before_dispatch(prob):
+    """``fused=True`` forced onto the bounded-delay simulator must fail
+    ``Schedule.validate()`` (an effective-config error), not reach a late
+    warning-and-fallback path."""
+    with pytest.raises(ValueError, match="bounded-delay simulator"):
+        solve(prob, key=jax.random.key(0), delay_key=jax.random.key(1),
+              schedule=Schedule(num_iters=64, tau=4), fused=True)
+    with pytest.raises(ValueError, match="bounded-delay simulator"):
+        Schedule(num_iters=64, tau=4, fused=True).validate()
+    # the keyword can also DISABLE fused on a fused schedule: valid
+    sched = Schedule(num_iters=64, tau=4, fused=True)
+    res = solve(prob, key=jax.random.key(0), delay_key=jax.random.key(1),
+                schedule=sched, fused=False)
+    assert np.isfinite(np.asarray(res.resid)).all()
+
+
+def test_record_every_single_source(prob):
+    assert resolve_record_every(128, 32) == 32
+    assert resolve_record_every(128, 0) == 128     # 0 = record once, at end
+    with pytest.raises(ValueError, match=r"100.*must be divisible.*32"):
+        resolve_record_every(100, 32)
+    # the batched entry and the service both route through the same check
+    op = as_operator(prob.A, "dense")
+    with pytest.raises(ValueError, match=r"100.*must be divisible.*32"):
+        solve_batched(op, prob.b, action="gs", key=jax.random.key(0),
+                      num_iters=100, record_every=32, tol=0.0)
+    with pytest.raises(ValueError, match=r"100.*must be divisible.*32"):
+        SolverService(num_iters=100, record_every=32)
+
+
+# -- tentpole: the continuous-batching service ------------------------------
+
+def _service(prob, **kw):
+    kw.setdefault("num_iters", 2048)
+    kw.setdefault("record_every", 64)
+    svc = SolverService(cache=ExecutorCache(), **kw)
+    svc.register("spd", prob.A, action="gs", format="csr", seed=0)
+    return svc
+
+
+def test_concurrent_tenants_share_one_batched_launch(prob):
+    """Three tenants submitting concurrently land in ONE batch: one entry
+    in the executor cache (miss=1), one batched solve, and each tenant
+    gets back exactly its own columns."""
+    svc = _service(prob)
+    rng = np.random.default_rng(3)
+    widths = (1, 2, 3)
+    blocks = [rng.standard_normal((64, w)).astype(np.float32)
+              for w in widths]
+    tickets = [None] * len(blocks)
+    barrier = threading.Barrier(len(blocks))
+
+    def tenant(i):
+        barrier.wait()
+        tickets[i] = svc.submit("spd", blocks[i], rtol=1e-3)
+
+    threads = [threading.Thread(target=tenant, args=(i,))
+               for i in range(len(blocks))]
+    for t in threads:
+        t.start()
+    for t in threads:
+        t.join()
+    # all three queued before the loop starts: one drain -> one batch
+    with svc:
+        results = [t.result(timeout=120) for t in tickets]
+
+    assert svc.stats.batches == 1
+    assert svc.stats.batch_widths == [sum(widths)]    # 6 -> bucket 8
+    assert svc.executors.stats() == {"hits": 0, "misses": 1, "entries": 1}
+    for w, blk, r in zip(widths, blocks, results):
+        assert r.x.shape == (64, w)
+        assert np.asarray(r.converged).all()
+        assert (np.asarray(r.resid)
+                <= 1e-3 * np.linalg.norm(blk, axis=0)).all()
+
+    # a later same-bucket batch REUSES the executor: hit, no new entry
+    with svc:
+        t2 = svc.submit("spd", rng.standard_normal((64, 6)), rtol=1e-3)
+        assert np.asarray(t2.result(timeout=120).converged).all()
+    assert svc.executors.stats() == {"hits": 1, "misses": 1, "entries": 1}
+
+
+def test_bucket_padding_bitwise_vs_unpadded_solo(prob):
+    """A width-3 request rides in a width-4 bucket; its columns must take
+    bitwise the trajectory of an unpadded solo ``solve_batched`` (zero
+    padding is exact: padded columns stay identically zero)."""
+    b = np.random.default_rng(5).standard_normal((64, 3)).astype(np.float32)
+    tol = (1e-3 * np.linalg.norm(b, axis=0)).astype(np.float32)
+
+    svc = _service(prob)
+    with svc:
+        served = svc.submit("spd", b, tol=tol).result(timeout=120)
+    assert svc.stats.batch_widths == [3]
+    assert bucket_rhs(3) == 4                 # it really was padded
+
+    op = as_operator(prob.A, "csr")
+    solo = solve_batched(op, jnp.asarray(b), action="gs",
+                         key=jax.random.key(0), num_iters=2048,
+                         record_every=64, tol=tol)
+    assert bool(jnp.array_equal(served.x, solo.x))
+    assert bool(jnp.array_equal(served.resid, solo.resid))
+    assert np.array_equal(np.asarray(served.rounds),
+                          np.asarray(solo.rounds))
+    # and the pad itself is inert: a padded run's real columns match too
+    padded = solve_batched(op, pad_columns(jnp.asarray(b), 4), action="gs",
+                           key=jax.random.key(0), num_iters=2048,
+                           record_every=64,
+                           tol=np.concatenate([tol, [np.inf]]))
+    assert bool(jnp.array_equal(padded.x[:, :3], solo.x))
+
+
+def test_per_request_tolerance_early_exit(prob):
+    """A loose-tolerance tenant leaves its shared batch at an earlier
+    record point than a tight-tolerance tenant — each is judged by its own
+    tol, and each result satisfies it."""
+    rng = np.random.default_rng(7)
+    b1 = rng.standard_normal((64, 1)).astype(np.float32)
+    b2 = rng.standard_normal((64, 1)).astype(np.float32)
+    svc = _service(prob)
+    t_loose = svc.submit("spd", b1, rtol=0.3)
+    t_tight = svc.submit("spd", b2, rtol=1e-5)
+    with svc:
+        loose = t_loose.result(timeout=120)
+        tight = t_tight.result(timeout=120)
+    assert svc.stats.batches == 1             # they DID share a batch
+    assert np.asarray(loose.converged).all()
+    assert np.asarray(tight.converged).all()
+    assert int(loose.rounds.max()) < int(tight.rounds.max())
+    assert float(loose.resid[0]) <= 0.3 * np.linalg.norm(b1)
+    assert float(tight.resid[0]) <= 1e-5 * np.linalg.norm(b2)
+    # the early leaver stopped receiving partials once it completed
+    assert len(t_loose.partials) < len(t_tight.partials)
+
+
+def test_deadline_completes_with_partial_iterate(prob):
+    """A request past its deadline is completed at the next record point
+    with its current partial iterate, marked unconverged."""
+    b = np.random.default_rng(9).standard_normal((64, 1)).astype(np.float32)
+    svc = _service(prob)
+    with svc:
+        # rtol far below the f32 floor: can never converge; deadline in the
+        # past: expires at the FIRST record point
+        ticket = svc.submit("spd", b, rtol=1e-12, deadline_s=0.0)
+        res = ticket.result(timeout=120)
+    assert not np.asarray(res.converged).any()
+    assert res.iters_run == 64                # one record chunk, then out
+    assert np.isfinite(np.asarray(res.resid)).all()
+    assert svc.stats.deadline_expired == 1
+
+
+def test_streamed_partials_and_progress_callback(prob):
+    """Partials stream at every record point the request is in flight at,
+    monotone in iteration count, through both the ticket and the
+    ``on_progress`` callback."""
+    b = np.random.default_rng(11).standard_normal((64, 2)).astype(np.float32)
+    seen = []
+    svc = _service(prob)
+    with svc:
+        ticket = svc.submit("spd", b, rtol=1e-4, on_progress=seen.append)
+        res = ticket.result(timeout=120)
+    assert np.asarray(res.converged).all()
+    assert ticket.partials == seen
+    iters = [p.iters for p in ticket.partials]
+    assert iters == sorted(set(iters))
+    for p in ticket.partials:
+        assert p.x.shape == (64, 2)           # bucket padding stripped
+        assert p.resid.shape == (2,)
+    # partials precede the exit round; the final result is not a partial
+    assert all(p.iters < res.iters_run for p in ticket.partials)
+
+
+def test_open_loop_load_converges(prob):
+    """The load generator end to end: mixed widths, all requests converge,
+    latency/throughput stats populated (the CI serve-smoke entry point)."""
+    svc = _service(prob, batch_window_s=0.005)
+    with svc:
+        report = open_loop_load(svc, "spd", requests=8, rate_hz=400.0,
+                                rhs_widths=(1, 2, 4), rtol=1e-3, seed=0)
+    assert report.converged == report.requests == 8
+    assert svc.stats.requests == 8
+    assert report.qps > 0 and np.isfinite(report.p50_ms)
+    assert report.p50_ms <= report.p99_ms
+    assert len(report.latencies_ms) == 8
+    # batching happened: fewer batches than requests
+    assert svc.stats.batches < 8
+
+
+def test_submit_validates_shape_and_service_restarts(prob):
+    svc = _service(prob)
+    with pytest.raises(ValueError, match="expects"):
+        svc.submit("spd", np.zeros((32, 1), np.float32))
+    with pytest.raises(KeyError):
+        svc.submit("nope", np.zeros((64, 1), np.float32))
+    # start/stop twice: the loop thread is restartable
+    for _ in range(2):
+        with svc:
+            t = svc.submit("spd", np.ones((64,), np.float32), rtol=1e-2)
+            assert np.asarray(t.result(timeout=120).converged).all()
+        time.sleep(0.01)
+    with pytest.raises(RuntimeError, match="already started"):
+        svc.start()
+        svc.start()
+    svc.stop()

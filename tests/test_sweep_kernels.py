@@ -84,7 +84,10 @@ def test_fused_fallback_warns_and_matches():
 
 def test_fused_front_door():
     """Schedule(fused=True) through solve() reaches the sweep path (csr,
-    bitwise GS) and the simulator warns + ignores it."""
+    bitwise GS); on the bounded-delay simulator it is rejected at
+    ``Schedule.validate()`` (effective-config validation, ISSUE 9) — the
+    old warn-and-ignore fallback silently ran a different execution mode
+    than the schedule asked for."""
     prob = random_sparse_spd(64, row_nnz=6, n_rhs=2, seed=4)
     kw = dict(key=jax.random.key(2), format="csr")
     r0 = solve(prob, schedule=Schedule(num_iters=32, record_every=16), **kw)
@@ -95,7 +98,7 @@ def test_fused_front_door():
     r2 = solve(prob, schedule=Schedule(num_iters=32, record_every=16),
                fused=True, **kw)
     np.testing.assert_array_equal(np.asarray(r0.x), np.asarray(r2.x))
-    with pytest.warns(UserWarning, match="no fused"):
+    with pytest.raises(ValueError, match="bounded-delay simulator"):
         solve(prob, delay_key=jax.random.key(3),
               schedule=Schedule(num_iters=16, tau=4, fused=True), **kw)
 

@@ -38,10 +38,15 @@ from repro.core import (BlockBandedOp, CsrOp, EllOp, block_banded_spd,
                         random_sparse_spd)
 from repro.core.engine import solve_sequential
 from repro.kernels import ops, ref
+# The roofline terms come from repro.roofline — the same hardware model
+# solver_roofline.py's dry-run analysis reads — so the two reports cannot
+# drift apart.  The peaks are the TPU-v5e model; on CPU interpret mode the
+# fractions are honest near-zeros and the provenance stamp says why.
+from repro.roofline import HBM_BW, PEAK_FLOPS
 
 
 def run(n: int = 1024, block: int = 128, bands: int = 1, k: int = 64,
-        repeats: int = 3, storage_dtype=None):
+        repeats: int = 3, storage_dtype=None, tuned: bool = False):
     prob = block_banded_spd(n, block=block, bands=bands, n_rhs=k, seed=0)
     bop = BlockBandedOp.from_dense(prob.A, block=block, bands=bands,
                                    storage_dtype=storage_dtype)
@@ -104,32 +109,46 @@ def run(n: int = 1024, block: int = 128, bands: int = 1, k: int = 64,
     skip_bytes = (skip_slots * (pv + pi) + skip_slots * k * 4 + pn.size * 4)
     skip_flops = 2 * pop.nnz_cost() * k
 
-    # Every layout row: modeled AI, min-of-N wall time, AND a check value
+    # Every layout row: modeled AI, min-of-N wall time, a check value
     # against the dense oracle (uniform — a fast-but-wrong kernel fails
-    # loudly here and in the CI smoke job).
+    # loudly here and in the CI smoke job), AND the roofline view of the
+    # same byte/FLOP models: achieved GB/s on the modeled traffic plus the
+    # fraction of the roofline-predicted time actually achieved
+    # (max(bytes/HBM_BW, flops/PEAK_FLOPS) / wall — 1.0 means the kernel
+    # runs at the hardware model's limiting term).
     layouts = {}
-    for name, ai, want, fn in (
-        ("block_banded", bbmv_flops / bbmv_bytes, y_d,
+    for name, nbytes, flops, want, fn in (
+        ("block_banded", bbmv_bytes, bbmv_flops, y_d,
          lambda: bop.matvec(prob.x_star)),
-        ("ell_gather", ell_flops / ell_bytes, y_d,
+        ("ell_gather", ell_bytes, ell_flops, y_d,
          lambda: eop.matvec(prob.x_star)),
-        ("csr_segsum", csr_flops / csr_bytes, y_d,
+        ("csr_segsum", csr_bytes, csr_flops, y_d,
          lambda: cop.matvec_segsum(prob.x_star)),
-        ("csr_sliced", sliced_flops / sliced_bytes, y_d,
-         lambda: cop.matvec(prob.x_star)),
-        ("csr_segsum_patchy", patchy_flops / patchy_bytes, y_p,
+        ("csr_sliced", sliced_bytes, sliced_flops, y_d,
+         lambda: cop.matvec(prob.x_star, skip_empty=False)),
+        ("csr_segsum_patchy", patchy_bytes, patchy_flops, y_p,
          lambda: pop.matvec_segsum(x_p)),
-        ("csr_skip_empty", skip_flops / skip_bytes, y_p,
+        ("csr_skip_empty", skip_bytes, skip_flops, y_p,
          lambda: pop.matvec(x_p, skip_empty=True)),
     ):
+        ai = flops / nbytes
         check = float(jnp.abs(fn() - want).max())
         wall = timed(fn, iters=repeats, stat="min")
+        gbps = nbytes / wall / 1e9
+        t_roof = max(nbytes / HBM_BW, flops / PEAK_FLOPS)
+        frac = t_roof / wall
         emit("bench_kernels", layout=name, ai_flops_per_byte=f"{ai:.1f}",
-             wall_us=f"{wall*1e6:.0f}", check=f"{check:.2e}")
+             wall_us=f"{wall*1e6:.0f}", gbps=f"{gbps:.2f}",
+             roofline_frac=f"{frac:.4f}", check=f"{check:.2e}")
         layouts[name] = {"ai_flops_per_byte": ai, "wall_us": wall * 1e6,
+                         "model_bytes": int(nbytes), "model_flops": int(flops),
+                         "achieved_gbps": gbps, "roofline_frac": frac,
                          "check": check}
     layouts["csr_skip_empty"]["empty_panel_frac"] = empty_frac
     emit("bench_kernels", empty_panel_frac=f"{empty_frac:.2f}")
+    tuned_rows = (run_tuned(layouts, cop, pop, prob.x_star, x_p,
+                            repeats=repeats)
+                  if tuned else None)
 
     # fused block-GS sweep kernel vs oracle (dense layout)
     nb = bop.nb
@@ -144,7 +163,7 @@ def run(n: int = 1024, block: int = 128, bands: int = 1, k: int = 64,
                        iters=repeats, stat="min")
     emit("bench_kernels", check_block_gs=f"{check_block_gs:.2e}",
          sweep_wall_us=f"{sweep_wall*1e6:.0f}")
-    return {
+    payload = {
         "n": n, "block": block, "bands": bands, "k": k, "repeats": repeats,
         "storage_dtype": storage_dtype,
         "check_block_gs": check_block_gs,
@@ -152,6 +171,63 @@ def run(n: int = 1024, block: int = 128, bands: int = 1, k: int = 64,
         "sweeps": run_sweeps(repeats=repeats, n=min(n, 512)),
         "precision": run_precision(repeats=repeats, n=min(n, 512)),
     }
+    if tuned_rows is not None:
+        payload["tuned"] = tuned_rows
+    return payload
+
+
+#: layout row -> the variant family its operator's tuned dispatch chooses
+#: among (None = the entry point has a single pinned kernel, so the tuned
+#: path IS the default)
+_TUNED_FAMILIES = {
+    "csr_segsum": "csr_dense_panels",
+    "csr_sliced": "csr_dense_panels",
+    "csr_segsum_patchy": "csr_patchy",
+    "csr_skip_empty": "csr_patchy",
+    "block_banded": None,
+    "ell_gather": None,
+}
+
+
+def run_tuned(layouts, cop, pop, x_d, x_p, *, repeats: int = 3):
+    """The ``--tuned`` section: time the table-driven dispatch against the
+    best hardcoded default on every recorded layout row.
+
+    The tuned path is the operator's bare ``matvec`` — whatever variant
+    the active ``TUNE_<backend>.json`` picks for this shape bucket — and
+    ``best_default_us`` is the fastest forced-variant row of the same
+    operator (for single-variant rows the tuned path is trivially the
+    default).  ``ok`` grants a 1.25x noise slack: the tuned path launches
+    one of the measured variants, so equality up to timer noise is the
+    expected outcome and a miss means the table picked a loser."""
+    from repro.tune import runtime as tune_runtime
+    table = tune_runtime.active_table()
+    tuned_fns = {"csr_dense_panels": (cop, x_d), "csr_patchy": (pop, x_p)}
+    family_best = {
+        fam: min(layouts[r]["wall_us"] for r, f in _TUNED_FAMILIES.items()
+                 if f == fam)
+        for fam in tuned_fns}
+    out = {"table_loaded": table is not None,
+           "table_backend": getattr(table, "backend", None)}
+    for name, fam in _TUNED_FAMILIES.items():
+        if fam is None:
+            op_wall = layouts[name]["wall_us"]
+            row = {"tuned_us": op_wall, "best_default_us": op_wall,
+                   "variant": "single", "ok": True}
+        else:
+            op, x = tuned_fns[fam]
+            wall = timed(lambda: op.matvec(x), iters=repeats,
+                         stat="min") * 1e6
+            best = family_best[fam]
+            row = {"tuned_us": wall, "best_default_us": best,
+                   "variant": tune_runtime.matvec_variant(op) or "(auto)",
+                   "ok": wall <= best * 1.25}
+        out[name] = row
+        emit("bench_kernels_tuned", layout=name,
+             tuned_us=f"{row['tuned_us']:.0f}",
+             best_default_us=f"{row['best_default_us']:.0f}",
+             variant=row["variant"], ok=row["ok"])
+    return out
 
 
 def run_precision(n: int = 512, k: int = 8, row_nnz: int = 16,
@@ -291,9 +367,14 @@ def main(argv=None):
     ap.add_argument("--no-write", action="store_true",
                     help="print records without persisting BENCH_kernels"
                          ".json (the CI smoke job runs a tiny shape)")
+    ap.add_argument("--tuned", action="store_true",
+                    help="also time the tuning-table-driven dispatch "
+                         "(repro.tune) against the best hardcoded default "
+                         "on every layout row (the `tuned` section)")
     args = ap.parse_args(argv)
     payload = run(n=args.n, block=args.block, bands=args.bands, k=args.k,
-                  repeats=args.repeats, storage_dtype=args.storage_dtype)
+                  repeats=args.repeats, storage_dtype=args.storage_dtype,
+                  tuned=args.tuned)
     if not args.no_write:
         write_json("kernels", payload)
     return payload

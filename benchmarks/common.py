@@ -30,11 +30,27 @@ def _jsonable(obj):
     return obj
 
 
+def provenance() -> dict:
+    """Where a benchmark's numbers actually came from: jax version,
+    backend, device kind, and whether Pallas ran in interpret mode
+    (``repro.kernels.ops.interpret_default`` — the same predicate the
+    kernel wrappers use), so interpret-mode CPU timings can never
+    masquerade as hardware numbers when BENCH files are diffed."""
+    from repro.kernels.ops import interpret_default
+    return {"jax_version": jax.__version__,
+            "backend": jax.default_backend(),
+            "device_kind": jax.devices()[0].device_kind,
+            "interpret_mode": interpret_default()}
+
+
 def write_json(name: str, payload) -> Path:
     """Persist a benchmark payload as ``BENCH_<name>.json`` at the repo
-    root (round-trippable: numpy/jax scalars and arrays are plain lists)."""
+    root (round-trippable: numpy/jax scalars and arrays are plain lists).
+    Every payload is stamped with ``provenance()``."""
     path = REPO_ROOT / f"BENCH_{name}.json"
-    path.write_text(json.dumps(_jsonable(payload), indent=2) + "\n")
+    payload = dict(_jsonable(payload))
+    payload["provenance"] = provenance()
+    path.write_text(json.dumps(payload, indent=2) + "\n")
     print(f"[bench] wrote {path}", flush=True)
     return path
 

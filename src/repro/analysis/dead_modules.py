@@ -12,7 +12,8 @@ Reachability is computed over the ``repro.*`` import graph:
 * roots — the solver surface (``repro.core``, ``repro.kernels``,
   ``repro.launch.solve``, ``repro.launch.lsq``, ``repro.launch.mesh``,
   ``repro.launch.serve``, ``repro.serve``, ``repro.optim``,
-  ``repro.compat``, ``repro.analysis.lint``) **plus**
+  ``repro.compat``, ``repro.analysis.lint``, ``repro.tune.autotune``
+  — the autotune CLI is the sweep entry point) **plus**
   every ``repro.*`` module imported by ``benchmarks/`` or ``examples/``
   scripts — including imports inside their embedded subprocess-script
   strings (the product surface keeps a module alive; tests do *not* —
@@ -45,6 +46,7 @@ ROOT_MODULES = (
     "repro.optim",
     "repro.compat",
     "repro.analysis.lint",
+    "repro.tune.autotune",
 )
 SCRIPT_DIRS = ("benchmarks", "examples")
 

@@ -22,10 +22,20 @@ table row; this checker makes that class of drift mechanical:
   hand-maintained copies drift;
 * DX5 — the dispatch-miss error path does not enumerate the table
   programmatically (no ``sorted(_DISTRIBUTED_STRATEGIES)`` in the
-  function that performs the ``.get``).
+  function that performs the ``.get``);
+* DX6 — a hardcoded variant choice at a dispatch seam: a function that
+  references two or more members of a *tuned variant family*
+  (``VARIANT_FAMILIES`` — the CSR matvec kernel quartet, the
+  fused-vs-scan sweep-engine pair) is choosing between measured
+  alternatives, and must consult the tuning table (a ``repro.tune``
+  lookup: ``resolve_fused`` / ``matvec_variant`` /
+  ``tuned_rows_per_panel`` / ``lookup``) or carry a baseline entry
+  justifying the bypass.  ``repro/tune`` (the table's own machinery)
+  and ``repro/kernels`` (where the variants are *defined*, not chosen
+  between) are exempt.
 
 This is a repo-level checker (``check_repo``): the table lives in one
-module but DX4 scans every file.
+module but DX4 and DX6 scan every file.
 """
 from __future__ import annotations
 
@@ -39,6 +49,26 @@ NAME = "dispatch"
 
 TABLE_NAME = "_DISTRIBUTED_STRATEGIES"
 CONST_NAME = re.compile(r"^_?[A-Z][A-Z0-9_]*$")
+
+#: DX6 — the tuned variant families (family name -> member symbols).
+#: Referencing >=2 members of one family in a single function means the
+#: function chooses between measured alternatives at runtime.
+VARIANT_FAMILIES = {
+    "csr_matvec": frozenset({
+        "spmv_csr", "spmv_csr_prefetch",
+        "spmv_csr_sliced", "spmv_csr_sliced_prefetch"}),
+    "sweep_engine": frozenset({
+        "_sequential_fused_impl", "_sequential_scan_impl"}),
+}
+
+#: DX6 — the ``repro.tune`` lookup entry points that make a variant
+#: choice table-driven (matched on the called name's last segment).
+TUNE_LOOKUPS = frozenset({
+    "resolve_fused", "matvec_variant", "tuned_rows_per_panel", "lookup"})
+
+#: DX6 exemptions: the tuning machinery itself and the kernel modules
+#: where the family members are defined.
+DX6_EXEMPT = ("repro/tune/", "repro/kernels/")
 
 
 def _module_constants(tree: ast.AST
@@ -179,10 +209,17 @@ def check_repo(root: str, parsed: dict[str, tuple[ast.AST, str]]
                       for sub in ast.walk(node)}
     occurrences: dict[frozenset, list[tuple[str, int]]] = {}
     for path, (tree, _src) in sorted(parsed.items()):
+        consumed: set[int] = set()   # inner displays of frozenset(...) calls
         for node in ast.walk(tree):
+            if id(node) in consumed:
+                continue
             vals = const_str_tuple(node)
             if not vals or len(vals) < 2:
                 continue
+            if isinstance(node, ast.Call):
+                # one literal, two AST nodes: don't count the wrapped
+                # tuple/set display again when the walk reaches it
+                consumed.add(id(node.args[0]))
             vset = frozenset(vals)
             hit_constant = False
             for cname, cvals in sorted(tracked.items()):
@@ -210,4 +247,37 @@ def check_repo(root: str, parsed: dict[str, tuple[ast.AST, str]]
                 message=(f"string-tuple literal {sorted(vset)} repeated at "
                          f"{len(sites)} sites — hoist it to one named "
                          "constant so the copies cannot drift")))
+
+    # DX6 — hardcoded variant selection bypassing the tuning table
+    for path, (tree, _src) in sorted(parsed.items()):
+        if any(seg in path for seg in DX6_EXEMPT):
+            continue
+        for fn in ast.walk(tree):
+            if not isinstance(fn, (ast.FunctionDef, ast.AsyncFunctionDef)):
+                continue
+            referenced: set[str] = set()
+            consults = False
+            for node in ast.walk(fn):
+                dn = dotted_name(node)
+                if dn:
+                    referenced.add(dn.split(".")[-1])
+                if isinstance(node, ast.Call):
+                    cn = (call_name(node) or "").split(".")[-1]
+                    if cn in TUNE_LOOKUPS:
+                        consults = True
+            if consults:
+                continue
+            for fam, members in sorted(VARIANT_FAMILIES.items()):
+                hit = sorted(referenced & members)
+                if len(hit) >= 2:
+                    findings.append(Finding(
+                        code="DX6", path=path, line=fn.lineno,
+                        symbol=fn.name,
+                        message=(f"references {len(hit)} members of the "
+                                 f"tuned {fam!r} variant family ({hit}) "
+                                 "without a repro.tune lookup "
+                                 f"({'/'.join(sorted(TUNE_LOOKUPS))}) — "
+                                 "route the choice through the tuning "
+                                 "table or baseline the bypass with a "
+                                 "justification")))
     return findings

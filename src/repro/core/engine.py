@@ -50,6 +50,7 @@ from repro.core.operators import (
     banded_window_matvec,
 )
 from repro.optim import compression
+from repro.tune import runtime as tune_runtime
 
 
 # ---------------------------------------------------------------------------
@@ -185,6 +186,12 @@ class Schedule(NamedTuple):
     Action × format combinations without a sweep kernel fall back to the
     scan engine with a ``UserWarning``; supported combinations produce
     iterates matching the scan engine (GS bitwise, RK to roundoff).
+    ``fused="auto"`` defers the pick to the active tuning table
+    (``repro.tune``): the measured fused-vs-scan winner for this
+    format × action × shape bucket on the current backend runs; with no
+    table entry — or where the strategy has no fused kernel to pick —
+    it resolves to the scan engine (today's default) with no warning,
+    bitwise-unchanged.  Explicit booleans are never overridden.
 
     ``overlap`` (distributed only) double-buffers the sync: round r's
     halo / a2a / delta exchange is issued concurrently with round r+1's
@@ -209,7 +216,7 @@ class Schedule(NamedTuple):
     tau: int = 0
     record_every: int = 0
     partition: str = "contiguous"
-    fused: bool = False
+    fused: bool | str = False
     overlap: bool = False
     compress: str = "none"
 
@@ -241,6 +248,10 @@ class Schedule(NamedTuple):
             raise ValueError(
                 f"unknown compress: {self.compress!r} (expected one of "
                 f"{COMPRESS_MODES})")
+        if self.fused not in (False, True, "auto"):
+            raise ValueError(
+                f"unknown fused: {self.fused!r} (expected True, False or "
+                f"'auto' — the tuning-table pick; got {self})")
         if not self.distributed:
             if self.num_iters <= 0:
                 raise ValueError(
@@ -259,7 +270,10 @@ class Schedule(NamedTuple):
                     "overlap=True is a distributed-schedule option (the "
                     "double-buffered sync needs rounds/local_steps) — got "
                     f"{self}")
-            if self.fused and self.tau > 0:
+            if self.fused is True and self.tau > 0:
+                # fused="auto" is fine here: the simulator has no fused
+                # path for the table to pick, so auto resolves to the
+                # per-step engine — nothing was forced, nothing to reject.
                 raise ValueError(
                     "fused=True cannot run the bounded-delay simulator "
                     "(its ring-buffer stale reads are inherently per-step; "
@@ -424,7 +438,7 @@ def solve_sequential(
     beta: float = 1.0,
     block: int = 1,
     record_every: int = 0,
-    fused: bool = False,
+    fused: bool | str = False,
 ) -> SolveResult:
     """Sequential randomized solve: one local-update step per iteration.
 
@@ -438,7 +452,13 @@ def solve_sequential(
     ``lax.scan``; the pick stream and update arithmetic are shared, so
     iterates match the scan engine (GS bitwise, RK to roundoff).  Formats
     without a sweep kernel fall back to the scan with a ``UserWarning``.
+    ``fused="auto"`` runs the tuning table's measured winner where a
+    sweep kernel exists, the scan otherwise — silently, since nothing
+    was forced (see ``Schedule``).
     """
+    if fused == "auto":
+        fused = (_fused_sweep_supported(op, action, block)
+                 and tune_runtime.resolve_fused(fused, op, action))
     if fused:
         if _fused_sweep_supported(op, action, block):
             return _sequential_fused_impl(
@@ -773,7 +793,7 @@ def solve_distributed(
     beta: float = 1.0,
     sync: str = "auto",
     partition: str = "contiguous",
-    fused: bool = False,
+    fused: bool | str = False,
     overlap: bool = False,
     compress: str = "none",
     unroll: bool = False,
@@ -884,6 +904,14 @@ def solve_distributed(
             f"distributed block GS with block={block} is not supported for "
             f"{type(op).__name__}; the sparse slab strategies run "
             "coordinate GS (block=1)")
+    if fused == "auto":
+        # Per-strategy-row resolution: the table's measured winner runs
+        # where the strategy has a fused local phase; elsewhere auto
+        # silently means scan — nothing was forced, so no warning (the
+        # warning below is for an explicit fused=True that cannot be
+        # honored).
+        fused = (kind in _FUSED_STRATEGIES
+                 and tune_runtime.resolve_fused(fused, op, action))
     if fused and kind not in _FUSED_STRATEGIES:
         _warn_fused_fallback(op, action, f" under the {kind!r} strategy")
         fused = False
@@ -2120,7 +2148,7 @@ class BatchedSolveResult(NamedTuple):
 
 
 def sequential_chunk(op, b, x, picks, *, action: str, beta: float = 1.0,
-                     block: int = 1, fused: bool = False):
+                     block: int = 1, fused: bool | str = False):
     """One record chunk of the sequential engine: ``picks.shape[0]`` steps
     from iterate ``x``; returns ``(x_next, resid)`` with ``resid`` the
     per-column ``||b - A x_next||_2``.
@@ -2131,7 +2159,11 @@ def sequential_chunk(op, b, x, picks, *, action: str, beta: float = 1.0,
     arithmetic is the one-shot impls' own — they are invoked with the
     pre-drawn pick slice — so chaining chunks over consecutive
     ``draw_picks`` slices bitwise-reproduces ``solve_sequential``.
+    ``fused="auto"`` resolves through the tuning table, exactly as in
+    ``solve_sequential``.
     """
+    if fused == "auto":
+        fused = tune_runtime.resolve_fused(fused, op, action)
     impl = _sequential_scan_impl
     if fused and _fused_sweep_supported(op, action, block):
         impl = _sequential_fused_impl
@@ -2153,7 +2185,7 @@ def solve_batched(
     record_every: int = 0,
     beta: float = 1.0,
     block: int = 1,
-    fused: bool = False,
+    fused: bool | str = False,
     chunk_fn=None,
     on_record=None,
 ) -> BatchedSolveResult:
@@ -2228,12 +2260,12 @@ def solve(
     block: int = 128,
     bands: int = 2,
     width: int = 32,
-    rows_per_panel: int = 8,
+    rows_per_panel: int | None = None,
     storage_dtype=None,
     gs_block: int = 1,
     x0: jax.Array | None = None,
     sync: str = "auto",
-    fused: bool | None = None,
+    fused: bool | str | None = None,
     unroll: bool = False,
     with_metrics: bool = True,
     delay_key: jax.Array | None = None,
@@ -2248,14 +2280,19 @@ def solve(
     operator ("dense", "banded", "ell", "csr"); ``schedule`` picks
     sequential / bounded-delay simulator / distributed execution (see
     ``Schedule``).  ``block``/``bands`` parameterize the banded format,
-    ``width`` the ELL format, ``rows_per_panel`` the CSR panel layout,
+    ``width`` the ELL format, ``rows_per_panel`` the CSR panel layout
+    (``None``, the default, asks the tuning table for the measured
+    winner at this shape and falls back to 8 — the panel grouping never
+    changes per-row summation order, so the choice is layout-only),
     ``storage_dtype`` the precision the operator's coefficients are held
     in (``None`` keeps the input dtype — bitwise-unchanged; the iterate,
     ``b`` and all accumulation stay f32 regardless), and ``gs_block`` the
     dense/CSR block-GS action granularity.  ``fused`` overrides
     ``schedule.fused`` (``None`` defers to the schedule): run inner loops
     as fused Pallas sweep kernels where the action × format has one,
-    falling back to the per-step scan with a warning elsewhere.
+    falling back to the per-step scan with a warning elsewhere;
+    ``"auto"`` runs the tuning table's measured fused-vs-scan winner
+    (see ``Schedule``).
     """
     if action is None:
         action = "rk" if hasattr(problem, "sigma_min") else "gs"
@@ -2267,6 +2304,9 @@ def solve(
     schedule = schedule if fused is None else schedule._replace(fused=fused)
     schedule.validate()
     use_fused = schedule.fused
+    if rows_per_panel is None:
+        rows_per_panel = tune_runtime.tuned_rows_per_panel(
+            problem.A.shape[0], storage_dtype) or 8
     op = as_operator(problem.A, format, block=block, bands=bands, width=width,
                      rows_per_panel=rows_per_panel,
                      storage_dtype=storage_dtype)

@@ -564,29 +564,66 @@ class CsrOp:
         return None
 
     def matvec(self, x: jax.Array, *, interpret=None,
-               skip_empty: bool | None = None) -> jax.Array:
-        """``A @ x`` via the sliced-ELL gather-accumulate kernel
-        (kernels/spmv_csr.py::spmv_csr_sliced) — the PR-5 overhaul that
-        retired the one-hot-matmul segment sum from the matvec path.
+               skip_empty: bool | None = None,
+               variant: str | None = None) -> jax.Array:
+        """``A @ x`` — the tunable CSR matvec dispatch seam.
 
-        ``skip_empty`` picks the empty-panel predication (scalar-prefetched
-        per-panel nnz counts; empty panels — common after norm-balanced
-        partitioning of banded-structure matrices, or on very uneven row
-        occupancy — write zeros without gathering ``x``, and their input
-        DMA is remapped to the already-resident panel 0).  ``None`` (the
-        default) auto-selects: the predicated kernel when the stored
-        pattern actually has empty panels, the plain dense-panel kernel
-        otherwise (predication buys nothing when every panel is occupied).
-        Auto-selection needs concrete metadata; under jit the plain kernel
-        is used."""
+        Four pinned kernel variants serve this entry point: the sliced-ELL
+        gather-accumulate kernel (``"sliced"``, the PR-5 overhaul that
+        retired the one-hot-matmul segment sum from the matvec path), its
+        empty-panel-predicated twin (``"sliced_prefetch"`` —
+        scalar-prefetched per-panel nnz counts; empty panels — common
+        after norm-balanced partitioning of banded-structure matrices —
+        write zeros without gathering ``x``), and the legacy segment-sum
+        pair (``"segsum"`` / ``"segsum_prefetch"``, the measured contrast
+        case).  Selection order (repro.tune):
+
+        1. an explicit ``variant`` forces that kernel (bitwise-pinned);
+        2. an explicit ``skip_empty`` bool forces the pre-autotune pick:
+           the sliced kernel, predicated iff True (bitwise-pinned);
+        3. the active tuning table's ``matvec`` entry for this operator's
+           shape bucket and storage dtype, when one exists;
+        4. the pre-autotune auto-selection, bitwise-unchanged: the
+           predicated sliced kernel when the stored pattern actually has
+           empty panels, the plain sliced kernel otherwise.
+
+        The predication stream (``panel_nnz``) needs concrete metadata, so
+        under jit tracing steps 3–4 drop to the variant's non-prefetch
+        sibling (exactly the pre-autotune tracer behavior)."""
         from repro.kernels import ops
-        vals, cols = self.sliced_rows()
-        if skip_empty is None:
-            if isinstance(self.row_nnz, jax.core.Tracer):
-                skip_empty = False
+        if variant is None:
+            if skip_empty is not None:
+                variant = "sliced_prefetch" if skip_empty else "sliced"
             else:
-                skip_empty = bool((np.asarray(self.panel_nnz()) == 0).any())
-        if skip_empty:
+                from repro.tune import runtime as tune_runtime
+                variant = tune_runtime.matvec_variant(self)
+                if variant is None:
+                    if isinstance(self.row_nnz, jax.core.Tracer):
+                        variant = "sliced"
+                    else:
+                        empty = bool(
+                            (np.asarray(self.panel_nnz()) == 0).any())
+                        variant = "sliced_prefetch" if empty else "sliced"
+                elif variant.endswith("_prefetch") \
+                        and isinstance(self.row_nnz, jax.core.Tracer):
+                    variant = variant[:-len("_prefetch")]
+        if variant in ("segsum", "segsum_prefetch"):
+            if variant == "segsum_prefetch":
+                return ops.spmv_csr_prefetch(
+                    self.data, self.indices, self.row_id, self.panel_nnz(),
+                    x, m=self._shape[0], rows_per_panel=self.rows_per_panel,
+                    panel_width=self.panel_width, interpret=interpret)
+            return ops.spmv_csr(self.data, self.indices, self.row_id, x,
+                                m=self._shape[0],
+                                rows_per_panel=self.rows_per_panel,
+                                panel_width=self.panel_width,
+                                interpret=interpret)
+        if variant not in ("sliced", "sliced_prefetch"):
+            from repro.tune.table import MATVEC_VARIANTS
+            raise ValueError(f"unknown matvec variant: {variant!r} "
+                             f"(expected one of {MATVEC_VARIANTS})")
+        vals, cols = self.sliced_rows()
+        if variant == "sliced_prefetch":
             return ops.spmv_csr_sliced_prefetch(
                 vals, cols, self.panel_nnz(), x, m=self._shape[0],
                 rows_per_panel=self.rows_per_panel, interpret=interpret)

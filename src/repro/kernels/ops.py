@@ -33,9 +33,17 @@ from repro.kernels.sweep_ell import (
 )
 
 
+def interpret_default() -> bool:
+    """Whether ``interpret=None`` resolves to interpret-mode execution on
+    the current backend — the single source the benchmark provenance
+    stamp and the tuning table's ``interpret_mode`` field both read, so
+    interpret-mode timings can never masquerade as hardware numbers."""
+    return jax.default_backend() == "cpu"
+
+
 def _interp(interpret):
     if interpret is None:
-        return jax.default_backend() == "cpu"
+        return interpret_default()
     return interpret
 
 

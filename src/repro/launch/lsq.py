@@ -29,6 +29,7 @@ from repro.core.engine import (COMPRESS_MODES, PARTITIONS, scheduled_tau,
                                supported_syncs)
 from repro.core.operators import STORAGE_DTYPES
 from repro.launch.mesh import make_host_mesh
+from repro.launch.solve import add_fused_flag
 
 #: operator class names this CLI can build (--format dense/csr); the
 #: --rk-sync choices are derived from the dispatch table narrowed to these
@@ -67,11 +68,8 @@ def main(argv=None):
                          "row permutation (csr format), restoring the "
                          "global Strohmer-Vershynin row law under "
                          "per-worker local sampling")
-    ap.add_argument("--fused", action="store_true",
-                    help="run inner loops as fused Pallas sweep kernels "
-                         "(csr format: the whole record chunk in one "
-                         "launch, iterate VMEM-resident); falls back to "
-                         "the per-step scan with a warning elsewhere")
+    add_fused_flag(ap, "csr format: the whole record chunk in one "
+                       "launch, iterate VMEM-resident")
     ap.add_argument("--overlap", action="store_true",
                     help="double-buffered delta sync for the distributed "
                          "pass: install round r-1's deltas while sweeping "

@@ -14,7 +14,7 @@ from __future__ import annotations
 import argparse
 
 from repro.core import random_sparse_lsq, random_sparse_spd
-from repro.launch.solve import FORMAT_CHOICES
+from repro.launch.solve import FORMAT_CHOICES, add_fused_flag
 from repro.serve import SolverService, open_loop_load
 
 
@@ -57,7 +57,7 @@ def main(argv=None):
     ap.add_argument("--batch-window-ms", type=float, default=2.0)
     ap.add_argument("--serial", action="store_true",
                     help="one-request-at-a-time baseline (max_batch=1)")
-    ap.add_argument("--fused", action="store_true")
+    add_fused_flag(ap, "the chunk executables the service keeps warm")
     ap.add_argument("--no-warmup", dest="warmup", action="store_false")
     ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args(argv)

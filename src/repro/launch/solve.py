@@ -32,6 +32,28 @@ _CLI_FORMATS = ("DenseOp", "EllOp", "CsrOp")
 FORMAT_CHOICES = ("dense", "ell", "csr")
 
 
+def add_fused_flag(ap: argparse.ArgumentParser, detail: str) -> None:
+    """The tri-state ``--fused`` flag every launcher shares: absent ->
+    False (the scan engine, today's default), bare ``--fused`` -> True
+    (forced, warns where no fused kernel exists), ``--fused auto`` ->
+    the tuning table's measured fused-vs-scan winner per strategy row
+    (``repro.tune``; missing entries run the scan, silently)."""
+
+    def value(s: str):
+        if s != "auto":
+            raise argparse.ArgumentTypeError(
+                f"--fused takes no value or 'auto' (got {s!r})")
+        return s
+
+    ap.add_argument("--fused", nargs="?", const=True, default=False,
+                    type=value, metavar="auto",
+                    help="run inner loops as fused Pallas sweep kernels "
+                         f"({detail}); bare --fused forces it (falls back "
+                         "to the per-step scan with a warning where no "
+                         "sweep kernel exists), '--fused auto' runs the "
+                         "tuning table's measured winner per strategy row")
+
+
 def main(argv=None):
     ap = argparse.ArgumentParser()
     ap.add_argument("--n", type=int, default=2048)
@@ -55,11 +77,8 @@ def main(argv=None):
                     help="distributed slab assignment: 'balanced' bin-packs "
                          "rows by norm mass and nnz into the P slabs via a "
                          "symmetric row permutation (CSR/ELL formats)")
-    ap.add_argument("--fused", action="store_true",
-                    help="run inner loops as fused Pallas sweep kernels "
-                         "(iterate VMEM-resident, picks scalar-prefetched) "
-                         "where the action x format has one; falls back to "
-                         "the per-step scan with a warning elsewhere")
+    add_fused_flag(ap, "iterate VMEM-resident, picks scalar-prefetched, "
+                       "where the action x format has one")
     ap.add_argument("--overlap", action="store_true",
                     help="double-buffered sync: each round installs the "
                          "PREVIOUS round's exchange while sweeping, hiding "

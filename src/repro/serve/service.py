@@ -41,6 +41,7 @@ from repro.serve.bucketing import bucket_rhs, pad_columns, unpad_columns
 from repro.serve.executor import ExecKey, ExecutorCache
 from repro.serve.queue import (
     Partial, Request, RequestQueue, RequestResult, Ticket)
+from repro.tune import runtime as tune_runtime
 
 
 @dataclass
@@ -79,7 +80,8 @@ class SolverService:
 
     def __init__(self, *, num_iters: int = 4096, record_every: int = 64,
                  max_batch: int = 32, batch_window_s: float = 0.002,
-                 fused: bool = False, cache: ExecutorCache | None = None):
+                 fused: bool | str = False,
+                 cache: ExecutorCache | None = None):
         resolve_record_every(num_iters, record_every)  # fail fast, once
         self.num_iters = num_iters
         self.record_every = record_every
@@ -204,15 +206,25 @@ class SolverService:
 
     # -- batch execution ----------------------------------------------------
 
+    def _fused_for(self, reg: RegisteredProblem) -> bool:
+        """The service's ``fused`` setting resolved per problem:
+        ``"auto"`` asks the tuning table for this operator's measured
+        fused-vs-scan winner (missing entry -> scan, today's default), so
+        the warm executables are compiled for the tuned choice — the
+        resolution happens HERE, before the ``ExecKey`` is built, keeping
+        the cache keyed by what actually runs."""
+        return tune_runtime.resolve_fused(self.fused, reg.op, reg.action)
+
     def _executor(self, reg: RegisteredProblem, k_bucket: int):
+        fused = self._fused_for(reg)
         exec_key = ExecKey(
             format=type(reg.op).__name__, action=reg.action,
             shape=tuple(reg.op.shape), k_bucket=k_bucket,
             storage_dtype=reg.storage_dtype, compress="none",
-            record_every=reg.record_every, fused=self.fused)
+            record_every=reg.record_every, fused=fused)
         return self.executors.get(exec_key, lambda: functools.partial(
             sequential_chunk, action=reg.action, beta=reg.beta, block=1,
-            fused=self.fused))
+            fused=fused))
 
     def _execute(self, reg: RegisteredProblem, items: list) -> None:
         """One continuous batch: concat -> pad -> chunked solve -> unpad."""
@@ -278,7 +290,7 @@ class SolverService:
         res = solve_batched(
             reg.op, B, action=reg.action, key=reg.key,
             num_iters=reg.num_iters, record_every=rec, tol=tol_full,
-            beta=reg.beta, fused=self.fused, chunk_fn=chunk_fn,
+            beta=reg.beta, fused=self._fused_for(reg), chunk_fn=chunk_fn,
             on_record=on_record)
 
         # Anyone still active hit the iteration cap: complete with finals.

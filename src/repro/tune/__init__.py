@@ -1,0 +1,31 @@
+"""``repro.tune`` — the kernel autotuner and measured auto-dispatch.
+
+``table``   — the versioned, backend-keyed ``TUNE_<backend>.json`` schema
+              (``TuningTable`` / ``TuneKey`` / shape bucketing);
+``runtime`` — the process-wide active table and the lookups the dispatch
+              seams call (``resolve_fused``, ``matvec_variant``,
+              ``tuned_rows_per_panel``);
+``autotune``— the sweep/show/diff CLI
+              (``python -m repro.tune.autotune``).
+
+Contract (DESIGN.md §9): explicit caller choices are bitwise-pinned and
+never overridden; a missing table entry falls back to today's hardcoded
+defaults, bitwise-unchanged — the table only chooses *which*
+already-pinned implementation runs.
+"""
+from repro.tune.table import TuneKey, TuningTable, shape_bucket
+from repro.tune.runtime import (
+    active_table, matvec_variant, resolve_fused, set_active_table,
+    tuned_rows_per_panel, use_table)
+
+__all__ = [
+    "TuneKey",
+    "TuningTable",
+    "active_table",
+    "matvec_variant",
+    "resolve_fused",
+    "set_active_table",
+    "shape_bucket",
+    "tuned_rows_per_panel",
+    "use_table",
+]

@@ -1,0 +1,248 @@
+"""The autotuner CLI: measure the tunable axes, persist the winners.
+
+    PYTHONPATH=src python -m repro.tune.autotune sweep --n 1024
+    PYTHONPATH=src python -m repro.tune.autotune show  [TUNE_cpu.json]
+    PYTHONPATH=src python -m repro.tune.autotune diff  A.json B.json
+
+``sweep`` times every candidate of every tunable axis on reference
+problems at the requested shape — min-of-``--repeats`` wall clock via
+``benchmarks/common.timed`` (one-sided noise, the same statistic the
+BENCH trail trusts) — and writes the winners to a ``TuningTable``
+(default: the committed ``TUNE_<backend>.json``; ``--merge`` folds the
+new bucket's entries into an existing file so one table accumulates
+buckets across runs).  Axes swept per kernel entry point:
+
+* ``matvec`` — the CSR variant family (``sliced`` / ``sliced_prefetch``
+  / ``segsum`` / ``segsum_prefetch``): the ``skip_empty`` on/off axis is
+  the ``*_prefetch`` twins, timed on both a dense-panel and a half-empty
+  ("patchy") pattern, winner by total time across the two (one entry per
+  bucket must serve both; the patchy pattern is where predication pays);
+* ``sweep`` — fused Pallas sweep vs per-step scan inner loops, per
+  (format x action) row of the sequential engine (banded GS, CSR/ELL
+  GS and RK), through ``solve_sequential`` both ways;
+* ``panel`` — CSR ``rows_per_panel`` candidates (the layout the sliced
+  matvec and the sweep kernels stream).  ``block`` (banded) and
+  ``row_cap`` are *structural* on the current formats — the block size
+  must match the matrix blocking and ``row_cap`` is the stored pattern's
+  max row occupancy — so they are recorded as swept-shape metadata, not
+  tuned.
+
+``show`` prints a table's identity and per-key choices; ``diff`` exits
+nonzero iff two tables disagree on any shared key or cover different
+keys — the CI round-trip gate (write -> load -> identical choices).
+"""
+from __future__ import annotations
+
+import argparse
+import sys
+
+from repro.tune.table import (
+    MATVEC_VARIANTS, REPO_ROOT, TuningTable, default_path, shape_bucket)
+
+#: CSR rows_per_panel candidates ("panel" axis)
+PANEL_CANDIDATES = (4, 8, 16)
+
+
+def _timed():
+    """``benchmarks/common.timed`` — the benchmarks package lives at the
+    repo root (not under src/), so running the tuner from elsewhere needs
+    the root on sys.path before the import resolves."""
+    try:
+        from benchmarks.common import timed
+    except ImportError:
+        sys.path.insert(0, str(REPO_ROOT))
+        from benchmarks.common import timed
+    return timed
+
+
+def _patchy(A, rows_per_panel: int):
+    """Zero every other row panel — the half-empty pattern a norm-balanced
+    partition of banded structure produces (the skip_empty design case)."""
+    import numpy as np
+    Ap = np.array(A)
+    R = rows_per_panel
+    for p in range(0, Ap.shape[0] // R, 2):
+        Ap[p * R:(p + 1) * R] = 0.0
+    return Ap
+
+
+def sweep_matvec(table: TuningTable, *, n: int, k: int, row_nnz: int,
+                 repeats: int, storage_dtype=None, seed: int = 0) -> None:
+    import jax.numpy as jnp
+    from repro.core import CsrOp, random_sparse_spd
+    from repro.tune import runtime
+    timed = _timed()
+    prob = random_sparse_spd(n, row_nnz=row_nnz, n_rhs=k, seed=seed)
+    cop = CsrOp.from_dense(prob.A, storage_dtype=storage_dtype)
+    pop = CsrOp.from_dense(jnp.asarray(_patchy(prob.A, cop.rows_per_panel)),
+                           storage_dtype=storage_dtype)
+    x = prob.x_star
+    wall: dict[str, float] = {}
+    with runtime.use_table(None):      # forced variants: no table recursion
+        for v in MATVEC_VARIANTS:
+            us = sum(
+                timed(lambda op=op, v=v: op.matvec(x, variant=v),
+                      iters=repeats, stat="min")
+                for op in (cop, pop)) * 1e6
+            wall[v] = us
+            print(f"[tune] matvec/{v:<16s} {us:10.0f} us "
+                  f"(dense+patchy, n={n})")
+    choice = min(wall, key=wall.get)
+    table.record(runtime.matvec_key(cop), choice, wall)
+    print(f"[tune] matvec winner @ {shape_bucket(n)}: {choice}")
+
+
+def sweep_panels(table: TuningTable, *, n: int, k: int, row_nnz: int,
+                 repeats: int, storage_dtype=None, seed: int = 0) -> None:
+    from repro.core import CsrOp, random_sparse_spd
+    from repro.tune import runtime
+    timed = _timed()
+    prob = random_sparse_spd(n, row_nnz=row_nnz, n_rhs=k, seed=seed)
+    x = prob.x_star
+    wall: dict[str, float] = {}
+    with runtime.use_table(None):
+        for R in PANEL_CANDIDATES:
+            op = CsrOp.from_dense(prob.A, rows_per_panel=R,
+                                  storage_dtype=storage_dtype)
+            us = timed(lambda op=op: op.matvec(x),
+                       iters=repeats, stat="min") * 1e6
+            wall[str(R)] = us
+            print(f"[tune] panel/rows_per_panel={R:<3d} {us:10.0f} us")
+    choice = min(wall, key=wall.get)
+    table.record(runtime.panel_key(n, storage_dtype), choice, wall)
+    print(f"[tune] panel winner @ {shape_bucket(n)}: rows_per_panel={choice}")
+
+
+def sweep_engines(table: TuningTable, *, n: int, k: int, row_nnz: int,
+                  steps: int, repeats: int, storage_dtype=None,
+                  seed: int = 0) -> None:
+    """Fused-vs-scan per sequential (format x action) row (the bench
+    ``sweeps`` section's cases, measured for dispatch instead of report)."""
+    import jax
+    import jax.numpy as jnp
+    import numpy as np
+    from repro.core import (BlockBandedOp, CsrOp, EllOp, block_banded_spd,
+                            random_sparse_spd)
+    from repro.core.engine import solve_sequential
+    from repro.tune import runtime
+    timed = _timed()
+    block = max(min(n // 8, 64), 1)
+    bprob = block_banded_spd(n, block=block, bands=1, n_rhs=k, seed=seed)
+    bop = BlockBandedOp.from_dense(bprob.A, block=block, bands=1,
+                                   storage_dtype=storage_dtype)
+    sprob = random_sparse_spd(n, row_nnz=row_nnz, n_rhs=k, seed=seed + 1)
+    ewidth = int((np.asarray(sprob.A) != 0).sum(1).max())
+    cop = CsrOp.from_dense(sprob.A, storage_dtype=storage_dtype)
+    eop = EllOp.from_dense(sprob.A, width=ewidth, storage_dtype=storage_dtype)
+    cases = [(bop, bprob, "gs"), (cop, sprob, "gs"), (cop, sprob, "rk"),
+             (eop, sprob, "gs"), (eop, sprob, "rk")]
+    with runtime.use_table(None):      # forced engines: no table recursion
+        for op, prob, action in cases:
+            x0 = jnp.zeros_like(prob.b)
+            wall = {}
+            for name, fused in (("scan", False), ("fused", True)):
+                us = timed(
+                    lambda f=fused, op=op, prob=prob, action=action, x0=x0:
+                        solve_sequential(op, prob.b, x0, prob.x_star,
+                                         action=action,
+                                         key=jax.random.key(2),
+                                         num_iters=steps, record_every=steps,
+                                         fused=f).x,
+                    iters=repeats, stat="min") * 1e6
+                wall[name] = us
+            choice = min(wall, key=wall.get)
+            key = runtime.sweep_key(op, action)
+            table.record(key, choice, wall)
+            print(f"[tune] {key.render():<40s} scan={wall['scan']:.0f}us "
+                  f"fused={wall['fused']:.0f}us -> {choice}")
+
+
+def run_sweep(args) -> TuningTable:
+    out = args.out or default_path()
+    if args.merge:
+        try:
+            table = TuningTable.load(out)
+        except (OSError, ValueError):
+            table = TuningTable.fresh()
+    else:
+        table = TuningTable.fresh()
+    dt = args.storage_dtype
+    kw = dict(n=args.n, k=args.k, row_nnz=args.row_nnz,
+              repeats=args.repeats, storage_dtype=dt, seed=args.seed)
+    sweep_matvec(table, **kw)
+    sweep_panels(table, **kw)
+    sweep_engines(table, steps=args.steps, **kw)
+    path = table.save(out)
+    print(f"[tune] wrote {path} ({len(table.entries)} entries, "
+          f"backend={table.backend}, interpret={table.interpret_mode})")
+    return table
+
+
+def run_show(args) -> int:
+    table = TuningTable.load(args.path or default_path())
+    print(f"backend={table.backend} device_kind={table.device_kind} "
+          f"interpret_mode={table.interpret_mode} "
+          f"jax={table.jax_version} version={table.version}")
+    for key, choice in table.choices().items():
+        walls = table.entries[key]["wall_us"]
+        detail = " ".join(f"{c}={us:.0f}us" for c, us in walls.items())
+        print(f"  {key:<42s} -> {choice:<16s} ({detail})")
+    return 0
+
+
+def run_diff(args) -> int:
+    a = TuningTable.load(args.a)
+    b = TuningTable.load(args.b or default_path())
+    ca, cb = a.choices(), b.choices()
+    drift = 0
+    for key in sorted(set(ca) | set(cb)):
+        va, vb = ca.get(key), cb.get(key)
+        if va != vb:
+            drift += 1
+            print(f"  {key}: {va or '<missing>'} != {vb or '<missing>'}")
+    if drift:
+        print(f"[tune] {drift} key(s) differ")
+        return 1
+    print(f"[tune] identical choices ({len(ca)} keys)")
+    return 0
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(prog="repro.tune.autotune",
+                                 description=__doc__)
+    sub = ap.add_subparsers(dest="cmd", required=True)
+    sw = sub.add_parser("sweep", help="measure candidates, persist winners")
+    sw.add_argument("--n", type=int, default=1024)
+    sw.add_argument("--k", type=int, default=8)
+    sw.add_argument("--row-nnz", type=int, default=16)
+    sw.add_argument("--steps", type=int, default=256,
+                    help="inner-loop length for the fused-vs-scan sweep")
+    sw.add_argument("--repeats", type=int, default=3,
+                    help="timing repetitions; winners are min-of-N")
+    sw.add_argument("--storage-dtype", choices=("float32", "bfloat16"),
+                    default=None)
+    sw.add_argument("--seed", type=int, default=0)
+    sw.add_argument("--out", default=None,
+                    help="output path (default: TUNE_<backend>.json at the "
+                         "repo root)")
+    sw.add_argument("--merge", action="store_true",
+                    help="fold the new bucket's entries into an existing "
+                         "table instead of starting fresh")
+    sh = sub.add_parser("show", help="print a table's entries")
+    sh.add_argument("path", nargs="?", default=None)
+    df = sub.add_parser("diff", help="compare two tables' choices "
+                                     "(exit 1 on drift)")
+    df.add_argument("a")
+    df.add_argument("b", nargs="?", default=None,
+                    help="default: the committed TUNE_<backend>.json")
+    args = ap.parse_args(argv)
+    if args.cmd == "sweep":
+        run_sweep(args)
+        return 0
+    if args.cmd == "show":
+        return run_show(args)
+    return run_diff(args)
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,0 +1,184 @@
+"""The persisted tuning table: measured dispatch choices, backend-keyed.
+
+Every dispatch decision the engine makes among *interchangeable pinned
+implementations* — fused sweep vs per-step scan, sliced vs segment-sum vs
+prefetch-predicated CSR matvec, ``rows_per_panel`` — used to be a
+hardcoded default.  The recorded CPU interpret-mode numbers invert the
+kernels' TPU design point (ROADMAP: banded GS fused is ~4x *slower* than
+the scan there), so a constant can never be right on more than one
+backend.  This module holds the Triton-style answer: measure once per
+(kernel, format, action, shape-bucket, storage dtype) on the backend at
+hand, persist the winners to ``TUNE_<backend>.json`` at the repo root,
+and let the dispatch seams look the choice up at solve time.
+
+Schema (``SCHEMA_VERSION``):
+
+.. code-block:: json
+
+    {
+      "version": 1,
+      "backend": "cpu",
+      "device_kind": "...",
+      "interpret_mode": true,
+      "jax_version": "0.x",
+      "entries": {
+        "sweep/BlockBandedOp/gs/n1024/f32":
+            {"choice": "scan", "wall_us": {"scan": 3821.0, "fused": 23987.0}}
+      }
+    }
+
+Key axes (``TuneKey``): ``kernel`` is the tunable entry point ("sweep" =
+fused-vs-scan inner loop, "matvec" = the CSR matvec variant family,
+"panel" = the CSR ``rows_per_panel`` layout); ``format`` is the operator
+class name; ``action`` is "gs"/"rk" ("-" where the kernel has no action
+axis); ``bucket`` buckets the row count to the next power of two (shapes
+within a bucket share a winner — the same coarsening every shape-keyed
+autotuner applies so one sweep covers a neighborhood of shapes);
+``storage_dtype`` is "f32"/"bf16".  The backend/device kind live at the
+table level: one file per backend, so interpret-mode CPU timings can
+never steer a TPU run.
+
+The fallback contract (DESIGN.md §9): a missing entry means the caller
+runs today's hardcoded default, bitwise-unchanged — the table only ever
+chooses *which* already-pinned implementation runs, never new arithmetic.
+"""
+from __future__ import annotations
+
+import json
+from dataclasses import dataclass, field
+from pathlib import Path
+from typing import NamedTuple
+
+SCHEMA_VERSION = 1
+
+#: Repo root — ``TUNE_<backend>.json`` lands next to the BENCH_*.json
+#: trail (src/repro/tune/table.py -> three parents up).
+REPO_ROOT = Path(__file__).resolve().parents[3]
+
+#: the CSR matvec variant vocabulary ("matvec" kernel choices): the
+#: sliced-ELL gather-accumulate kernel, its empty-panel-predicated twin,
+#: and the legacy one-hot segment-sum pair kept as the measured contrast
+MATVEC_VARIANTS = ("sliced", "sliced_prefetch", "segsum", "segsum_prefetch")
+
+#: the fused-vs-scan vocabulary ("sweep" kernel choices)
+SWEEP_ENGINES = ("scan", "fused")
+
+
+class TuneKey(NamedTuple):
+    """One tunable dispatch site: kernel x format x action x shape x dtype."""
+    kernel: str         # "sweep" | "matvec" | "panel"
+    format: str         # operator class name, e.g. "CsrOp"
+    action: str         # "gs" | "rk" | "-" (kernel has no action axis)
+    bucket: str         # shape bucket, e.g. "n1024"
+    storage_dtype: str  # "f32" | "bf16"
+
+    def render(self) -> str:
+        return "/".join(self)
+
+    @classmethod
+    def parse(cls, s: str) -> "TuneKey":
+        parts = s.split("/")
+        if len(parts) != 5:
+            raise ValueError(f"malformed tune key: {s!r}")
+        return cls(*parts)
+
+
+def shape_bucket(m: int) -> str:
+    """Power-of-two row-count bucket: n=1000 and n=1024 share "n1024".
+
+    Rounding *up* means a bucket's winner was measured at the bucket's
+    most expensive shape — conservative for everything else it covers.
+    """
+    m = max(int(m), 1)
+    b = 1
+    while b < m:
+        b <<= 1
+    return f"n{b}"
+
+
+def storage_key(dtype) -> str:
+    """'bf16' for bfloat16 coefficient storage, 'f32' otherwise."""
+    return "bf16" if "bfloat16" in str(dtype) else "f32"
+
+
+def backend_key() -> str:
+    """The table file's backend axis (``TUNE_<backend>.json``)."""
+    import jax
+    return jax.default_backend()
+
+
+def default_path(backend: str | None = None) -> Path:
+    return REPO_ROOT / f"TUNE_{backend or backend_key()}.json"
+
+
+@dataclass
+class TuningTable:
+    """In-memory form of ``TUNE_<backend>.json`` (see module docstring)."""
+
+    backend: str = ""
+    device_kind: str = ""
+    interpret_mode: bool = False
+    jax_version: str = ""
+    version: int = SCHEMA_VERSION
+    #: rendered ``TuneKey`` -> {"choice": str, "wall_us": {candidate: us}}
+    entries: dict = field(default_factory=dict)
+
+    @classmethod
+    def fresh(cls) -> "TuningTable":
+        """An empty table stamped with the current backend identity."""
+        import jax
+        from repro.kernels.ops import interpret_default
+        return cls(backend=backend_key(),
+                   device_kind=jax.devices()[0].device_kind,
+                   interpret_mode=interpret_default(),
+                   jax_version=jax.__version__)
+
+    # -- entry access -------------------------------------------------------
+
+    def record(self, key: TuneKey, choice: str, wall_us: dict) -> None:
+        self.entries[key.render()] = {
+            "choice": choice,
+            "wall_us": {str(k): float(v) for k, v in wall_us.items()}}
+
+    def lookup(self, key: TuneKey) -> str | None:
+        """The measured winner for ``key``, or None (-> caller's default)."""
+        e = self.entries.get(key.render())
+        return None if e is None else e["choice"]
+
+    def choices(self) -> dict[str, str]:
+        """key-string -> choice, for round-trip / diff comparisons."""
+        return {k: v["choice"] for k, v in sorted(self.entries.items())}
+
+    def merge(self, other: "TuningTable") -> None:
+        """Fold ``other``'s entries in (other wins on key collisions)."""
+        self.entries.update(other.entries)
+
+    # -- persistence --------------------------------------------------------
+
+    def save(self, path: str | Path | None = None) -> Path:
+        path = Path(path) if path is not None else default_path(self.backend)
+        payload = {"version": self.version, "backend": self.backend,
+                   "device_kind": self.device_kind,
+                   "interpret_mode": self.interpret_mode,
+                   "jax_version": self.jax_version,
+                   "entries": {k: self.entries[k]
+                               for k in sorted(self.entries)}}
+        path.write_text(json.dumps(payload, indent=2) + "\n")
+        return path
+
+    @classmethod
+    def load(cls, path: str | Path) -> "TuningTable":
+        """Load a persisted table; entries from a different schema version
+        are dropped (the keys' meaning may have changed), leaving an empty
+        table — which the fallback contract turns into today's defaults.
+        """
+        raw = json.loads(Path(path).read_text())
+        version = int(raw.get("version", 0))
+        entries = raw.get("entries", {}) if version == SCHEMA_VERSION else {}
+        for k in entries:
+            TuneKey.parse(k)  # malformed keys fail loudly at load time
+        return cls(backend=raw.get("backend", ""),
+                   device_kind=raw.get("device_kind", ""),
+                   interpret_mode=bool(raw.get("interpret_mode", False)),
+                   jax_version=raw.get("jax_version", ""),
+                   version=version, entries=entries)

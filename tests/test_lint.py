@@ -138,12 +138,63 @@ def test_dispatch_catches_duplicated_capability_literal():
 
 
 def test_dispatch_real_engine_is_single_sourced():
-    """The shipped engine passes the dispatch checker outright — every
+    """The shipped engine passes the dispatch checker except for the one
+    baselined bypass: ``matvec_segsum`` is the forced legacy contrast
+    case and intentionally never consults the tuning table — every
     capability set is live, guarded, and single-sourced."""
     root = lint.repo_root()
     parsed = {p: ts for p, ts in lint.parse_tree(root)["src"].items()
               if ts[0] is not None}
-    assert dispatch.check_repo(root, parsed) == []
+    found = [(f.code, f.symbol) for f in dispatch.check_repo(root, parsed)]
+    assert found == [("DX6", "matvec_segsum")], found
+
+
+BAD_SEAM = """
+    from repro.kernels import ops
+
+    def matvec(self, x):
+        if self.skip:
+            return ops.spmv_csr_sliced_prefetch(x)
+        return ops.spmv_csr_sliced(x)
+"""
+
+CLEAN_SEAM = """
+    from repro.kernels import ops
+    from repro.tune import runtime as tune_runtime
+
+    def matvec(self, x):
+        if tune_runtime.matvec_variant(self) == "sliced_prefetch":
+            return ops.spmv_csr_sliced_prefetch(x)
+        return ops.spmv_csr_sliced(x)
+"""
+
+_SEAM_TABLE = """
+    _DISTRIBUTED_STRATEGIES = {
+        ("gs", "DenseOp", "allgather"): "dense_gs",
+    }
+"""
+
+
+def test_dispatch_catches_hardcoded_variant_choice():
+    found = _repo_codes(dispatch, {
+        "src/repro/core/engine.py": _SEAM_TABLE,
+        "src/repro/core/operators.py": BAD_SEAM})
+    assert ("DX6", "matvec") in found, found
+
+
+def test_dispatch_table_consulting_seam_is_silent():
+    found = _repo_codes(dispatch, {
+        "src/repro/core/engine.py": _SEAM_TABLE,
+        "src/repro/core/operators.py": CLEAN_SEAM})
+    assert [f for f in found if f[0] == "DX6"] == [], found
+
+
+def test_dispatch_dx6_exempts_kernel_and_tune_modules():
+    found = _repo_codes(dispatch, {
+        "src/repro/core/engine.py": _SEAM_TABLE,
+        "src/repro/kernels/ops.py": BAD_SEAM,
+        "src/repro/tune/autotune.py": BAD_SEAM})
+    assert [f for f in found if f[0] == "DX6"] == [], found
 
 
 # -- pytree purity (PT) -----------------------------------------------------
